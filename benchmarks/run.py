@@ -1,0 +1,43 @@
+"""Benchmark harness — one function per paper table/figure.
+
+``python -m benchmarks.run`` prints ``name,us_per_call,derived`` CSV (fast
+subset); ``--full`` runs every sweep point; ``--only fig12`` filters.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks.figures import ALL
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, fn in ALL.items():
+        if args.only and args.only not in key:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn(fast=not args.full)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{key},nan,ERROR")
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: batch three mixed-resolution diffusion requests as ONE patch
+batch, denoise a few steps, and verify the outputs match per-request
+(unpatched) execution — the paper's core mechanism in ~40 lines.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patching import merge, split
+from repro.models import diffusion as dm
+from repro.models.sampler import sampler_step
+
+# a small UNet (SDXL-lite family); kind="dit" gives the SD3-lite analogue
+cfg = dm.DiffusionConfig(kind="unet", width=32, levels=2, blocks_per_level=1,
+                         n_heads=2, groups=4, d_text=16, n_text=4,
+                         use_kernels=False)
+params = dm.init_diffusion(cfg, jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(0)
+resolutions = [(16, 16), (24, 24), (32, 32)]          # latent Low/Med/High
+latents = [jnp.asarray(rng.normal(size=(h, w, 4)), jnp.float32)
+           for h, w in resolutions]
+text = jnp.asarray(rng.normal(size=(3, cfg.n_text, cfg.d_text)), jnp.float32)
+steps = jnp.asarray([0, 10, 30])                      # mixed progress (Fig. 1)
+
+# ONE batch for all three resolutions: patch size = GCD = 8
+csp, patches = split(latents, patch=8)
+print(f"CSP: {csp.total} patches of {csp.patch}x{csp.patch}, "
+      f"{csp.n_groups} resolution groups")
+
+out = sampler_step(cfg, params, csp, patches, steps, 50, text)
+batched = merge(csp, out)
+
+# oracle: each request alone
+for i, lat in enumerate(latents):
+    ci, pi = split([lat], patch=8)
+    solo = merge(ci, sampler_step(cfg, params, ci, pi, steps[i:i + 1], 50,
+                                  text[i:i + 1]))[0]
+    err = float(jnp.max(jnp.abs(batched[i] - solo)))
+    print(f"request {i} {lat.shape[:2]}: max |batched - solo| = {err:.2e}")
+    assert err < 1e-4
+print("mixed-resolution patch batching is exact — quickstart OK")

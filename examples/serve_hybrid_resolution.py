@@ -1,0 +1,51 @@
+"""End-to-end driver: serve a hybrid-resolution Poisson workload through the
+full PatchedServe engine (SLO scheduler + latency predictor + patch cache),
+real clock, tiny UNet, and print SLO metrics + save one generated image.
+
+Run: PYTHONPATH=src python examples/serve_hybrid_resolution.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.requests import poisson_workload
+from repro.core.serving import EngineConfig, PatchedServeEngine
+from repro.models import diffusion as dm
+
+STEPS = 6
+RES = [(16, 16), (24, 24), (32, 32)]
+
+cfg = dm.DiffusionConfig(kind="unet", width=32, levels=2, blocks_per_level=1,
+                         n_heads=2, groups=4, d_text=16, n_text=4,
+                         use_kernels=False)
+params = dm.init_diffusion(cfg, jax.random.PRNGKey(0))
+
+engine = PatchedServeEngine(
+    cfg, params,
+    EngineConfig(clock="real", use_cache=True, cache_tau=0.05,
+                 cache_capacity=512),
+    dict.fromkeys(map(tuple, RES), 1.0), RES)
+
+print("calibrating latency model (paper §6.1)...")
+cal = engine.calibrate(total_steps_hint=STEPS)
+print("  standalone latencies:",
+      {k: f"{v:.2f}s" for k, v in engine.sa.items()})
+
+workload = poisson_workload(qps=1.0, duration=4.0, resolutions=RES,
+                            slo_scale=8.0, standalone_latency=engine.sa,
+                            steps=STEPS, seed=0)
+print(f"serving {len(workload)} requests "
+      f"({[r.resolution for r in workload]})")
+t0 = time.time()
+m = engine.run(workload, max_wall=300)
+print(f"completed={m.completed} dropped={m.dropped} "
+      f"SLO satisfaction={m.slo_satisfaction:.2f} "
+      f"goodput={m.goodput:.2f} req/s "
+      f"cache savings={np.mean(m.compute_savings) if m.compute_savings else 0:.1%} "
+      f"wall={time.time() - t0:.0f}s")
+if engine.outputs:
+    rid, img = next(iter(engine.outputs.items()))
+    np.save("/tmp/patchedserve_example_image.npy", img)
+    print(f"request {rid}: decoded image {img.shape} "
+          f"-> /tmp/patchedserve_example_image.npy")

@@ -1,0 +1,2 @@
+from repro.core.csp import CSP, build_csp, gcd_patch_size  # noqa: F401
+from repro.core.patching import merge, merge_by_request, split  # noqa: F401

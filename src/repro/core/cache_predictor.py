@@ -1,0 +1,93 @@
+"""Cache Reuse Predictor (paper §5.1 / §7).
+
+Two interchangeable policies mapping per-patch input-delta features to a
+reuse decision:
+
+- ``ThresholdPredictor``: delta < tau (the mechanism every diffusion-cache
+  paper bottoms out in; tau trades quality vs savings);
+- ``MLPPredictor``: a small learned classifier trained on profiled
+  (input-delta features -> was the output delta < eps?) pairs — our
+  TPU-idiomatic stand-in for the paper's cuML random forest (DESIGN.md §3.3).
+  Features: [log delta, step fraction, block fraction, log input scale].
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ThresholdPredictor:
+    tau: float = 5e-3
+
+    def __call__(self, delta: jax.Array) -> jax.Array:
+        return delta < self.tau
+
+
+def predictor_features(delta: jax.Array, step_frac: float, block_frac: float,
+                       in_scale: jax.Array) -> jax.Array:
+    """(P,) metrics -> (P, 4) features."""
+    return jnp.stack([
+        jnp.log10(delta + 1e-9),
+        jnp.full_like(delta, step_frac),
+        jnp.full_like(delta, block_frac),
+        jnp.log10(in_scale + 1e-9),
+    ], axis=-1)
+
+
+def init_mlp(key: jax.Array, d_in: int = 4, hidden: int = 16):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d_in, hidden)) / np.sqrt(d_in),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, 1)) / np.sqrt(hidden),
+        "b2": jnp.zeros((1,)),
+    }
+
+
+def mlp_logit(params, feats: jax.Array) -> jax.Array:
+    h = jnp.tanh(feats @ params["w1"] + params["b1"])
+    return (h @ params["w2"] + params["b2"])[..., 0]
+
+
+@jax.jit
+def _train_step(params, feats, labels, lr):
+    def loss_fn(p):
+        z = mlp_logit(p, feats)
+        return jnp.mean(jnp.maximum(z, 0) - z * labels
+                        + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    loss, g = jax.value_and_grad(loss_fn)(params)
+    params = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
+    return params, loss
+
+
+def train_mlp(feats: np.ndarray, labels: np.ndarray, epochs: int = 400,
+              lr: float = 0.05, seed: int = 0):
+    """Full-batch logistic training; returns (params, final accuracy)."""
+    params = init_mlp(jax.random.PRNGKey(seed), d_in=feats.shape[-1])
+    f = jnp.asarray(feats, jnp.float32)
+    y = jnp.asarray(labels, jnp.float32)
+    for _ in range(epochs):
+        params, loss = _train_step(params, f, y, lr)
+    acc = float(jnp.mean((mlp_logit(params, f) > 0) == (y > 0.5)))
+    return params, acc
+
+
+@dataclass
+class MLPPredictor:
+    params: dict
+    step_frac: float = 0.0
+    block_frac: float = 0.0
+    in_scale: float = 1.0
+
+    def at(self, step_frac: float, block_frac: float) -> "MLPPredictor":
+        return MLPPredictor(self.params, step_frac, block_frac, self.in_scale)
+
+    def __call__(self, delta: jax.Array) -> jax.Array:
+        feats = predictor_features(delta, self.step_frac, self.block_frac,
+                                   jnp.full_like(delta, self.in_scale))
+        return mlp_logit(self.params, feats) > 0

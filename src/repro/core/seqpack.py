@@ -1,0 +1,127 @@
+"""Compressed Sparse Sequence packing — the CSP idea applied to LM serving
+(DESIGN.md §4): variable-length prompt prefills become one packed token
+batch with request offsets, exactly the CSP layout with 1-D "patches".
+
+- ``pack``: heterogeneous prompts -> (tokens (1, T_pad), segment_ids,
+  positions) with requests sorted by length (the resolution-sort analogue)
+  so same-length groups are contiguous;
+- attention stays request-local via a segment mask (the analogue of
+  resolution-grouped attention: no token attends across requests);
+- ``unpack_logits`` recovers each request's last-token logits for sampling.
+
+This turns N ragged prefills into ONE compiled shape per total-token bucket —
+the same recompile-bounding move the diffusion engine makes for patches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PackedBatch:
+    req_ids: np.ndarray       # (R,) caller ids, length-sorted
+    lengths: np.ndarray       # (R,)
+    offsets: np.ndarray       # (R+1,) CSR offsets into the packed axis
+    total: int                # padded packed length
+    tokens: jax.Array         # (1, total) int32
+    segment_ids: jax.Array    # (1, total) int32; -1 = padding
+    positions: jax.Array      # (1, total) int32 within-request positions
+
+
+def _bucket(n: int, mult: int = 128) -> int:
+    return max(mult, -(-n // mult) * mult)
+
+
+def pack(prompts: Sequence[np.ndarray],
+         req_ids: Sequence[int] | None = None,
+         pad_mult: int = 128) -> PackedBatch:
+    R = len(prompts)
+    if req_ids is None:
+        req_ids = list(range(R))
+    lengths = np.asarray([len(p) for p in prompts], np.int64)
+    order = np.argsort(lengths, kind="stable")
+    lengths = lengths[order]
+    req_ids = np.asarray(req_ids, np.int64)[order]
+    prompts = [np.asarray(prompts[int(i)], np.int32) for i in order]
+
+    offsets = np.zeros(R + 1, np.int64)
+    np.cumsum(lengths, out=offsets[1:])
+    total = _bucket(int(offsets[-1]), pad_mult)
+
+    tokens = np.zeros(total, np.int32)
+    seg = np.full(total, -1, np.int32)
+    pos = np.zeros(total, np.int32)
+    for i, p in enumerate(prompts):
+        s, e = offsets[i], offsets[i + 1]
+        tokens[s:e] = p
+        seg[s:e] = i
+        pos[s:e] = np.arange(len(p))
+    return PackedBatch(req_ids=req_ids, lengths=lengths, offsets=offsets,
+                       total=total,
+                       tokens=jnp.asarray(tokens)[None],
+                       segment_ids=jnp.asarray(seg)[None],
+                       positions=jnp.asarray(pos)[None])
+
+
+def segment_causal_mask(segment_ids: jax.Array) -> jax.Array:
+    """(1, T) -> (1, 1, T, T): causal AND same-request (no cross-request
+    attention — the resolution-group analogue)."""
+    seg = segment_ids[0]
+    T = seg.shape[0]
+    same = (seg[:, None] == seg[None, :]) & (seg[:, None] >= 0)
+    causal = jnp.arange(T)[:, None] >= jnp.arange(T)[None, :]
+    return (same & causal)[None, None]
+
+
+def packed_prefill(cfg, params, batch: PackedBatch):
+    """One forward over the packed batch; returns per-request last-token
+    logits (R, vocab). Uses the dense-mask attention path (packed prefill
+    lengths are bucketed; masks are segment-local)."""
+    from repro.models import lm
+    from repro.models import attention as attn_mod
+    from repro.models.layers import apply_norm, apply_mlp
+
+    x = jnp.take(params["embed"], batch.tokens, axis=0)
+    mask = segment_causal_mask(batch.segment_ids)
+    plan = cfg.layer_plan()
+
+    def period_body(carry, block_p):
+        x, = carry
+        for s, (mixer, ffn) in enumerate(plan):
+            p = block_p[f"slot{s}"]
+            h = apply_norm(cfg, x, p["norm1"])
+            if mixer != "attn":
+                raise NotImplementedError("seqpack targets attention archs")
+            k, v = attn_mod.project_kv(cfg, p["attn"], h, batch.positions)
+            q = jnp.einsum("bsd,de->bse", h, p["attn"]["wq"]).reshape(
+                1, batch.total, cfg.n_heads, cfg.resolved_head_dim)
+            if "bq" in p["attn"]:
+                q = q + p["attn"]["bq"].reshape(1, 1, cfg.n_heads, -1)
+            if cfg.rope:
+                q = attn_mod.apply_rope(q, batch.positions, cfg.rope_theta)
+            out = attn_mod._sdpa(q, k, v, mask,
+                                 scale=cfg.resolved_head_dim ** -0.5)
+            out = out.reshape(1, batch.total, -1)
+            out = jnp.einsum("bse,ed->bsd", out, p["attn"]["wo"])
+            if "bo" in p["attn"]:
+                out = out + p["attn"]["bo"]
+            x = x + out
+            h = apply_norm(cfg, x, p["norm2"])
+            x = x + apply_mlp(cfg, p["ffn"], h)
+        return (x,), None
+
+    (x,), _ = jax.lax.scan(period_body, (x,), params["blocks"])
+    x = apply_norm(cfg, x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    last = jnp.asarray(batch.offsets[1:] - 1, jnp.int32)
+    return jnp.einsum("rd,dv->rv", x[0, last], head)
+
+
+def unpack_by_request(batch: PackedBatch, per_request: jax.Array) -> dict:
+    """{original req_id: row} for (R, ...) outputs."""
+    return {int(rid): per_request[i] for i, rid in enumerate(batch.req_ids)}

@@ -1,0 +1,391 @@
+"""PatchedServe engine — request lifecycle, 3 stages, patch batching, cache,
+SLO scheduling (paper Fig. 2).
+
+Two clocks:
+- ``real``: actually executes the JAX diffusion model per step (tiny models,
+  CPU) and measures wall time — used by examples/tests;
+- ``sim``: virtual clock driven by a calibrated latency surrogate — used by
+  the QPS-sweep benchmarks (the paper's Fig. 12-15 analogues), since an H100
+  isn't available to replay the paper's absolute timings.
+
+Per engine iteration (continuous batching at step granularity, no
+preemption):
+  1. move arrivals into the wait queue; run Algorithm 1 to admit;
+  2. Preparation for newly admitted (noise init + prompt-embedding stub);
+  3. build the CSP batch from every active request's current latent
+     (patch = GCD of active resolutions), run ONE denoising step for all —
+     requests at different step indices batch together (Fig. 1);
+  4. patch-level cache reuse around every block (optional);
+  5. finished requests -> Postprocessing (VAE decode stub), record SLO;
+  6. straggler mitigation: if a step ran > straggler_factor x predicted,
+     re-estimate active requests and drop newly-hopeless ones.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_mod
+from repro.core.cache_predictor import ThresholdPredictor
+from repro.core.csp import gcd_patch_size
+from repro.core.latency_model import analytic_step_latency, make_features
+from repro.core.patching import merge_by_request, split
+from repro.core.requests import Request
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.models import diffusion as dm
+from repro.models import sampler as sampler_mod
+from repro.models import vae as vae_mod
+
+
+@dataclass
+class EngineConfig:
+    clock: str = "real"                 # real | sim
+    use_cache: bool = False
+    cache_tau: float = 5e-3
+    cache_capacity: int = 8192
+    patch_cap: int = 0                  # 0 = pure GCD (paper default)
+    straggler_factor: float = 3.0
+    # Composition bucketing (DESIGN.md §3.4): per-resolution request counts
+    # are padded up to this ladder with dummy requests so XLA compiles a
+    # small bounded program set. The padding overhead is charged honestly to
+    # the latency predictor (a request that fits the current bucket is free).
+    bucket_ladder: Tuple[int, ...] = (0, 1, 2, 4, 6, 8, 12)
+    scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+    seed: int = 0
+
+
+@dataclass
+class Metrics:
+    completed: int = 0
+    dropped: int = 0
+    slo_met: int = 0
+    latencies: List[float] = field(default_factory=list)
+    step_latencies: List[float] = field(default_factory=list)
+    compute_savings: List[float] = field(default_factory=list)
+    span: float = 0.0
+
+    @property
+    def slo_satisfaction(self) -> float:
+        total = self.completed + self.dropped
+        return self.slo_met / total if total else 1.0
+
+    @property
+    def goodput(self) -> float:
+        return self.slo_met / self.span if self.span else 0.0
+
+
+class PatchedServeEngine:
+    def __init__(self, model_cfg: dm.DiffusionConfig, params,
+                 engine_cfg: EngineConfig,
+                 standalone_latency: Dict[Tuple[int, int], float],
+                 resolutions: Sequence[Tuple[int, int]]):
+        self.mcfg = model_cfg
+        self.params = params
+        self.cfg = engine_cfg
+        self.resolutions = [tuple(r) for r in resolutions]
+        self.sa = standalone_latency
+        base_patch = gcd_patch_size(self.resolutions, cap=engine_cfg.patch_cap)
+        self.patch = base_patch
+        self.patches_per_res = [
+            (h // base_patch) * (w // base_patch) for h, w in self.resolutions]
+        self.scheduler = Scheduler(engine_cfg.scheduler, base_patch,
+                                   standalone_latency,
+                                   self._predict_step_latency)
+        self.vae = vae_mod.init_vae(jax.random.PRNGKey(7),
+                                    model_cfg.latent_channels)
+        self.rng = np.random.default_rng(engine_cfg.seed)
+        self.caches: Dict[str, cache_mod.PatchCache] = {}
+        self.predictor = ThresholdPredictor(engine_cfg.cache_tau)
+        self._uid_base: Dict[int, int] = {}   # rid -> uid namespace
+        self.outputs: Dict[int, np.ndarray] = {}
+
+    # ---------------- latency prediction ----------------
+
+    def _counts(self, reqs: List[Request]) -> List[int]:
+        return [sum(1 for r in reqs if r.resolution == res)
+                for res in self.resolutions]
+
+    def _bucket(self, n: int) -> int:
+        for b in self.cfg.bucket_ladder:
+            if n <= b:
+                return b
+        return n
+
+    def _predict_step_latency(self, reqs: List[Request]) -> float:
+        if not reqs:
+            return 0.0
+        # predict for the *bucketed* composition — what actually executes
+        counts = [self._bucket(c) for c in self._counts(reqs)]
+        if getattr(self, "latency_model", None) is not None:
+            return max(self.latency_model.predict(
+                make_features(counts, self.patches_per_res)), 1e-5)
+        return analytic_step_latency(counts, self.patches_per_res)
+
+    # ---------------- calibration (paper §6.1 Throughput Analyzer) ----------
+
+    def calibrate(self, steps_per_probe: int = 2,
+                  combos: Optional[List[List[int]]] = None,
+                  total_steps_hint: int = 50) -> Dict:
+        """Measure real step latencies for probe compositions, fit a linear
+        latency model (lat ~ a + b*patches + c*distinct + per-res terms), warm
+        the JIT cache, and set standalone latencies. Returns the fit info."""
+        if combos is None:
+            eye = [[1 if i == j else 0 for j in range(len(self.resolutions))]
+                   for i in range(len(self.resolutions))]
+            combos = eye + [[1] * len(self.resolutions)] \
+                + [[2 if i == j else 0 for j in range(len(self.resolutions))]
+                   for i in range(len(self.resolutions))]
+        feats, lats = [], []
+        for counts in combos:
+            reqs = []
+            rid = 10_000_000
+            for res, c in zip(self.resolutions, counts):
+                for _ in range(c):
+                    r = Request(rid=rid, resolution=res, arrival=0.0,
+                                slo=1e9, total_steps=steps_per_probe)
+                    self._prepare(r)
+                    reqs.append(r)
+                    rid += 1
+            if not reqs:
+                continue
+            lat = None
+            for s in range(steps_per_probe):
+                t0 = time.perf_counter()
+                self._denoise_step(reqs)
+                lat = time.perf_counter() - t0   # keep last (warm) step
+            feats.append(np.concatenate([
+                np.asarray(counts, np.float64),
+                [float(np.sum(np.asarray(counts) > 0)),
+                 float(np.sum(np.asarray(counts) * self.patches_per_res))]]))
+            lats.append(lat)
+        X = np.stack(feats)
+        X1 = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        y = np.asarray(lats)
+        coef, *_ = np.linalg.lstsq(X1, y, rcond=None)
+        self._lin_coef = coef
+
+        class _Lin:
+            def __init__(self, coef):
+                self.coef = coef
+
+            def predict(self, f):
+                f1 = np.concatenate([np.asarray(f, np.float64), [1.0]])
+                return float(np.maximum(f1 @ self.coef, 1e-5))
+
+        self.latency_model = _Lin(coef)
+        # standalone FULL-request latency per resolution (slack normalizer)
+        for i, res in enumerate(self.resolutions):
+            f = make_features([1 if j == i else 0
+                               for j in range(len(self.resolutions))],
+                              self.patches_per_res)
+            self.sa[res] = self.latency_model.predict(f) * total_steps_hint
+        return {"coef": coef, "probe_latencies": lats}
+
+    # ---------------- stages ----------------
+
+    def _prepare(self, req: Request) -> None:
+        h, w = req.resolution
+        req.latent = jnp.asarray(
+            self.rng.normal(size=(h, w, self.mcfg.latent_channels)),
+            jnp.float32)
+        req.text = vae_mod.encode_prompt(req.prompt, self.mcfg.n_text,
+                                         self.mcfg.d_text)
+        self._uid_base[req.rid] = req.rid * (1 << 20)
+
+    def _postprocess(self, req: Request) -> None:
+        img = vae_mod.vae_decode(self.vae, req.latent[None])[0]
+        self.outputs[req.rid] = np.asarray(img)
+
+    # ---------------- cache plumbing ----------------
+
+    def _block_hook(self, csp, step_frac):
+        """Patch-level cache reuse (paper Fig. 10) wired around each block."""
+        # uid = request namespace + patch grid position: stable across engine
+        # iterations regardless of batch composition
+        uids_per_patch = np.array(
+            [self._uid_base[int(csp.req_ids[csp.patch_req[j]])]
+             + int(csp.patch_rc[j, 0]) * 4096 + int(csp.patch_rc[j, 1])
+             for j in range(csp.total)], np.int64)
+        savings = []
+
+        def hook(name, kind, fn, x):
+            key = f"{name}:{tuple(x.shape[1:])}"
+            c = self.caches.get(key)
+            if c is None:
+                c = cache_mod.PatchCache(self.cfg.cache_capacity)
+                self.caches[key] = c
+            sync = c.sync(uids_per_patch.tolist())
+            mask = np.asarray(c.reuse_mask(x, sync, self.predictor))
+            if mask.all():
+                y = c.cached_outputs(sync)
+            else:
+                if mask.any():
+                    # context blocks: fill masked inputs with the cached
+                    # inputs from the previous step (paper §5.1), run dense,
+                    # then restore cached outputs for masked patches.
+                    x_in = jnp.where(
+                        jnp.asarray(mask).reshape((-1,) + (1,) * (x.ndim - 1)),
+                        c.cached_inputs(sync).astype(x.dtype), x)
+                else:
+                    x_in = x
+                y_full = fn(x_in)
+                if mask.any():
+                    y = jnp.where(
+                        jnp.asarray(mask).reshape(
+                            (-1,) + (1,) * (y_full.ndim - 1)),
+                        c.cached_outputs(sync).astype(y_full.dtype), y_full)
+                else:
+                    y = y_full
+            c.update(sync, x, y, jnp.asarray(~mask))
+            savings.append(float(mask.mean()))
+            return y
+
+        return hook, savings
+
+    # ---------------- main loop ----------------
+
+    def run(self, workload: List[Request], max_wall: float = 1e9) -> Metrics:
+        pending = sorted(workload, key=lambda r: r.arrival)
+        wait: List[Request] = []
+        active: List[Request] = []
+        m = Metrics()
+        now = 0.0
+        t_start = time.perf_counter()
+
+        def clock() -> float:
+            return (time.perf_counter() - t_start
+                    if self.cfg.clock == "real" else now)
+
+        while pending or wait or active:
+            t = clock()
+            if self.cfg.clock == "sim" and not active and not wait and pending:
+                now = max(now, pending[0].arrival)
+                t = now
+            while pending and pending[0].arrival <= t:
+                wait.append(pending.pop(0))
+            if not active and not wait:
+                if self.cfg.clock == "real":
+                    if pending:
+                        time.sleep(max(pending[0].arrival - t, 0))
+                    continue
+                continue
+
+            admitted, dropped = self.scheduler.schedule(wait, active, t)
+            for r in dropped:
+                wait.remove(r)
+                r.state = "dropped"
+                m.dropped += 1
+            for r in admitted:
+                wait.remove(r)
+                r.state = "active"
+                self._prepare(r)
+                active.append(r)
+            if not active:
+                if self.cfg.clock == "sim" and pending:
+                    now = pending[0].arrival
+                continue
+
+            # one denoising step for the whole mixed-resolution batch
+            step_pred = self._predict_step_latency(active)
+            comp = tuple(self._bucket(c) for c in self._counts(active))
+            seen = getattr(self, "_seen_shapes", None)
+            if seen is None:
+                seen = self._seen_shapes = set()
+            is_cold = comp not in seen
+            seen.add(comp)
+            t0 = time.perf_counter()
+            savings = self._denoise_step(active)
+            step_real = time.perf_counter() - t0
+            if savings:
+                m.compute_savings.append(float(np.mean(savings)))
+
+            dt = step_real if self.cfg.clock == "real" else step_pred
+            if self.cfg.clock == "sim":
+                now += dt
+            m.step_latencies.append(dt)
+
+            # straggler mitigation: a step far over prediction triggers
+            # re-estimation; newly hopeless actives are dropped at once.
+            # Cold (first-compile) compositions are exempt.
+            if (self.cfg.clock == "real" and not is_cold
+                    and step_real > self.cfg.straggler_factor * max(step_pred, 1e-9)):
+                t = clock()
+                for r in list(active):
+                    if t + step_real * r.remaining_steps > r.slo:
+                        active.remove(r)
+                        r.state = "dropped"
+                        m.dropped += 1
+
+            # completions
+            t = clock()
+            for r in list(active):
+                if r.steps_done >= r.total_steps:
+                    active.remove(r)
+                    self._postprocess(r)
+                    r.state = "done"
+                    r.finish = t
+                    m.completed += 1
+                    m.latencies.append(t - r.arrival)
+                    if t <= r.slo:
+                        m.slo_met += 1
+            if time.perf_counter() - t_start > max_wall:
+                break
+        m.span = clock()
+        return m
+
+    DUMMY_BASE = 1 << 40
+
+    def _dummy(self, res: Tuple[int, int], slot: int) -> Request:
+        key = (res, slot)
+        pool = getattr(self, "_dummy_pool", None)
+        if pool is None:
+            pool = self._dummy_pool = {}
+        r = pool.get(key)
+        if r is None:
+            h, w = res
+            r = Request(rid=self.DUMMY_BASE + hash(key) % (1 << 30),
+                        resolution=res, arrival=0.0, slo=1e18, total_steps=1)
+            r.latent = jnp.zeros((h, w, self.mcfg.latent_channels), jnp.float32)
+            r.text = jnp.zeros((self.mcfg.n_text, self.mcfg.d_text), jnp.float32)
+            self._uid_base[r.rid] = r.rid * (1 << 20) % (1 << 62)
+            pool[key] = r
+        return r
+
+    def _denoise_step(self, active: List[Request]) -> List[float]:
+        # bucket-pad per resolution so XLA sees a bounded shape lattice
+        padded = list(active)
+        for res, c in zip(self.resolutions, self._counts(active)):
+            for j in range(self._bucket(c) - c):
+                padded.append(self._dummy(tuple(res), j))
+        csp, patches = split([r.latent for r in padded],
+                             patch=self.patch,
+                             req_ids=[r.rid for r in padded])
+        by_rid = {r.rid: r for r in padded}
+        step_req = jnp.asarray([by_rid[int(rid)].steps_done
+                                for rid in csp.req_ids], jnp.int32)
+        text = jnp.stack([by_rid[int(rid)].text for rid in csp.req_ids])
+        total_steps = active[0].total_steps
+
+        savings: List[float] = []
+        hook = None
+        if self.cfg.use_cache and self.cfg.clock == "real":
+            frac = float(np.mean([r.steps_done for r in active])) / total_steps
+            hook, savings = self._block_hook(csp, frac)
+
+        if self.cfg.clock == "sim":
+            # virtual clock: skip device math, only cache bookkeeping savings
+            new_patches = patches
+        else:
+            new_patches = sampler_mod.sampler_step(
+                self.mcfg, self.params, csp, patches, step_req, total_steps,
+                text, block_hook=hook)
+        outs = merge_by_request(csp, new_patches)
+        for r in active:                # dummies' outputs are discarded
+            r.latent = outs[r.rid]
+            r.steps_done += 1
+        return savings

@@ -1,0 +1,77 @@
+"""Patch Edge Stitcher — halo exchange for cross-patch operators (paper §4.3).
+
+Pure-JAX reference implementation. The fused Pallas kernel
+(``repro.kernels.groupnorm_stitch``) overlaps this halo movement with the
+GroupNorm arithmetic the way the paper's TB trick overlaps it with
+normalization; this module is its oracle and the fallback path.
+
+Layout: patches (P, p, p, C) NHWC; neighbors (P, 8) with slot order
+N, S, W, E, NW, NE, SW, SE (-1 = absent -> zero padding, paper §4.2:
+"pad with 0 when a neighbor is absent").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gather_halo(patches: jax.Array, neighbors: np.ndarray,
+                halo: int = 1) -> jax.Array:
+    """(P, p, p, C) -> (P, p+2h, p+2h, C) with edges pulled from neighbors.
+
+    A single batched gather per direction: take(neighbor_idx) then slice the
+    facing edge strip. Absent neighbors (-1) contribute zeros.
+    """
+    P, p, _, C = patches.shape
+    h = halo
+    nb = jnp.asarray(neighbors, jnp.int32)
+    safe = jnp.maximum(nb, 0)
+    present = (nb >= 0).astype(patches.dtype)[:, :, None, None, None]
+
+    def take(slot):
+        return patches[safe[:, slot]] * present[:, slot]
+
+    north = take(0)[:, p - h:, :, :]         # bottom strip of N neighbor
+    south = take(1)[:, :h, :, :]
+    west = take(2)[:, :, p - h:, :]
+    east = take(3)[:, :, :h, :]
+    nw = take(4)[:, p - h:, p - h:, :]
+    ne = take(5)[:, p - h:, :h, :]
+    sw = take(6)[:, :h, p - h:, :]
+    se = take(7)[:, :h, :h, :]
+
+    top = jnp.concatenate([nw, north, ne], axis=2)      # (P, h, p+2h, C)
+    bot = jnp.concatenate([sw, south, se], axis=2)
+    mid = jnp.concatenate([west, patches, east], axis=2)  # (P, p, p+2h, C)
+    return jnp.concatenate([top, mid, bot], axis=1)
+
+
+def naive_stitch(patches: jax.Array, neighbors: np.ndarray,
+                 halo: int = 1) -> jax.Array:
+    """The paper's 'naive stitching' baseline (Fig. 7): materialize each
+    boundary strip per patch per direction with separate gathers+concats —
+    8 gathers of full patches + copies. Same output as gather_halo; kept to
+    measure stitch overhead in the Fig. 7 benchmark."""
+    P, p, _, C = patches.shape
+    h = halo
+    out = jnp.zeros((P, p + 2 * h, p + 2 * h, C), patches.dtype)
+    out = out.at[:, h:h + p, h:h + p, :].set(patches)
+    nb = np.asarray(neighbors)
+    # per-direction python loop with boolean masks: deliberately unfused
+    regions = {
+        0: (slice(0, h), slice(h, h + p), lambda q: q[:, p - h:, :, :]),
+        1: (slice(h + p, h + p + h), slice(h, h + p), lambda q: q[:, :h, :, :]),
+        2: (slice(h, h + p), slice(0, h), lambda q: q[:, :, p - h:, :]),
+        3: (slice(h, h + p), slice(h + p, None), lambda q: q[:, :, :h, :]),
+        4: (slice(0, h), slice(0, h), lambda q: q[:, p - h:, p - h:, :]),
+        5: (slice(0, h), slice(h + p, None), lambda q: q[:, p - h:, :h, :]),
+        6: (slice(h + p, None), slice(0, h), lambda q: q[:, :h, p - h:, :]),
+        7: (slice(h + p, None), slice(h + p, None), lambda q: q[:, :h, :h, :]),
+    }
+    for slot, (rs, cs, crop) in regions.items():
+        idx = nb[:, slot]
+        src = jnp.where((idx >= 0)[:, None, None, None],
+                        crop(patches[jnp.maximum(idx, 0)]), 0)
+        out = out.at[:, rs, cs, :].set(src)
+    return out

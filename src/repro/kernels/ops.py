@@ -1,0 +1,55 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` auto-selects: True off-TPU (validation mode, executes the kernel
+body with the Pallas interpreter), False on TPU (Mosaic compilation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.groupnorm_stitch import groupnorm_stitch
+from repro.kernels.patch_attention import patch_attention
+
+
+@functools.lru_cache()
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_groupnorm_stitch(csp, patches: jax.Array, scale: jax.Array,
+                           bias: jax.Array, groups: int, eps: float = 1e-5,
+                           exact: bool = True, halo: int = 1) -> jax.Array:
+    """CSP-aware fused GroupNorm + edge stitch.
+
+    Phase 1 (cheap segment reduction): exact per-request stats; Phase 2 (the
+    Pallas kernel): normalize + halo in one pass. With exact=False the stats
+    are per-patch (the paper's approximation).
+    """
+    from repro.core.patched_ops import csp_group_stats
+    P, p, _, C = patches.shape
+    G = groups
+    if exact:
+        mean, var = csp_group_stats(csp, patches, groups)          # (R, G)
+        seg = jnp.asarray(csp.patch_req, jnp.int32)
+        mean_p, var_p = mean[seg], var[seg]                        # (P, G)
+    else:
+        x = patches.astype(jnp.float32).reshape(P, p * p, G, C // G)
+        mean_p = jnp.mean(x, axis=(1, 3))
+        var_p = jnp.mean(jnp.square(x - mean_p[:, None, :, None]), axis=(1, 3))
+    rstd_p = jax.lax.rsqrt(var_p + eps)
+    mean_c = jnp.repeat(mean_p, C // G, axis=-1)                   # (P, C)
+    rstd_c = jnp.repeat(rstd_p, C // G, axis=-1)
+    return groupnorm_stitch(patches, jnp.asarray(csp.neighbors, jnp.int32),
+                            mean_c, rstd_c, scale, bias, halo=halo,
+                            interpret=not _on_tpu())
+
+
+def grouped_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                             block_q: int = 128, block_k: int = 128
+                             ) -> jax.Array:
+    return patch_attention(q, k, v, block_q=block_q, block_k=block_k,
+                           interpret=not _on_tpu())

@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This is dry-run-only; tests and benches see the real single CPU device.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, shape_applicable   # noqa: E402
+from repro.launch import context as ctx                      # noqa: E402
+from repro.launch import steps                               # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b")
+
+# ICI traffic factor per output byte (ring algorithms, n large):
+_TRAFFIC_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                   "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device ICI bytes by collective kind from compiled HLO text."""
+    by_kind = {}
+    count = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes = n * _DTYPE_BYTES[dt] * _TRAFFIC_FACTOR[kind]
+        by_kind[kind] = by_kind.get(kind, 0.0) + nbytes
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": by_kind, "count_by_kind": count,
+            "total_bytes": sum(by_kind.values())}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             config_override=None) -> dict:
+    cfg = config_override or ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    if not ok:
+        return {"cell": tag, "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh, ctx.use_mesh(mesh):
+        fn, args, _ = steps.build_cell(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {k: int(getattr(mem, k)) for k in
+                     ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+                     if hasattr(mem, k)}
+        except Exception as e:  # backend-dependent
+            mem_d = {"error": str(e)}
+        try:
+            cost = dict(compiled.cost_analysis())
+            cost = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float))}
+        except Exception as e:
+            cost = {"error": str(e)}
+        coll = parse_collectives(compiled.as_text())
+
+    rec = {
+        "cell": tag, "status": "ok",
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "devices": int(len(jax.devices())) if multi_pod else 256,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": mem_d, "cost": cost, "collectives": coll,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/dryrun_results")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_cell(arch, shape, mp, out_dir)
+                except Exception:
+                    failures += 1
+                    tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                    print(f"FAIL {tag}")
+                    traceback.print_exc()
+                    continue
+                if rec["status"] == "skipped":
+                    print(f"SKIP {rec['cell']}: {rec['reason']}")
+                else:
+                    c = rec["cost"].get("flops", float("nan"))
+                    print(f"OK   {rec['cell']} compile={rec['compile_s']}s "
+                          f"flops/dev={c:.3e} "
+                          f"coll_bytes/dev={rec['collectives']['total_bytes']:.3e}")
+    print(f"\ndry-run complete, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS *before* first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1, data: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, max(n // model, 1))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel mesh axes (includes 'pod' when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,285 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# Roofline needs the same 512-virtual-device mesh as the dry-run.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+from pathlib import Path  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, shape_applicable  # noqa: E402
+from repro.launch import context as ctx                    # noqa: E402
+from repro.launch import steps as steps_mod                # noqa: E402
+from repro.launch.dryrun import parse_collectives          # noqa: E402
+from repro.launch.mesh import dp_axes, make_production_mesh  # noqa: E402
+from repro.models import lm                                # noqa: E402
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+"""Roofline terms from the compiled dry-run.
+
+XLA:CPU ``cost_analysis`` counts each ``while`` body ONCE (verified
+empirically), so scanned-layer costs must be re-inflated:
+
+    total = raw_full + (trips - 1) * per_trip
+
+with ``per_trip`` measured by compiling the one-period body *standalone*
+under the same mesh/shardings:
+  - prefill/decode: per_trip = F               (fwd body)
+  - train w/ remat: per_trip = F + FB          (fwd-scan body F; bwd-scan
+    body re-runs fwd then backprops = FB)      [all full configs remat]
+  - whisper adds the encoder loop: + (enc_trips-1) * F_enc (or FB_enc).
+The same correction applies to 'bytes accessed' and to collective bytes
+parsed from the body HLO. This is exact for flops (linear in trip count) and
+a close approximation for bytes/collectives (fusion boundaries may differ
+slightly between in-loop and standalone bodies).
+"""
+
+
+def _block_slice(tree):
+    return jax.tree_util.tree_map(lambda a: a[0], tree)
+
+
+def _body_cost(cfg, shape, mesh, mode: str, with_bwd: bool) -> Dict[str, float]:
+    """Compile one period of layers standalone; per-device flops/bytes/coll."""
+    params_abs, specs = steps_mod.abstract_params(cfg)
+    from repro.launch import sharding as shd
+    pshard_full = shd.param_shardings(cfg, mesh, params_abs, specs)
+    blocks_abs = jax.eval_shape(_block_slice, params_abs["blocks"])
+    bshard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, P(*s.spec[1:])),
+        pshard_full["blocks"],
+        is_leaf=lambda x: isinstance(x, NamedSharding))
+
+    B = shape.global_batch
+    S = shape.seq_len if mode != "decode" else 1
+    dp = dp_axes(mesh)
+    if cfg.tp_mode == "dp" and "model" in mesh.axis_names:
+        dp = dp + ("model",)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    if B % dp_total != 0 and len(dp) > 1 \
+            and B % int(np.prod([mesh.shape[a] for a in dp[:-1]])) == 0:
+        dp = dp[:-1]
+        dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    xspec = P(dp if B % dp_total == 0 else None, None, None)
+    x_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    xshard = NamedSharding(mesh, xspec)
+    plan = cfg.layer_plan()
+
+    if mode == "decode":
+        cache_abs = jax.eval_shape(
+            lambda: lm.init_cache(cfg, B, SHAPES[shape.name].seq_len))
+        cache_blocks = jax.eval_shape(_block_slice, cache_abs["blocks"])
+        cshard_full = shd.cache_shardings(
+            cfg, mesh, cache_abs, B, seq_shard=B < dp_total)
+        cshard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, P(*s.spec[1:])),
+            cshard_full["blocks"],
+            is_leaf=lambda x: isinstance(x, NamedSharding))
+
+        def body(bp, x, cache):
+            cur = jnp.asarray(SHAPES[shape.name].seq_len - 1, jnp.int32)
+            for s, sp in enumerate(plan):
+                x, _, _ = lm._apply_slot(cfg, sp, bp[f"slot{s}"], x, None,
+                                         "decode", cache[f"slot{s}"], cur)
+            return x
+
+        fn = jax.jit(body, in_shardings=(bshard, xshard, cshard),
+                     out_shardings=xshard)
+        compiled = fn.lower(blocks_abs, x_abs, cache_blocks).compile()
+    else:
+        positions_abs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+        def fwd(bp, x, positions):
+            for s, sp in enumerate(plan):
+                x, _, _ = lm._apply_slot(cfg, sp, bp[f"slot{s}"], x,
+                                         positions, "train", None, None)
+            return x
+
+        if with_bwd:
+            def body(bp, x, positions):
+                y, vjp = jax.vjp(lambda b, xx: fwd(b, xx, positions), bp, x)
+                return vjp(jnp.ones_like(y))
+
+            outsh = (bshard, xshard)
+        else:
+            body = fwd
+            outsh = xshard
+        fn = jax.jit(body, in_shardings=(bshard, xshard,
+                                         NamedSharding(mesh, P(*xspec[:2]))),
+                     out_shardings=outsh)
+        compiled = fn.lower(blocks_abs, x_abs, positions_abs).compile()
+
+    cost = dict(compiled.cost_analysis())
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll["total_bytes"])}
+
+
+def _enc_body_cost(cfg, shape, mesh, with_bwd: bool) -> Dict[str, float]:
+    params_abs, specs = steps_mod.abstract_params(cfg)
+    from repro.launch import sharding as shd
+    pshard_full = shd.param_shardings(cfg, mesh, params_abs, specs)
+    enc_abs = jax.eval_shape(_block_slice, params_abs["encoder"]["layers"])
+    eshard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, P(*s.spec[1:])),
+        pshard_full["encoder"]["layers"],
+        is_leaf=lambda x: isinstance(x, NamedSharding))
+    B = shape.global_batch
+    S = cfg.enc_seq
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    xspec = P(dp if B % dp_total == 0 else None, None, None)
+    x_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    from repro.models import attention as attn_mod
+    from repro.models.layers import apply_mlp, apply_norm
+
+    def fwd(lp, x):
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h = apply_norm(cfg, x, lp["norm1"])
+        x = x + attn_mod.attend(cfg, lp["attn"], h, positions, kind="full")
+        h = apply_norm(cfg, x, lp["norm2"])
+        return x + apply_mlp(cfg, lp["ffn"], h)
+
+    if with_bwd:
+        def body(lp, x):
+            y, vjp = jax.vjp(fwd, lp, x)
+            return vjp(jnp.ones_like(y))
+    else:
+        body = fwd
+    fn = jax.jit(body, in_shardings=(eshard, NamedSharding(mesh, xspec)))
+    compiled = fn.lower(enc_abs, x_abs).compile()
+    cost = dict(compiled.cost_analysis())
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll["total_bytes"])}
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D train / 2·N_active·D_step decode, N_active for MoE."""
+    params_abs, _ = steps_mod.abstract_params(cfg)
+
+    def leaves_under(tree, pred, path=()):
+        total = 0
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                total += leaves_under(v, pred, path + (k,))
+            return total
+        return int(np.prod(tree.shape)) if pred(path, tree) else 0
+
+    total = leaves_under(params_abs, lambda p, l: True)
+    embed = leaves_under(params_abs,
+                         lambda p, l: p[-1] in ("embed", "lm_head", "pos_embed"))
+    expert = leaves_under(
+        params_abs,
+        lambda p, l: "ffn" in p and l.ndim == 4
+        and p[-1] in ("w_gate", "w_up", "w_down"))
+    n_eff = total - embed - expert
+    if cfg.n_experts:
+        n_eff += expert * cfg.moe_top_k / cfg.n_experts
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else (shape.seq_len if shape.kind == "prefill"
+                                         else 1))
+    if shape.kind == "train":
+        return 6.0 * n_eff * tokens
+    return 2.0 * n_eff * tokens
+
+
+def analyze_cell(arch: str, shape_name: str, results_dir: Path,
+                 config_override=None) -> Optional[Dict]:
+    cfg = config_override or ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, _ = shape_applicable(cfg, shape)
+    if not ok:
+        return None
+    rec_path = results_dir / f"{arch}__{shape_name}__single.json"
+    rec = json.loads(rec_path.read_text())
+    raw_flops = rec["cost"].get("flops", 0.0)
+    raw_bytes = rec["cost"].get("bytes accessed", 0.0)
+    raw_coll = rec["collectives"]["total_bytes"]
+
+    mesh = make_production_mesh(multi_pod=False)
+    with mesh, ctx.use_mesh(mesh):
+        mode = shape.kind if shape.kind != "prefill" else "train"
+        if shape.kind == "train":
+            F = _body_cost(cfg, shape, mesh, "train", with_bwd=False)
+            FB = _body_cost(cfg, shape, mesh, "train", with_bwd=True)
+            per_trip = {k: F[k] + FB[k] for k in F}
+        elif shape.kind == "prefill":
+            per_trip = _body_cost(cfg, shape, mesh, "train", with_bwd=False)
+        else:
+            per_trip = _body_cost(cfg, shape, mesh, "decode", with_bwd=False)
+        trips = cfg.n_periods
+        tot = {k: raw if k == "_" else 0 for k, raw in [("_", 0)]}
+        total = {
+            "flops": raw_flops + (trips - 1) * per_trip["flops"],
+            "bytes": raw_bytes + (trips - 1) * per_trip["bytes"],
+            "coll": raw_coll + (trips - 1) * per_trip["coll"],
+        }
+        if cfg.enc_layers:
+            ef = _enc_body_cost(cfg, shape, mesh,
+                                with_bwd=(shape.kind == "train"))
+            for k in total:
+                key = {"flops": "flops", "bytes": "bytes", "coll": "coll"}[k]
+                total[k] += (cfg.enc_layers - 1) * ef[key]
+
+    n_dev = 256
+    compute_s = total["flops"] / PEAK_FLOPS
+    memory_s = total["bytes"] / HBM_BW
+    coll_s = total["coll"] / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / max(total["flops"] * n_dev, 1.0)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": "single",
+        "per_device": total, "raw_flops": raw_flops,
+        "terms_s": terms, "dominant": dominant,
+        "model_flops": mf, "useful_flops_ratio": useful,
+        "roofline_frac": compute_s / max(compute_s, memory_s, coll_s),
+        "step_s_bound": max(terms.values()),
+        "memory_bytes": rec.get("memory", {}),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--results", default="benchmarks/dryrun_results")
+    ap.add_argument("--out", default="benchmarks/roofline_results.json")
+    args = ap.parse_args()
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    rows = []
+    for a in archs:
+        for s in shapes:
+            try:
+                r = analyze_cell(a, s, Path(args.results))
+            except Exception as e:
+                print(f"FAIL {a} {s}: {e}")
+                continue
+            if r is None:
+                continue
+            rows.append(r)
+            t = r["terms_s"]
+            print(f"{a:18s} {s:12s} comp={t['compute_s']:.4f}s "
+                  f"mem={t['memory_s']:.4f}s coll={t['collective_s']:.4f}s "
+                  f"dom={r['dominant']:12s} useful={r['useful_flops_ratio']:.2f}")
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+    print(f"wrote {args.out} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Logical-axis -> mesh-axis mapping.
+
+Every parameter records logical axis names per dim (``ParamBuilder``); this
+module turns those into ``NamedSharding``s for a given mesh and config:
+
+- TP over "model": heads / flattened kv / ff / vocab / experts / d_inner
+- FSDP (cfg.fsdp): "embed" additionally sharded over "data" (ZeRO-3 style;
+  pods hold replicas -> hierarchical DP all-reduce across the pod axis)
+- EP: "experts" claims "model" when the expert count divides the axis,
+  otherwise expert-internal "ff" claims it (mixtral: 8 experts < 16 chips)
+- Any assignment whose dim is not divisible by the mesh-axis extent is
+  dropped (conservative fallback to replication).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+def _rules(cfg, mesh: Mesh) -> Dict[str, Optional[str]]:
+    model_ax = "model" if "model" in mesh.axis_names else None
+    if cfg.tp_mode == "dp":
+        # "model" axis carries batch instead; params replicate across it
+        # (FSDP over "data" keeps them memory-feasible) — §Perf iteration 3.
+        model_ax = None
+    expert_2d = (
+        cfg.n_experts and model_ax and "data" in mesh.axis_names
+        and cfg.n_experts % (mesh.shape["model"] * mesh.shape["data"]) == 0
+    )
+    expert_on_model = (
+        cfg.n_experts and model_ax
+        and cfg.n_experts % mesh.shape["model"] == 0
+    )
+    if expert_2d:
+        expert_ax = ("data", "model")   # 2D EP: weights fully resident
+    elif expert_on_model:
+        expert_ax = model_ax
+    else:
+        expert_ax = None
+    return {
+        "vocab": model_ax,
+        "heads_x_dim": model_ax,
+        "kv_x_dim": model_ax,
+        "ff": None if expert_on_model else model_ax,
+        "experts": expert_ax,
+        "d_inner": model_ax,
+        "embed": "data" if (cfg.fsdp and "data" in mesh.axis_names) else None,
+        "layers": None,
+        None: None,
+    }
+
+
+def spec_for(cfg, mesh: Mesh, shape: Tuple[int, ...],
+             axes: Tuple[Optional[str], ...]) -> P:
+    rules = _rules(cfg, mesh)
+    used = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        mesh_ax = rules.get(ax)
+        parts = (mesh_ax,) if isinstance(mesh_ax, str) else (mesh_ax or ())
+        extent = int(np.prod([mesh.shape[a] for a in parts])) if parts else 1
+        if not parts or any(a in used for a in parts) or dim % extent != 0:
+            out.append(None)
+        else:
+            used.update(parts)
+            out.append(mesh_ax)
+    return P(*out)
+
+
+def param_shardings(cfg, mesh: Mesh, abstract_params, specs) -> Any:
+    """specs: logical-axis tree parallel to params (tuples at leaves)."""
+    def leaf(p, ax):
+        return NamedSharding(mesh, spec_for(cfg, mesh, p.shape, ax))
+    return jax.tree_util.tree_map(
+        leaf, abstract_params, specs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+
+def opt_shardings(cfg, mesh: Mesh, opt_abs, specs) -> Any:
+    """Optimizer-state shardings derived from param logical axes.
+
+    AdamW moments mirror params exactly; Adafactor's factored moments drop
+    the reduced dim from the param spec (v_row: last dim, v_col: 2nd-to-last).
+    """
+    is_leaf = lambda x: hasattr(x, "shape") and not isinstance(x, dict)
+
+    def mk(shape, axes):
+        return NamedSharding(mesh, spec_for(cfg, mesh, shape, axes))
+
+    out: Dict[str, Any] = {"step": replicated(mesh)}
+    if "m" in opt_abs:  # adamw
+        full = jax.tree_util.tree_map(lambda p, ax: mk(p.shape, ax),
+                                      opt_abs["m"], specs, is_leaf=is_leaf)
+        out["m"] = full
+        out["v"] = full
+        return out
+    def vr_axes(p, ax):
+        return ax[:-1] if len(ax) > p.ndim else ax
+
+    def vc_axes(p, ax):
+        if p.ndim == 0:
+            return ()
+        return ax[:-2] + ax[-1:]
+
+    out["v_row"] = jax.tree_util.tree_map(
+        lambda p, ax: mk(p.shape, vr_axes(p, ax)),
+        opt_abs["v_row"], specs, is_leaf=is_leaf)
+    out["v_col"] = jax.tree_util.tree_map(
+        lambda p, ax: mk(p.shape, vc_axes(p, ax)),
+        opt_abs["v_col"], specs, is_leaf=is_leaf)
+    return out
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    """(B, S, ...) activations: batch over the DP axes."""
+    return NamedSharding(mesh, P(dp_axes(mesh)))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def cache_shardings(cfg, mesh: Mesh, abstract_cache, batch: int,
+                    seq_shard: bool = False) -> Any:
+    """Decode-cache shardings.
+
+    Default: batch dim over DP axes, d_inner over model.
+    seq_shard (long-context, batch too small to DP-shard): the sequence dim of
+    attention caches is sharded over the DP axes instead (sequence
+    parallelism); SSM states keep d_inner over model.
+    """
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    batch_ok = batch % dp_total == 0 and batch >= dp_total
+
+    def leaf(path, x):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        leaf_name = names[-1] if names else ""
+        if leaf_name == "cur_len" or x.ndim == 0:
+            return replicated(mesh)
+        spec = [None] * x.ndim
+        # layouts: k/v (P,B,S,kv,hd) | ckv/krope (P,B,S,r) | ssm (P,B,di,st)
+        # | conv (P,B,W-1,di)
+        if leaf_name in ("k", "v", "ckv", "krope"):
+            if batch_ok:
+                spec[1] = dp
+            elif seq_shard and x.shape[2] % dp_total == 0:
+                spec[2] = dp
+            if "model" in mesh.axis_names:
+                tp = mesh.shape["model"]
+                if leaf_name in ("k", "v"):
+                    # prefer kv-heads; fall back to head_dim, then seq —
+                    # a GQA cache MUST shard over "model" or it won't fit
+                    # (e.g. command-r decode_32k: 43 GB/dev unsharded).
+                    if x.shape[3] % tp == 0:
+                        spec[3] = "model"
+                    elif x.shape[4] % tp == 0:
+                        spec[4] = "model"
+                    elif spec[2] is None and x.shape[2] % tp == 0:
+                        spec[2] = "model"
+                else:  # MLA compressed cache: shard seq over model
+                    if spec[2] is None and x.shape[2] % tp == 0:
+                        spec[2] = "model"
+        elif leaf_name == "ssm":
+            if batch_ok:
+                spec[1] = dp
+            if "model" in mesh.axis_names and x.shape[2] % mesh.shape["model"] == 0:
+                spec[2] = "model"
+        elif leaf_name == "conv":
+            if batch_ok:
+                spec[1] = dp
+            if "model" in mesh.axis_names and x.shape[3] % mesh.shape["model"] == 0:
+                spec[3] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_cache)

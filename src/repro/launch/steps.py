@@ -1,0 +1,179 @@
+"""jit-able training / serving steps + abstract input specs for the dry-run.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, zero allocation) — the same pattern the
+dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.launch.mesh import dp_axes
+from repro.models import lm
+from repro.optim import opt_init, opt_update
+
+
+# ---------------------------------------------------------------------------
+# Abstract trees (no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg):
+    """(abstract params, logical specs) via eval_shape — zero allocation."""
+    specs_box = {}
+
+    def init():
+        p, s = lm.init_model(cfg, jax.random.PRNGKey(0))
+        specs_box["specs"] = s
+        return p
+
+    params = jax.eval_shape(init)
+    return params, specs_box["specs"]
+
+
+def abstract_opt(cfg, params):
+    return jax.eval_shape(functools.partial(opt_init, cfg), params)
+
+
+def abstract_cache(cfg, batch: int, max_len: int):
+    return jax.eval_shape(lambda: lm.init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one step of the given ShapeSpec."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": f((B, S), jnp.int32), "labels": f((B, S), jnp.int32)}
+        if cfg.vlm_prefix:
+            # frontend stub: precomputed ViT patch embeddings for the prefix
+            batch["tokens"] = f((B, S - cfg.vlm_prefix), jnp.int32)
+            batch["labels"] = f((B, S - cfg.vlm_prefix), jnp.int32)
+            batch["prefix_embeds"] = f((B, cfg.vlm_prefix, cfg.d_model),
+                                       jnp.dtype(cfg.dtype))
+        if cfg.enc_layers:
+            batch["enc_inputs"] = f((B, cfg.enc_seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": f((B, S), jnp.int32)}
+        if cfg.vlm_prefix:
+            batch["tokens"] = f((B, S - cfg.vlm_prefix), jnp.int32)
+            batch["prefix_embeds"] = f((B, cfg.vlm_prefix, cfg.d_model),
+                                       jnp.dtype(cfg.dtype))
+        if cfg.enc_layers:
+            batch["enc_inputs"] = f((B, cfg.enc_seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+        return batch
+    # decode: one new token against a cache of length S
+    return {"tokens": f((B, 1), jnp.int32)}
+
+
+def batch_shardings(cfg, mesh, batch_tree) -> Any:
+    dp = dp_axes(mesh)
+    if cfg.tp_mode == "dp" and "model" in mesh.axis_names:
+        dp = dp + ("model",)
+
+    def leaf(x):
+        spec = [None] * len(x.shape)
+        total = int(np.prod([mesh.shape[a] for a in dp]))
+        if x.shape[0] % total == 0:
+            spec[0] = dp
+        elif x.shape[0] % int(np.prod([mesh.shape[a] for a in dp[:-1]])) == 0 \
+                and len(dp) > 1:
+            spec[0] = dp[:-1]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(leaf, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, lr: float = 3e-4):
+    def train_step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.lm_loss(cfg, p, batch))(params)
+        params, opt = opt_update(cfg, params, grads, opt)
+        return params, opt, {"loss": loss}
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        logits, cache, _, _ = lm.forward(
+            cfg, params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_inputs=batch.get("enc_inputs"),
+            mode="prefill")
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def serve_step(params, cache, batch):
+        logits, cache, _, _ = lm.forward(
+            cfg, params, batch["tokens"], mode="decode", cache=cache)
+        return logits[:, 0], cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Fully-specified jit for one (arch x shape x mesh) cell
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg, shape, mesh) -> Tuple[Any, Tuple, Dict[str, Any]]:
+    """Returns (jitted_fn, abstract_args, info) ready to .lower(*args)."""
+    params, specs = abstract_params(cfg)
+    pshard = shd.param_shardings(cfg, mesh, params, specs)
+    batch = input_specs(cfg, shape)
+    bshard = batch_shardings(cfg, mesh, batch)
+    rep = shd.replicated(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+    if shape.kind == "train":
+        opt = abstract_opt(cfg, params)
+        oshard = shd.opt_shardings(cfg, mesh, opt, specs)
+        fn = jax.jit(
+            make_train_step(cfg),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, {"loss": rep}),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params, opt, batch), {"n_args": 3}
+
+    if shape.kind == "prefill":
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cshard = shd.cache_shardings(cfg, mesh, cache, shape.global_batch)
+        logits_shard = NamedSharding(
+            mesh, P(dp_axes(mesh) if shape.global_batch % dp_total == 0 else None,
+                    "model"))
+        fn = jax.jit(
+            make_prefill_step(cfg),
+            in_shardings=(pshard, bshard),
+            out_shardings=(logits_shard, cshard),
+        )
+        return fn, (params, batch), {"n_args": 2}
+
+    # decode
+    seq_shard = shape.global_batch < dp_total
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    cshard = shd.cache_shardings(cfg, mesh, cache, shape.global_batch,
+                                 seq_shard=seq_shard)
+    logits_shard = NamedSharding(
+        mesh, P(dp_axes(mesh) if shape.global_batch % dp_total == 0 else None,
+                "model"))
+    fn = jax.jit(
+        make_decode_step(cfg),
+        in_shardings=(pshard, cshard, bshard),
+        out_shardings=(logits_shard, cshard),
+        donate_argnums=(1,),
+    )
+    return fn, (params, cache, batch), {"n_args": 3}

@@ -1,0 +1,61 @@
+"""Training launcher: ``python -m repro.launch.train --arch internlm2-1.8b
+--steps 3 --smoke`` runs a reduced config locally; on a real cluster the same
+entry point drives the production mesh (this container exercises the local
+path; the production path is proven by the dry-run)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS
+from repro.data import TokenPipeline
+from repro.distributed.elastic import ElasticConfig, ElasticTrainer
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.optim import opt_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced() if args.smoke else ARCHS[args.arch]
+    params, _ = lm.init_model(cfg, jax.random.PRNGKey(0))
+    opt = opt_init(cfg, params)
+    pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq)
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+    start = 0
+    if args.resume:
+        step, state = ckpt.restore()
+        params, opt = state["params"], state["opt"]
+        pipe.restore({"step": step})
+        start = step
+        print(f"resumed from step {step}")
+
+    trainer = ElasticTrainer(
+        make_mesh=lambda n: make_local_mesh(),
+        build_step=lambda mesh: jax.jit(make_train_step(cfg), donate_argnums=(0, 1)),
+        ckpt=ckpt, cfg=ElasticConfig(ckpt_every=max(args.steps // 2, 1)))
+
+    batches = (next(pipe) for _ in range(args.steps))
+    t0 = time.time()
+    params, opt, step, metrics = trainer.run(params, opt, batches,
+                                             start_step=start)
+    print(f"arch={cfg.name} steps={step} loss={float(metrics['loss']):.4f} "
+          f"wall={time.time()-t0:.1f}s events={trainer.events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import attention, lm, layers, mamba, moe  # noqa: F401

@@ -1,0 +1,356 @@
+"""Attention variants: GQA/MQA (optionally sliding-window), cross-attention,
+and DeepSeek-style MLA with compressed KV cache.
+
+All functions are pure; KV caches are explicit pytrees threaded by the caller.
+Cache layout (per attention layer):
+  full/GQA : {"k": (B, S_max, n_kv, hd), "v": (B, S_max, n_kv, hd)}
+  SWA      : same with S_max = window (ring buffer indexed by pos % window)
+  MLA      : {"ckv": (B, S_max, kv_lora), "krope": (B, S_max, rope_dim)}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder, Params, apply_rope
+
+NEG_INF = -1e30
+
+
+def seq_shard_constraint(x: jax.Array) -> jax.Array:
+    """tp_mode="sp": activations sharded over "model" on the SEQUENCE dim.
+
+    With MQA/GQA the K/V tensors are tiny, so sequence-parallel attention
+    gathers K/V (MBs) instead of all-reducing full activations (GBs):
+    projections and MLP become comm-free, per-layer collectives drop to
+    weight gathers — §Perf iteration 2b.
+    """
+    from repro.launch import context
+    from repro.launch.mesh import dp_axes
+    mesh = context.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    b_spec = dp if x.shape[0] % dp_total == 0 else None
+    s_spec = "model" if x.shape[1] % mesh.shape["model"] == 0 else None
+    spec = [b_spec, s_spec] + [None] * (x.ndim - 2)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def _constrain_kv(x: jax.Array) -> jax.Array:
+    """Replicate small KV tensors across the model axis before attention.
+
+    Without this, the kv projection's output sharding (flattened kv*hd dim
+    over "model") leaks into the flash contraction and XLA all-reduces the
+    full LOGITS per block (measured 51 GB/layer on granite-34b train_4k).
+    Replicating k/v costs one small all-gather (~16 MB/layer) instead —
+    §Perf iteration 2 in EXPERIMENTS.md.
+    """
+    from repro.launch import context
+    from repro.launch.mesh import dp_axes
+    mesh = context.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    b_spec = dp if x.shape[0] % dp_total == 0 else None
+    spec = [b_spec] + [None] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, b: ParamBuilder, cross: bool = False) -> None:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b.make("wq", (d, h * hd), ("embed", "heads_x_dim"))
+    b.make("wk", (d, kv * hd), ("embed", "kv_x_dim"))
+    b.make("wv", (d, kv * hd), ("embed", "kv_x_dim"))
+    b.make("wo", (h * hd, d), ("heads_x_dim", "embed"))
+    if cfg.use_bias:
+        b.make("bq", (h * hd,), ("heads_x_dim",), init="zeros")
+        b.make("bk", (kv * hd,), ("kv_x_dim",), init="zeros")
+        b.make("bv", (kv * hd,), ("kv_x_dim",), init="zeros")
+        b.make("bo", (d,), ("embed",), init="zeros")
+
+
+def init_mla(cfg, b: ParamBuilder) -> None:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    b.make("wq_a", (d, m.q_lora_rank), ("embed", None))
+    b.make("q_norm", (m.q_lora_rank,), (None,), init="ones")
+    b.make("wq_b", (m.q_lora_rank, h * qk), (None, "heads_x_dim"))
+    b.make("wkv_a", (d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", None))
+    b.make("kv_norm", (m.kv_lora_rank,), (None,), init="ones")
+    b.make("wkv_b", (m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)),
+           (None, "heads_x_dim"))
+    b.make("wo", (h * m.v_head_dim, d), ("heads_x_dim", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+          scale: float) -> jax.Array:
+    """q: (B,Sq,H,hd)  k,v: (B,Sk,KV,hd)  mask: broadcastable (B,1,Sq,Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    qg = q.reshape(B, Sq, KV, groups, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    bias = jnp.where(mask, 0.0, NEG_INF)           # (B|1, 1, Sq, Sk)
+    logits = logits + bias[:, :, None, :, :]       # -> (B, KV, G, Sq, Sk)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def causal_mask(Sq: int, Sk: int, q_offset: int = 0,
+                window: int = 0) -> jax.Array:
+    """(1, 1, Sq, Sk) boolean mask. window>0 adds sliding-window banding."""
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    return m[None, None]
+
+
+def attend(cfg, p: Params, x: jax.Array, positions: jax.Array,
+           kind: str = "causal",
+           kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+           ) -> jax.Array:
+    """Full-sequence (train / prefill) GQA attention. x: (B, S, d).
+
+    kind: "causal" (+ cfg.sliding_window) or "full" (encoder / cross).
+    Long sequences stream through the chunked flash path (O(S·d) memory);
+    short ones use the exact dense path (also the flash oracle in tests).
+    """
+    from repro.models.flash import flash_attention
+    B, S, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, h, hd)
+    if "bq" in p:
+        q = q + p["bq"].reshape(1, 1, h, hd)
+    if kv_override is None:
+        k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, kv, hd)
+        v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, kv, hd)
+        if "bk" in p:
+            k = k + p["bk"].reshape(1, 1, kv, hd)
+            v = v + p["bv"].reshape(1, 1, kv, hd)
+        if cfg.rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        k, v = _constrain_kv(k), _constrain_kv(v)
+    else:
+        k, v = kv_override
+        if cfg.rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+    Sk = k.shape[1]
+    causal = kind == "causal"
+    if cfg.tp_mode == "sp" and S == Sk:
+        q = seq_shard_constraint(q)      # q stays sequence-sharded; K/V full
+    if max(S, Sk) >= cfg.flash_min_seq:
+        out = flash_attention(q, k, v, causal, cfg.sliding_window if causal else 0,
+                              0, min(512, _ceil_pow2(S)), min(1024, _ceil_pow2(Sk)),
+                              hd ** -0.5)
+    else:
+        if causal:
+            mask = causal_mask(S, Sk, window=cfg.sliding_window)
+        else:
+            mask = jnp.ones((1, 1, S, Sk), bool)
+        out = _sdpa(q, k, v, mask, scale=hd ** -0.5)
+    out = out.reshape(B, S, h * hd)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+def _ceil_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def project_kv(cfg, p: Params, x: jax.Array, positions: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """KV projection for cross-attention memory or cache fill."""
+    B, S, _ = x.shape
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, kv, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, kv, hd)
+    if "bk" in p:
+        k = k + p["bk"].reshape(1, 1, kv, hd)
+        v = v + p["bv"].reshape(1, 1, kv, hd)
+    if cfg.rope:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return _constrain_kv(k), _constrain_kv(v)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attend(cfg, p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                  cur_len: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, d); cache k/v: (B, S_cache, kv, hd); cur_len: () int32.
+
+    Sliding-window caches are ring buffers: slot = cur_len % window, and the
+    validity mask covers min(cur_len, window) entries.
+    """
+    B, _, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    S_cache = cache["k"].shape[1]
+    window = cfg.sliding_window
+
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, 1, h, hd)
+    k_new = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, 1, kv, hd)
+    v_new = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, 1, kv, hd)
+    if "bq" in p:
+        q = q + p["bq"].reshape(1, 1, h, hd)
+        k_new = k_new + p["bk"].reshape(1, 1, kv, hd)
+        v_new = v_new + p["bv"].reshape(1, 1, kv, hd)
+    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    if cfg.rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+
+    slot = (cur_len % window) if window else jnp.minimum(cur_len, S_cache - 1)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+
+    kpos = jnp.arange(S_cache)
+    if window:
+        valid = kpos < jnp.minimum(cur_len + 1, S_cache)
+    else:
+        valid = kpos <= cur_len
+    mask = valid[None, None, None, :]
+    out = _sdpa(q, k, v, mask, scale=hd ** -0.5).reshape(B, 1, h * hd)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): low-rank Q/KV with compressed cache
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(cfg, p: Params, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    from repro.models.layers import rmsnorm
+    q_lat = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,re->bse", q_lat, p["wq_b"]).reshape(
+        B, S, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    ckv = rmsnorm(ckv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def _mla_attend_core(cfg, p: Params, q_nope, q_rope, ckv, k_rope, mask):
+    """Attention against the *compressed* cache (absorbed-matrix trick).
+
+    ckv: (B, Sk, r); k_rope: (B, Sk, rd); q_*: (B, Sq, h, ·).
+    wkv_b maps r -> h*(nope+v). We absorb the K-side of wkv_b into the query
+    so that logits are computed directly in the compressed space — the cache
+    stays rank-r (the paper's deployment trick; avoids materializing K/V).
+    """
+    m = cfg.mla
+    h = cfg.n_heads
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    wk_b = wkv_b[:, :, : m.qk_nope_head_dim]         # (r, h, nope)
+    wv_b = wkv_b[:, :, m.qk_nope_head_dim:]          # (r, h, v)
+    # absorb: q_eff (B,Sq,h,r) = q_nope @ wk_b^T
+    q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    logits = jnp.einsum("bqhr,bsr->bhqs", q_eff, ckv.astype(jnp.float32))
+    logits = logits + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                                 k_rope.astype(jnp.float32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    logits = logits * scale + jnp.where(mask, 0.0, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs, ckv.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, wv_b.astype(jnp.float32))
+    return out.astype(q_nope.dtype)
+
+
+def mla_attend(cfg, p: Params, x: jax.Array, positions: jax.Array,
+               kind: str = "causal") -> jax.Array:
+    """Full-sequence MLA. x: (B,S,d).
+
+    Long sequences run flash over the *absorbed* representation:
+    q' = [q_nope @ Wk_b^T ; q_rope], k' = [ckv ; k_rope] (a single KV "head"
+    of width r+rope), v = ckv — logits q'·k' match the MLA formulation
+    exactly, so the compressed cache never materializes per-head K/V.
+    """
+    from repro.models.flash import flash_attention
+    B, S, _ = x.shape
+    m = cfg.mla
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(cfg, p, x, positions)
+    if S >= cfg.flash_min_seq:
+        h = cfg.n_heads
+        wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h,
+                                   m.qk_nope_head_dim + m.v_head_dim)
+        wk_b = wkv_b[:, :, : m.qk_nope_head_dim]
+        wv_b = wkv_b[:, :, m.qk_nope_head_dim:]
+        q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk_b)
+        q_all = jnp.concatenate([q_eff, q_rope], axis=-1)        # (B,S,h,r+rd)
+        k_all = _constrain_kv(
+            jnp.concatenate([ckv, k_rope], axis=-1)[:, :, None, :])
+        v_all = _constrain_kv(ckv[:, :, None, :])
+        scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+        ctx = flash_attention(q_all, k_all, v_all, kind == "causal", 0, 0,
+                              512, 1024, scale)                  # (B,S,h,r)
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx.astype(jnp.float32),
+                         wv_b.astype(jnp.float32)).astype(x.dtype)
+    else:
+        mask = causal_mask(S, S) if kind == "causal" \
+            else jnp.ones((1, 1, S, S), bool)
+        out = _mla_attend_core(cfg, p, q_nope, q_rope, ckv, k_rope, mask)
+    out = out.reshape(B, S, cfg.n_heads * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"])
+
+
+def mla_decode_attend(cfg, p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                      cur_len: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B,1,d); cache: ckv (B,S,r), krope (B,S,rd).
+
+    The compressed cache seq-shards over "model" (sharding.cache_shardings);
+    keeping the small decode queries replicated over "model" (18 MB for
+    deepseek) lets logits/softmax/context stay cache-local with only scalar
+    softmax stats + a (B,h,r) context psum crossing the wire (§Perf it. 4).
+    """
+    B = x.shape[0]
+    m = cfg.mla
+    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv(cfg, p, x, pos)
+    q_nope = _constrain_kv(q_nope)
+    q_rope = _constrain_kv(q_rope)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, cur_len, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], krope_new, (0, cur_len, 0))
+    S_cache = ckv.shape[1]
+    mask = (jnp.arange(S_cache) <= cur_len)[None, None, None, :]
+    out = _mla_attend_core(cfg, p, q_nope, q_rope, ckv, krope, mask)
+    out = out.reshape(B, 1, cfg.n_heads * m.v_head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return out, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,188 @@
+"""Chunked (flash-style) attention in pure JAX with a custom VJP.
+
+Why not materialize S x S logits: at 32k prefill the logits alone are
+O(100 GB)/device — the dry-run memory analysis must reflect a deployable
+program. This implementation streams KV blocks with an online softmax
+(O(S·d) residuals: o and lse), and the backward pass re-computes per-block
+probabilities — the standard flash recipe, expressed with ``lax.scan`` so it
+lowers on any backend (CPU dry-run today, TPU for real; on TPU, XLA fuses the
+block body into MXU-friendly loops — a Pallas flash kernel would be the next
+step and shares this function as its oracle).
+
+Supports GQA (H = KV * G), head_dim(v) != head_dim(qk) (MLA), causal and
+sliding-window masking, and ragged Sk (padding masked out).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _block_mask(qpos, kpos, causal: bool, window: int, sq: int, sk: int):
+    """(bq, bk) bool validity for one (q-block, kv-block) pair."""
+    m = (qpos[:, None] < sq) & (kpos[None, :] < sk)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+        if window:
+            m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0, q_offset: int = 0,
+                    block_q: int = 512, block_k: int = 1024,
+                    scale: Optional[float] = None) -> jax.Array:
+    """q (B,Sq,H,D), k (B,Sk,KV,D), v (B,Sk,KV,Dv) -> (B,Sq,H,Dv)."""
+    o, _ = _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k, scale)
+    return o
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k, scale):
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    sc = scale if scale is not None else D ** -0.5
+
+    qp = _pad_to(q, 1, block_q)
+    kp = _pad_to(k, 1, block_k)
+    vp = _pad_to(v, 1, block_k)
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+
+    qb = (qp.reshape(B, nq, block_q, KV, G, D).astype(jnp.float32) * sc)
+    kb = kp.reshape(B, nk, block_k, KV, D).astype(jnp.float32)
+    vb = vp.reshape(B, nk, block_k, KV, Dv).astype(jnp.float32)
+
+    def q_step(_, qi):
+        qblk, iq = qi                                   # (B,bq,KV,G,D), ()
+        qpos = iq * block_q + jnp.arange(block_q) + q_offset
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kblk, vblk, jk = kj
+            kpos = jk * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk)
+            mask = _block_mask(qpos, kpos, causal, window, Sq + q_offset, Sk)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = corr * l + jnp.sum(p, axis=-1)
+            acc = corr[..., None] * acc + jnp.einsum("bkgqs,bskv->bkgqv", p, vblk)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, block_q, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
+                                    jnp.arange(nk)))
+        l = jnp.maximum(l, 1e-30)
+        o = acc / l[..., None]                          # (B,KV,G,bq,Dv)
+        lse = m + jnp.log(l)
+        return None, (o, lse)
+
+    _, (ob, lseb) = jax.lax.scan(q_step, None,
+                                 (qb.swapaxes(0, 1), jnp.arange(nq)))
+    # ob: (nq,B,KV,G,bq,Dv) -> (B,Sq,H,Dv)
+    o = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * block_q, H, Dv)[:, :Sq]
+    lse = lseb.transpose(1, 0, 4, 2, 3).reshape(B, nq * block_q, H)[:, :Sq]
+    return o.astype(q.dtype), lse
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, q_offset, block_q, block_k, scale):
+    o, lse = _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k, scale)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_vjp_bwd(causal, window, q_offset, block_q, block_k, scale, res, do):
+    q, k, v, o, lse = res
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    sc = scale if scale is not None else D ** -0.5
+
+    qp = _pad_to(q, 1, block_q).astype(jnp.float32)
+    kp = _pad_to(k, 1, block_k).astype(jnp.float32)
+    vp = _pad_to(v, 1, block_k).astype(jnp.float32)
+    op = _pad_to(o, 1, block_q).astype(jnp.float32)
+    dop = _pad_to(do, 1, block_q).astype(jnp.float32)
+    lsep = _pad_to(lse, 1, block_q).astype(jnp.float32)
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+    Skp = nk * block_k
+
+    delta = jnp.sum(op * dop, axis=-1)                  # (B,Sqp,H)
+    qb = qp.reshape(B, nq, block_q, KV, G, D) * sc
+    dob = dop.reshape(B, nq, block_q, KV, G, Dv)
+    lb = lsep.reshape(B, nq, block_q, KV, G).transpose(0, 3, 4, 1, 2)
+    db = delta.reshape(B, nq, block_q, KV, G).transpose(0, 3, 4, 1, 2)
+    kb = kp.reshape(B, nk, block_k, KV, D)
+    vb = vp.reshape(B, nk, block_k, KV, Dv)
+
+    def q_step(carry, xs):
+        dk, dv = carry                                   # fp32 (B,Skp,KV,·)
+        qblk, doblk, lseblk, dblk, iq = xs
+        qpos = iq * block_q + jnp.arange(block_q) + q_offset
+
+        def kv_step(c2, jk):
+            dq_blk, dk, dv = c2
+            j = jk
+            kblk = jax.lax.dynamic_slice_in_dim(kb_sw, j, 1, 0)[0]
+            vblk = jax.lax.dynamic_slice_in_dim(vb_sw, j, 1, 0)[0]
+            kpos = j * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk)
+            mask = _block_mask(qpos, kpos, causal, window, Sq + q_offset, Sk)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lseblk[..., None])           # (B,KV,G,bq,bk)
+            dv_j = jnp.einsum("bkgqs,bqkgv->bskv", p, doblk)
+            dp = jnp.einsum("bqkgv,bskv->bkgqs", doblk, vblk)
+            ds = p * (dp - dblk[..., None])
+            dq_blk = dq_blk + jnp.einsum("bkgqs,bskd->bqkgd", ds, kblk)
+            dk_j = jnp.einsum("bkgqs,bqkgd->bskd", ds, qblk)
+            off = j * block_k
+            dk = jax.lax.dynamic_update_slice_in_dim(
+                dk, jax.lax.dynamic_slice_in_dim(dk, off, block_k, 1) + dk_j,
+                off, 1)
+            dv = jax.lax.dynamic_update_slice_in_dim(
+                dv, jax.lax.dynamic_slice_in_dim(dv, off, block_k, 1) + dv_j,
+                off, 1)
+            return (dq_blk, dk, dv), None
+
+        dq0 = jnp.zeros((B, block_q, KV, G, D), jnp.float32)
+        (dq_blk, dk, dv), _ = jax.lax.scan(kv_step, (dq0, dk, dv),
+                                           jnp.arange(nk))
+        return (dk, dv), dq_blk
+
+    kb_sw = kb.swapaxes(0, 1)                            # (nk,B,bk,KV,D)
+    vb_sw = vb.swapaxes(0, 1)
+    dk0 = jnp.zeros((B, Skp, KV, D), jnp.float32)
+    dv0 = jnp.zeros((B, Skp, KV, Dv), jnp.float32)
+    (dk, dv), dqb = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (qb.swapaxes(0, 1), dob.swapaxes(0, 1),
+         lb.transpose(3, 0, 1, 2, 4), db.transpose(3, 0, 1, 2, 4),
+         jnp.arange(nq)))
+    dq = (dqb.transpose(1, 0, 2, 3, 4, 5)
+          .reshape(B, nq * block_q, H, D)[:, :Sq] * sc)
+    return (dq.astype(q.dtype), dk[:, :Sk].astype(k.dtype),
+            dv[:, :Sk].astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)

@@ -1,0 +1,195 @@
+"""Shared functional layers + parameter construction with logical sharding axes.
+
+Params are plain pytrees (nested dicts of jnp arrays). Every array is created
+through a ``ParamBuilder`` which records a parallel tree of *logical axis
+names* per dimension; ``repro.launch.sharding`` maps logical axes to mesh axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+class ParamBuilder:
+    """Creates params and records logical-axis metadata for sharding."""
+
+    def __init__(self, key: jax.Array, dtype: jnp.dtype):
+        self._key = key
+        self.dtype = dtype
+        self.params: Params = {}
+        self.specs: Specs = {}
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def make(self, path: str, shape: Sequence[int], axes: Sequence[Optional[str]],
+             init: str = "normal", scale: Optional[float] = None) -> None:
+        assert len(shape) == len(axes), (path, shape, axes)
+        if init == "zeros":
+            arr = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            arr = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            if scale is None:
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / math.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(self._next_key(), tuple(shape), jnp.float32)
+                   * scale).astype(self.dtype)
+        else:
+            raise ValueError(init)
+        _tree_set(self.params, path, arr)
+        _tree_set(self.specs, path, tuple(axes))
+
+    def submodule(self, prefix: str) -> "ParamBuilder":
+        sub = ParamBuilder(self._next_key(), self.dtype)
+        _tree_set(self.params, prefix, sub.params)
+        _tree_set(self.specs, prefix, sub.specs)
+        return sub
+
+
+def _tree_set(tree: dict, path: str, value) -> None:
+    parts = path.split("/")
+    for p in parts[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[parts[-1]] = value
+
+
+def stack_params(trees: Sequence[Params]) -> Params:
+    """Stack a list of identical param trees along a new leading 'layers' axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_specs(spec: Specs) -> Specs:
+    return jax.tree_util.tree_map(
+        lambda axes: ("layers",) + tuple(axes),
+        spec,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: Optional[jax.Array],
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def apply_norm(cfg, x: jax.Array, p: Params) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p.get("bias"))
+
+
+def init_norm(cfg, b: ParamBuilder, path: str, dim: int,
+              dim_axis: Optional[str] = None) -> None:
+    b.make(f"{path}/scale", (dim,), (dim_axis,), init="ones")
+    if cfg.norm == "layernorm":
+        b.make(f"{path}/bias", (dim,), (dim_axis,), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, b: ParamBuilder, d_model: int, d_ff: int) -> None:
+    if cfg.mlp_type == "swiglu":
+        b.make("w_gate", (d_model, d_ff), ("embed", "ff"))
+        b.make("w_up", (d_model, d_ff), ("embed", "ff"))
+        b.make("w_down", (d_ff, d_model), ("ff", "embed"))
+    else:  # gelu
+        b.make("w_up", (d_model, d_ff), ("embed", "ff"))
+        b.make("w_down", (d_ff, d_model), ("ff", "embed"))
+        if cfg.use_bias:
+            b.make("b_up", (d_ff,), ("ff",), init="zeros")
+            b.make("b_down", (d_model,), ("embed",), init="zeros")
+
+
+def apply_mlp(cfg, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("...f,fd->...d", h, p["w_down"])
+    h = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if "b_up" in p:
+        h = h + p["b_up"]
+    h = jax.nn.gelu(h)
+    out = jnp.einsum("...f,fd->...d", h, p["w_down"])
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                    # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GroupNorm (used by the diffusion UNet; patched variant lives in core/)
+# ---------------------------------------------------------------------------
+
+def groupnorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              groups: int, eps: float = 1e-5) -> jax.Array:
+    """x: (B, H, W, C) NHWC. Stats over (H, W, C//G) per group."""
+    B, H, W, C = x.shape
+    dt = x.dtype
+    xg = x.astype(jnp.float32).reshape(B, H, W, groups, C // groups)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    out = (xg - mu) * jax.lax.rsqrt(var + eps)
+    out = out.reshape(B, H, W, C) * scale + bias
+    return out.astype(dt)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean xent over valid tokens; logits (..., V), labels int (...,)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

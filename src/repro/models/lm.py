@@ -1,0 +1,380 @@
+"""LM-family model builder: dense / MoE / MLA / SSM / hybrid / enc-dec / VLM.
+
+One code path builds all ten assigned architectures from ``ModelConfig``:
+- layers are grouped into repeating *periods* (``cfg.layer_plan()``); each slot
+  in a period has its own param subtree stacked over ``n_periods`` and the
+  whole stack is traversed with ``jax.lax.scan`` (bounded HLO size, remat-able)
+- three modes: "train" (causal, no cache), "prefill" (emit cache),
+  "decode" (one token against the cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (ParamBuilder, Params, apply_mlp, apply_norm,
+                                 cross_entropy, init_mlp, init_norm)
+
+Tree = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_model(cfg, key: jax.Array) -> Tuple[Params, Tree]:
+    """Returns (params, logical-axis specs)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = ParamBuilder(key, dtype)
+    b.make("embed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), scale=0.02)
+    if cfg.learned_pos:
+        b.make("pos_embed", (cfg.max_pos, cfg.d_model), (None, "embed"), scale=0.02)
+
+    plan = cfg.layer_plan()
+    period_builders = []
+    for n in range(cfg.n_periods):
+        pb = ParamBuilder(jax.random.fold_in(key, 1000 + n), dtype)
+        for s, (mixer, ffn) in enumerate(plan):
+            sb = pb.submodule(f"slot{s}")
+            init_norm(cfg, sb, "norm1", cfg.d_model)
+            if mixer == "attn":
+                ab = sb.submodule("attn")
+                attn_mod.init_attention(cfg, ab)
+                if cfg.cross_attn:
+                    init_norm(cfg, sb, "norm_cross", cfg.d_model)
+                    cb = sb.submodule("cross")
+                    attn_mod.init_attention(cfg, cb, cross=True)
+            elif mixer == "mla":
+                ab = sb.submodule("attn")
+                attn_mod.init_mla(cfg, ab)
+            elif mixer == "mamba":
+                mb = sb.submodule("mamba")
+                mamba_mod.init_mamba(cfg, mb)
+            if ffn != "none":
+                init_norm(cfg, sb, "norm2", cfg.d_model)
+                fb = sb.submodule("ffn")
+                if ffn == "moe":
+                    moe_mod.init_moe(cfg, fb, cfg.d_model, cfg.d_ff)
+                else:
+                    init_mlp(cfg, fb, cfg.d_model, cfg.d_ff)
+        period_builders.append(pb)
+    from repro.models.layers import stack_params, stack_specs
+    b.params["blocks"] = stack_params([pb.params for pb in period_builders])
+    b.specs["blocks"] = stack_specs(period_builders[0].specs)
+
+    init_norm(cfg, b, "final_norm", cfg.d_model)
+    if not cfg.tie_embeddings:
+        b.make("lm_head", (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), scale=0.02)
+
+    if cfg.enc_layers:
+        eb = b.submodule("encoder")
+        enc_builders = []
+        for n in range(cfg.enc_layers):
+            epb = ParamBuilder(jax.random.fold_in(key, 5000 + n), dtype)
+            init_norm(cfg, epb, "norm1", cfg.d_model)
+            ab = epb.submodule("attn")
+            attn_mod.init_attention(cfg, ab)
+            init_norm(cfg, epb, "norm2", cfg.d_model)
+            fb = epb.submodule("ffn")
+            init_mlp(cfg, fb, cfg.d_model, cfg.d_ff)
+            enc_builders.append(epb)
+        eb.params["layers"] = stack_params([e.params for e in enc_builders])
+        eb.specs["layers"] = stack_specs(enc_builders[0].specs)
+        init_norm(cfg, eb, "final_norm", cfg.d_model)
+
+    if cfg.mtp:  # DeepSeek multi-token prediction: 1 extra attn block + proj
+        mb = b.submodule("mtp")
+        mb.make("proj", (2 * cfg.d_model, cfg.d_model), (None, "embed"))
+        init_norm(cfg, mb, "norm1", cfg.d_model)
+        ab = mb.submodule("attn")
+        attn_mod.init_attention(cfg, ab)
+        init_norm(cfg, mb, "norm2", cfg.d_model)
+        fb = mb.submodule("ffn")
+        init_mlp(cfg, fb, cfg.d_model, cfg.d_ff)
+    return b.params, b.specs
+
+
+# ---------------------------------------------------------------------------
+# Block application (one period)
+# ---------------------------------------------------------------------------
+
+def _apply_slot(cfg, slot_plan, p, x, positions, mode, cache, cur_len,
+                cross_kv=None):
+    """Returns (x, new_cache_slot, aux_loss)."""
+    mixer, ffn = slot_plan
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.tp_mode == "sp" and mode != "decode":
+        from repro.models.attention import seq_shard_constraint
+        x = seq_shard_constraint(x)
+    h = apply_norm(cfg, x, p["norm1"])
+    new_cache: Dict[str, jax.Array] = {}
+
+    if mixer == "attn":
+        if mode == "decode":
+            out, kv = attn_mod.decode_attend(cfg, p["attn"], h, cache["self"], cur_len)
+            new_cache["self"] = kv
+        else:
+            B, S, _ = h.shape
+            k, v = attn_mod.project_kv(cfg, p["attn"], h, positions)
+            out = attn_mod.attend(cfg, p["attn"], h, positions, kind="causal",
+                                  kv_override=(k, v))
+            if mode == "prefill":
+                new_cache["self"] = _ring_pack(cfg, k, v)
+        x = x + out
+        if cfg.cross_attn and (cross_kv is not None or "cross" in (cache or {})):
+            hc = apply_norm(cfg, x, p["norm_cross"])
+            if mode == "decode":
+                ck, cv = cache["cross"]["k"], cache["cross"]["v"]
+                new_cache["cross"] = cache["cross"]
+            else:
+                ck, cv = cross_kv
+                if mode == "prefill":
+                    new_cache["cross"] = {"k": ck, "v": cv}
+            out = attn_mod.attend(cfg, p["cross"], hc, positions, kind="full",
+                                  kv_override=(ck, cv))
+            x = x + out
+    elif mixer == "mla":
+        if mode == "decode":
+            out, kv = attn_mod.mla_decode_attend(cfg, p["attn"], h, cache["self"],
+                                                 cur_len)
+            new_cache["self"] = kv
+        else:
+            out = attn_mod.mla_attend(cfg, p["attn"], h, positions, kind="causal")
+            if mode == "prefill":
+                q_nope, q_rope, ckv, krope = attn_mod._mla_qkv(
+                    cfg, p["attn"], h, positions)
+                new_cache["self"] = {"ckv": ckv, "krope": krope}
+        x = x + out
+    elif mixer == "mamba":
+        if mode == "decode":
+            out, st = mamba_mod.mamba_decode(cfg, p["mamba"], h, cache["self"])
+            new_cache["self"] = st
+        else:
+            out = mamba_mod.mamba_mixer(cfg, p["mamba"], h)
+            if mode == "prefill":
+                new_cache["self"] = _mamba_prefill_state(cfg, p["mamba"], h)
+        x = x + out
+
+    if ffn != "none":
+        h = apply_norm(cfg, x, p["norm2"])
+        if ffn == "moe":
+            out, aux = moe_mod.apply_moe(cfg, p["ffn"], h)
+        else:
+            out = apply_mlp(cfg, p["ffn"], h)
+        x = x + out
+    return x, new_cache, aux
+
+
+def _ring_pack(cfg, k: jax.Array, v: jax.Array) -> Dict[str, jax.Array]:
+    """Prefill -> decode cache. SWA archs keep a ring of the last W entries."""
+    W = cfg.sliding_window
+    if not W or k.shape[1] <= W:
+        return {"k": k, "v": v}
+    S = k.shape[1]
+    pos = jnp.arange(S - W, S)
+    slots = pos % W
+    kr = jnp.zeros((k.shape[0], W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, S - W:])
+    vr = jnp.zeros((v.shape[0], W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, S - W:])
+    return {"k": kr, "v": vr}
+
+
+def _mamba_prefill_state(cfg, p, h):
+    """Recover final SSM + conv state after a full-sequence mixer pass."""
+    B, S, _ = h.shape
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    xi, _ = jnp.split(xz, 2, axis=-1)
+    W = cfg.conv_width
+    xpad = jnp.pad(xi, ((0, 0), (W - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + S] * p["conv_w"][i] for i in range(W)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = mamba_mod._ssm_params(cfg, p, xc)
+    Abar, Bx = mamba_mod._discretize(p, dt, Bm, xc)
+    _, hh = jax.lax.associative_scan(mamba_mod._scan_combine, (Abar, Bx), axis=1)
+    return {"ssm": hh[:, -1], "conv": xi[:, S - (W - 1):]}
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, tokens, prefix_embeds, mode, cur_len=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None and mode != "decode":
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    if mode == "decode":
+        positions = jnp.full((B, S), cur_len, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.learned_pos:
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], 0, S, 0) \
+            if mode != "decode" else \
+            jax.lax.dynamic_slice_in_dim(params["pos_embed"], cur_len, 1, 0)
+        x = x + pe[None].astype(x.dtype)
+    return x, positions
+
+
+def _encode(cfg, params, enc_inputs):
+    """Whisper/ViT stub encoder over precomputed frame/patch embeddings."""
+    x = enc_inputs.astype(jnp.dtype(cfg.dtype))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        h = apply_norm(cfg, x, lp["norm1"])
+        out = attn_mod.attend(cfg, lp["attn"], h, positions, kind="full")
+        x = x + out
+        h = apply_norm(cfg, x, lp["norm2"])
+        x = x + apply_mlp(cfg, lp["ffn"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return apply_norm(cfg, x, params["encoder"]["final_norm"])
+
+
+def forward(cfg, params: Params, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            enc_inputs: Optional[jax.Array] = None,
+            mode: str = "train",
+            cache: Optional[Tree] = None,
+            ) -> Tuple[jax.Array, Optional[Tree], jax.Array, jax.Array]:
+    """Returns (logits, new_cache, aux_loss, hidden).
+
+    train/prefill: tokens (B, S) [+ prefix/enc stubs]
+    decode:        tokens (B, 1), cache required.
+    """
+    cur_len = cache["cur_len"] if cache is not None else None
+    x, positions = _embed_inputs(cfg, params, tokens, prefix_embeds, mode, cur_len)
+    B, S = x.shape[:2]
+
+    memory = _encode(cfg, params, enc_inputs) if enc_inputs is not None else None
+
+    plan = cfg.layer_plan()
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def period_body(carry, xs):
+        x, aux = carry
+        block_p = xs["params"]
+        cache_in = xs.get("cache")
+        new_cache_slots = {}
+        for s, slot_plan in enumerate(plan):
+            ck = None
+            if memory is not None and slot_plan[0] == "attn":
+                enc_pos = jnp.broadcast_to(
+                    jnp.arange(memory.shape[1], dtype=jnp.int32),
+                    memory.shape[:2])
+                ck = attn_mod.project_kv(cfg, block_p[f"slot{s}"]["cross"],
+                                         memory, enc_pos) \
+                    if cfg.cross_attn else None
+            x, ncs, aux_s = _apply_slot(
+                cfg, slot_plan, block_p[f"slot{s}"], x, positions, mode,
+                cache_in[f"slot{s}"] if cache_in is not None else None,
+                cur_len, cross_kv=ck)
+            new_cache_slots[f"slot{s}"] = ncs
+            aux = aux + aux_s
+        return (x, aux), new_cache_slots
+
+    body = period_body
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(period_body, prevent_cse=False)
+
+    xs = {"params": params["blocks"]}
+    if cache is not None:
+        xs["cache"] = cache["blocks"]
+    (x, aux_total), new_block_cache = jax.lax.scan(body, (x, aux_total), xs)
+
+    x = apply_norm(cfg, x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"blocks": new_block_cache,
+                     "cur_len": jnp.asarray(S, jnp.int32)}
+    elif mode == "decode":
+        new_cache = {"blocks": new_block_cache, "cur_len": cur_len + 1}
+    return logits, new_cache, aux_total, x
+
+
+def mtp_logits(cfg, params: Params, hidden: jax.Array, tokens: jax.Array
+               ) -> jax.Array:
+    """DeepSeek MTP: predict token t+2 from (hidden_t, embed(token_{t+1}))."""
+    p = params["mtp"]
+    nxt = jnp.take(params["embed"], jnp.roll(tokens, -1, axis=1), axis=0)
+    h = jnp.concatenate([hidden, nxt.astype(hidden.dtype)], axis=-1)
+    h = jnp.einsum("bsd,de->bse", h, p["proj"])
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    hh = apply_norm(cfg, h, p["norm1"])
+    h = h + attn_mod.attend(cfg, p["attn"], hh, positions, kind="causal")
+    hh = apply_norm(cfg, h, p["norm2"])
+    h = h + apply_mlp(cfg, p["ffn"], hh)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, head)
+
+
+# ---------------------------------------------------------------------------
+# Loss / train objective
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits, _, aux, hidden = forward(
+        cfg, params, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_inputs=batch.get("enc_inputs"),
+        mode="train")
+    labels = batch["labels"]
+    npfx = cfg.vlm_prefix
+    if npfx and "prefix_embeds" in batch:
+        logits = logits[:, npfx:]
+    loss = cross_entropy(logits[:, :-1], labels[:, 1:],
+                         mask=batch.get("loss_mask"))
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux
+    if cfg.mtp:
+        l2 = mtp_logits(cfg, params, hidden, batch["tokens"])
+        if npfx and "prefix_embeds" in batch:
+            l2 = l2[:, npfx:]
+        loss = loss + 0.3 * cross_entropy(l2[:, :-2], labels[:, 2:])
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (abstract-friendly: only shapes matter)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, cur_len: int = 0) -> Tree:
+    """Zero-filled decode cache with the right stacked structure."""
+    dtype = jnp.dtype(cfg.dtype)
+    plan = cfg.layer_plan()
+    P = cfg.n_periods
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    kv = cfg.n_kv_heads
+    blocks: Dict[str, Any] = {}
+    for s, (mixer, _) in enumerate(plan):
+        slot: Dict[str, Any] = {}
+        if mixer == "attn":
+            W = cfg.sliding_window or 0
+            S = min(max_len, W) if W else max_len
+            slot["self"] = {"k": jnp.zeros((P, batch, S, kv, hd), dtype),
+                            "v": jnp.zeros((P, batch, S, kv, hd), dtype)}
+            if cfg.cross_attn:
+                slot["cross"] = {"k": jnp.zeros((P, batch, cfg.enc_seq, kv, hd), dtype),
+                                 "v": jnp.zeros((P, batch, cfg.enc_seq, kv, hd), dtype)}
+        elif mixer == "mla":
+            m = cfg.mla
+            slot["self"] = {
+                "ckv": jnp.zeros((P, batch, max_len, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((P, batch, max_len, m.qk_rope_head_dim), dtype)}
+        elif mixer == "mamba":
+            slot["self"] = {
+                "ssm": jnp.zeros((P, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((P, batch, cfg.conv_width - 1, cfg.d_inner), dtype)}
+        blocks[f"slot{s}"] = slot
+    return {"blocks": blocks, "cur_len": jnp.asarray(cur_len, jnp.int32)}

@@ -1,0 +1,204 @@
+"""Mixture-of-Experts with sort-based capacity dispatch + shard_map EP.
+
+TPU/pjit design:
+- Token->expert positions come from a stable argsort (O(T·k) memory) instead
+  of a (T, E) cumsum or a (T, E, C) one-hot einsum — the only layout that
+  stays feasible at 256 experts x 1M tokens.
+- Under a production mesh the FFN runs inside ``shard_map``: every (pod,data)
+  shard routes its *local* tokens (routing is replicated across "model"),
+  each "model" shard computes only its resident experts (EP when E divides
+  the axis; otherwise all experts local with the hidden dim TP-sharded,
+  e.g. mixtral's 8 experts on 16 chips), and a single ``psum`` over "model"
+  combines — the same collective a dense TP FFN needs.
+- FSDP'd expert weights are all-gathered over "data" inside the shard, per
+  layer (ZeRO-3 semantics).
+- Capacity overflow drops tokens (residual passes through); an aux
+  load-balancing loss discourages it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder, Params
+
+
+def init_moe(cfg, b: ParamBuilder, d_model: int, d_ff: int) -> None:
+    E = cfg.n_experts
+    b.make("router", (d_model, E), (None, None), scale=0.02)  # replicated (tiny)
+    b.make("w_gate", (E, d_model, d_ff), ("experts", "embed", "ff"))
+    b.make("w_up", (E, d_model, d_ff), ("experts", "embed", "ff"))
+    b.make("w_down", (E, d_ff, d_model), ("experts", "ff", "embed"))
+    if cfg.n_shared_experts:
+        ffs = d_ff * cfg.n_shared_experts
+        b.make("shared_w_gate", (d_model, ffs), ("embed", "ff"))
+        b.make("shared_w_up", (d_model, ffs), ("embed", "ff"))
+        b.make("shared_w_down", (ffs, d_model), ("ff", "embed"))
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    cap = int(math.ceil(n_tokens * top_k / n_experts * capacity_factor))
+    return max(8, -(-cap // 8) * 8)
+
+
+def _moe_compute(cfg, xt: jax.Array, router: jax.Array, wg, wu, wd,
+                 e_start, E_total: int,
+                 owner_stride: int = 0, owner_idx=None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Local-token MoE. xt (T, d); wg/wu/wd hold E_loc (resident) experts.
+
+    Resident-expert mapping: contiguous block starting at ``e_start``
+    (default), or strided — expert e resident iff e % owner_stride ==
+    owner_idx with local index e // owner_stride (the 2D-EP layout after an
+    all-gather over "data"). Returns the partial output from resident
+    experts only (caller psums across the sharded axes).
+    """
+    T, d = xt.shape
+    E_loc = wg.shape[0]
+    k = cfg.moe_top_k
+    C = moe_capacity(T, E_total, k, cfg.capacity_factor)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux
+    density = jnp.bincount(expert_ids[:, 0], length=E_total) / T
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * E_total
+
+    # stable-sort rank within expert (FIFO drop policy)
+    eid = expert_ids.reshape(T * k)
+    order = jnp.argsort(eid, stable=True)
+    se = eid[order]
+    starts = jnp.searchsorted(se, jnp.arange(E_total, dtype=se.dtype))
+    rank_sorted = jnp.arange(T * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(rank_sorted)
+
+    if owner_stride:
+        local = (eid % owner_stride) == owner_idx
+        le = eid // owner_stride
+    else:
+        local = (eid >= e_start) & (eid < e_start + E_loc)
+        le = eid - e_start
+    keep = (pos < C) & local
+    le_safe = jnp.where(keep, le, 0)
+    pos_safe = jnp.where(keep, pos, C - 1)
+
+    xk = jnp.broadcast_to(xt[:, None, :], (T, k, d)).reshape(T * k, d)
+    buf = jnp.zeros((E_loc, C, d), xt.dtype)
+    buf = buf.at[le_safe, pos_safe].add(jnp.where(keep[:, None], xk, 0))
+
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd)                  # (E_loc, C, d)
+
+    ytk = out_buf[le_safe, pos_safe]
+    ytk = jnp.where(keep[:, None], ytk, 0)
+    y = jnp.sum((ytk * gate_vals.reshape(T * k, 1).astype(ytk.dtype))
+                .reshape(T, k, d), axis=1)
+    return y, aux.astype(jnp.float32)
+
+
+def apply_moe(cfg, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss). Uses shard_map EP under a mesh."""
+    from repro.launch import context
+    from repro.launch.mesh import dp_axes
+
+    B, S, d = x.shape
+    E = cfg.n_experts
+    mesh = context.current_mesh()
+
+    if mesh is None or "model" not in mesh.axis_names:
+        y, aux = _moe_compute(cfg, x.reshape(B * S, d), p["router"],
+                              p["w_gate"], p["w_up"], p["w_down"], 0, E)
+        y = y.reshape(B, S, d)
+    else:
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+        dp = dp_axes(mesh)
+        dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+        tp = mesh.shape["model"]
+        data_n = mesh.shape.get("data", 1)
+        expert_2d = E % (tp * data_n) == 0      # 2D EP: experts over data x model
+        expert_on_model = E % tp == 0
+        fsdp_ax = "data" if cfg.fsdp else None
+        if expert_2d:
+            wspec = wd_spec = P(("data", "model"), None, None)
+        elif expert_on_model:
+            wspec = P("model", fsdp_ax, None)
+            wd_spec = P("model", None, fsdp_ax)
+        else:
+            wspec = P(None, fsdp_ax, "model")
+            wd_spec = P(None, "model", fsdp_ax)
+        # decode with tiny batch: tokens replicated across DP (B=1 long-context)
+        x_spec = P(dp, None, None) if B % dp_total == 0 else P(None, None, None)
+
+        # Token-gather serving mode (§Perf it.4b): with 2D EP the weights are
+        # fully resident (1 expert/device for deepseek); when the token bytes
+        # are far below the per-layer weight-gather bytes (decode steps),
+        # all-gather the *tokens* over "data" instead — expert weights never
+        # move: 3 GB/layer of fp32 weight gathers -> ~4 MB of token traffic.
+        d_ff = p["w_gate"].shape[-1]
+        weight_gather_bytes = (E // tp) * 3 * d * d_ff * 2
+        token_bytes = B * S * d * 2
+        token_gather = expert_2d and token_bytes * 8 < weight_gather_bytes \
+            and B % dp_total == 0
+
+        def f(x_loc, router, wg, wu, wd):
+            Bl, Sl, _ = x_loc.shape
+            m_idx = jax.lax.axis_index("model")
+            if token_gather:
+                d_idx = jax.lax.axis_index("data")
+                xt_full = jax.lax.all_gather(x_loc, "data", axis=0, tiled=True)
+                Tl = xt_full.shape[0] * Sl
+                y, aux = _moe_compute(
+                    cfg, xt_full.reshape(Tl, d), router, wg, wu, wd, 0, E,
+                    owner_stride=tp * data_n, owner_idx=d_idx * tp + m_idx)
+                y = jax.lax.psum(y, ("data", "model"))
+                y = jax.lax.dynamic_slice_in_dim(y, d_idx * Bl * Sl,
+                                                 Bl * Sl, 0)
+            elif expert_2d:
+                # gathered-over-data layout: shard m holds experts e with
+                # e % tp == m at local index e // tp (strided ownership)
+                wg = jax.lax.all_gather(wg, "data", axis=0, tiled=True)
+                wu = jax.lax.all_gather(wu, "data", axis=0, tiled=True)
+                wd = jax.lax.all_gather(wd, "data", axis=0, tiled=True)
+                y, aux = _moe_compute(cfg, x_loc.reshape(Bl * Sl, d), router,
+                                      wg, wu, wd, 0, E,
+                                      owner_stride=tp, owner_idx=m_idx)
+                y = jax.lax.psum(y, "model")
+            else:
+                if cfg.fsdp:
+                    wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+                    wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+                    wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+                e_start = m_idx * (E // tp) if expert_on_model else 0
+                y, aux = _moe_compute(cfg, x_loc.reshape(Bl * Sl, d), router,
+                                      wg, wu, wd, e_start, E)
+                y = jax.lax.psum(y, "model")
+            aux = jax.lax.pmean(aux, dp + ("model",))
+            return y.reshape(Bl, Sl, d), aux
+
+        y, aux = jax.shard_map(
+            f, mesh=mesh,
+            in_specs=(x_spec, P(None, None), wspec, wspec, wd_spec),
+            out_specs=(x_spec, P()),
+            check_vma=False,  # B=1 decode replicates tokens across DP shards
+        )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+    if cfg.n_shared_experts:
+        xt = x.reshape(B * S, d)
+        sg = jnp.einsum("td,df->tf", xt, p["shared_w_gate"])
+        su = jnp.einsum("td,df->tf", xt, p["shared_w_up"])
+        ys = jnp.einsum("tf,fd->td", jax.nn.silu(sg) * su, p["shared_w_down"])
+        y = y + ys.reshape(B, S, d)
+    return y, aux

@@ -1,0 +1,51 @@
+"""Samplers: DDIM (eps-prediction, UNet) and rectified-flow Euler (DiT).
+
+Requests in one CSP batch sit at *different* step indices (paper Fig. 1);
+all per-step coefficients are per-request vectors broadcast per patch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csp import CSP
+from repro.models import diffusion as dm
+
+
+def ddim_schedule(total_steps: int, T: int = 1000):
+    betas = np.linspace(1e-4, 0.02, T, dtype=np.float64)
+    ab = np.cumprod(1.0 - betas)
+    ts = np.linspace(T - 1, 0, total_steps).round().astype(np.int64)
+    return jnp.asarray(ts), jnp.asarray(ab[ts], jnp.float32)
+
+
+def sampler_step(cfg: dm.DiffusionConfig, params, csp: CSP,
+                 patches: jax.Array, step_req: jax.Array, total_steps: int,
+                 text: jax.Array, block_hook=None) -> jax.Array:
+    """Advance every request one denoising step. step_req: (R,) int32, the
+    number of steps already taken (0 .. total_steps-1)."""
+    seg = jnp.asarray(csp.patch_req)
+    if cfg.kind == "dit":
+        # rectified flow: t goes 1 -> 0; x_{t+dt} = x + (t_next - t) * v
+        t_cur = 1.0 - step_req.astype(jnp.float32) / total_steps
+        t_next = 1.0 - (step_req.astype(jnp.float32) + 1) / total_steps
+        v = dm.denoise_patched(cfg, params, csp, patches,
+                               t_cur * 1000.0, text, block_hook)
+        dt = (t_next - t_cur)[seg][:, None, None, None]
+        return patches + dt * v
+    # DDIM (eta=0)
+    ts, ab = ddim_schedule(total_steps)
+    k = step_req
+    ab_k = ab[k][seg][:, None, None, None]
+    ab_next = jnp.where(k + 1 < total_steps, ab[jnp.minimum(k + 1,
+                                                            total_steps - 1)],
+                        1.0)[seg][:, None, None, None]
+    t_model = ts[k].astype(jnp.float32)
+    eps = dm.denoise_patched(cfg, params, csp, patches, t_model, text,
+                             block_hook)
+    x0 = (patches - jnp.sqrt(1 - ab_k) * eps) / jnp.sqrt(ab_k)
+    return jnp.sqrt(ab_next) * x0 + jnp.sqrt(1 - ab_next) * eps

@@ -1,0 +1,47 @@
+"""Tiny VAE decoder + text-encoder stub (Preparation / Postprocessing stages).
+
+The paper ports Stable Diffusion in three stages; prompt encoding and VAE
+decode bracket the denoising loop. Offline we stub the heavy pretrained
+pieces with small deterministic substitutes that preserve shapes and cost
+structure: a pixel-shuffle conv decoder (x8 upsample, latent 4ch -> RGB) and
+a hash-seeded Gaussian prompt embedding.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ParamBuilder
+
+
+def init_vae(key: jax.Array, latent_channels: int = 4, width: int = 32):
+    b = ParamBuilder(key, jnp.float32)
+    b.make("conv1/w", (3, 3, latent_channels, width), (None,) * 4, scale=0.1)
+    b.make("conv1/b", (width,), (None,), init="zeros")
+    b.make("conv2/w", (3, 3, width, 3 * 64), (None,) * 4, scale=0.1)
+    b.make("conv2/b", (3 * 64,), (None,), init="zeros")
+    return b.params
+
+
+def vae_decode(params, latent: jax.Array) -> jax.Array:
+    """(N, h, w, 4) -> (N, 8h, 8w, 3) via pixel shuffle."""
+    h = jax.lax.conv_general_dilated(
+        latent, params["conv1"]["w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["conv1"]["b"]
+    h = jax.nn.silu(h)
+    h = jax.lax.conv_general_dilated(
+        h, params["conv2"]["w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["conv2"]["b"]
+    N, hh, ww, _ = h.shape
+    h = h.reshape(N, hh, ww, 8, 8, 3).transpose(0, 1, 3, 2, 4, 5)
+    return jnp.tanh(h.reshape(N, hh * 8, ww * 8, 3))
+
+
+def encode_prompt(prompt: str, n_text: int, d_text: int) -> jax.Array:
+    """Deterministic prompt-embedding stub (frozen text encoder stand-in)."""
+    seed = int.from_bytes(hashlib.sha256(prompt.encode()).digest()[:4], "little")
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n_text, d_text)) * 0.3, jnp.float32)

@@ -1,0 +1,115 @@
+"""AdamW with global-norm clipping, pure-pytree implementation.
+
+Moments are stored in ``cfg.opt_state_dtype`` — bf16 for the 671B config,
+where fp32 moments would not fit v5e HBM at 512 chips (see DESIGN.md §5).
+Moment trees inherit the parameter shardings (ZeRO-compatible: when cfg.fsdp
+shards params over "data", moments shard identically for free).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_init(params, dtype: str = "float32") -> Dict[str, Any]:
+    dt = jnp.dtype(dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, opt, *, lr: float = 3e-4, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: float = 1.0) -> Tuple[Any, Dict[str, Any]]:
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt["m"])
+    flat_v = jax.tree_util.tree_leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, beta1=0) — T5X-style, for the 671B
+# config where even bf16 AdamW moments leave no activation headroom.
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params, dtype: str = "float32"):
+    dt = jnp.dtype(dtype)
+
+    def vr(p):
+        return jnp.zeros(p.shape[:-1] if p.ndim >= 2 else p.shape, dt)
+
+    def vc(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], dt) if p.ndim >= 2
+                else jnp.zeros((), dt))
+
+    return {
+        "v_row": jax.tree_util.tree_map(vr, params),
+        "v_col": jax.tree_util.tree_map(vc, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, opt, *, lr: float = 1e-3,
+                     beta2: float = 0.999, eps: float = 1e-30,
+                     clip_threshold: float = 1.0,
+                     weight_decay: float = 0.0):
+    step = opt["step"] + 1
+
+    def upd(p, g, vr, vc):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if p.ndim >= 2:
+            vr32 = beta2 * vr.astype(jnp.float32) + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc32 = beta2 * vc.astype(jnp.float32) + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = (vr32[..., None] * vc32[..., None, :]
+                     / jnp.maximum(jnp.mean(vr32, axis=-1,
+                                            keepdims=True)[..., None], eps))
+            u = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+        else:
+            vr32 = beta2 * vr.astype(jnp.float32) + (1 - beta2) * g2
+            vc32 = vc.astype(jnp.float32)
+            u = g32 * jax.lax.rsqrt(jnp.maximum(vr32, eps))
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        new_p = (p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+                 ).astype(p.dtype)
+        return new_p, vr32.astype(vr.dtype), vc32.astype(vc.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_vr = jax.tree_util.tree_leaves(opt["v_row"])
+    flat_vc = jax.tree_util.tree_leaves(opt["v_col"])
+    out = [upd(p, g, r, c) for p, g, r, c in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_vr = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_vc = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_params, {"v_row": new_vr, "v_col": new_vc, "step": step}

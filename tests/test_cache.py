@@ -1,0 +1,75 @@
+"""Patch-cache semantics: Common/New/Expired sets, reuse masks, updates."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import PatchCache, bucket_size, masked_block_apply
+from repro.core.cache_predictor import ThresholdPredictor
+
+
+def test_sync_sets():
+    c = PatchCache(capacity=8)
+    r1 = c.sync([1, 2, 3])
+    assert r1.n_new == 3 and r1.n_common == 0 and r1.n_expired == 0
+    r2 = c.sync([2, 3, 4])
+    assert r2.n_new == 1 and r2.n_common == 2 and r2.n_expired == 1
+    # slot stability for surviving uids
+    assert r2.slots[0] == r1.slots[1]
+    assert r2.slots[1] == r1.slots[2]
+    # expired slot becomes reusable
+    r3 = c.sync([4, 5, 6, 7, 8, 9, 10, 11])
+    assert r3.n_new == 7
+
+
+def test_capacity_guard():
+    c = PatchCache(capacity=2)
+    c.sync([1, 2])
+    try:
+        c.sync([1, 2, 3])
+        assert False, "expected capacity error"
+    except RuntimeError:
+        pass
+
+
+def test_reuse_and_update_flow():
+    c = PatchCache(capacity=4)
+    pred = ThresholdPredictor(tau=1e-3)
+    x = jnp.ones((3, 2, 2, 1))
+    s = c.sync([1, 2, 3])
+    m = np.asarray(c.reuse_mask(x, s, pred))
+    assert not m.any()                        # cold cache: all compute
+    y = x * 2
+    c.update(s, x, y, jnp.asarray(~m))
+    # same inputs again -> all reusable, outputs come from cache
+    s2 = c.sync([1, 2, 3])
+    m2 = np.asarray(c.reuse_mask(x, s2, pred))
+    assert m2.all()
+    np.testing.assert_allclose(np.asarray(c.cached_outputs(s2)), np.asarray(y))
+    # perturb one patch beyond tau -> only that one recomputes
+    x3 = x.at[1].add(1.0)
+    s3 = c.sync([1, 2, 3])
+    m3 = np.asarray(c.reuse_mask(x3, s3, pred))
+    assert m3[0] and not m3[1] and m3[2]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 5000))
+def test_bucket_monotone(n):
+    b = bucket_size(n)
+    assert b >= n
+    if n > 0:
+        assert b <= 2 * n or b <= 8
+
+
+def test_masked_block_apply():
+    patches = jnp.arange(12.0).reshape(6, 2, 1, 1)
+    cached = jnp.full((6, 2, 1, 1), -1.0)
+    reuse = np.array([True, False, True, False, True, True])
+    out, bucket = masked_block_apply(lambda x: x * 10, patches, reuse, cached)
+    out = np.asarray(out)
+    for i in range(6):
+        if reuse[i]:
+            np.testing.assert_allclose(out[i], -1.0)
+        else:
+            np.testing.assert_allclose(out[i], np.asarray(patches[i]) * 10)
+    assert bucket >= 2

@@ -1,0 +1,68 @@
+"""CSP format invariants — property-based (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.csp import NEIGHBOR_OFFSETS, build_csp, gcd_patch_size
+
+res_strategy = st.lists(
+    st.sampled_from([(16, 16), (24, 24), (32, 32), (16, 32), (48, 16)]),
+    min_size=1, max_size=8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(res_strategy)
+def test_offsets_and_sorting(res):
+    csp = build_csp(res)
+    # requests sorted by resolution
+    key = csp.res[:, 0] * 10_000 + csp.res[:, 1]
+    assert np.all(np.diff(key) >= 0)
+    # CSR offsets consistent with grids
+    counts = np.diff(csp.request_offset)
+    assert np.all(counts == csp.grid[:, 0] * csp.grid[:, 1])
+    assert csp.total == counts.sum()
+    # groups partition requests and patches contiguously
+    assert csp.group_count.sum() == csp.n_requests
+    assert csp.group_offset[0] == 0 and csp.group_offset[-1] == csp.total
+    # patch_req consistent with request_offset
+    for i in range(csp.n_requests):
+        sl = csp.patches_of(i)
+        assert np.all(csp.patch_req[sl] == i)
+
+
+@settings(max_examples=30, deadline=None)
+@given(res_strategy)
+def test_neighbors_symmetric(res):
+    csp = build_csp(res)
+    # neighbor relation is symmetric with the mirrored slot
+    mirror = {0: 1, 1: 0, 2: 3, 3: 2, 4: 7, 7: 4, 5: 6, 6: 5}
+    for j in range(csp.total):
+        for s in range(8):
+            n = csp.neighbors[j, s]
+            if n >= 0:
+                assert csp.neighbors[n, mirror[s]] == j
+                # same request only
+                assert csp.patch_req[n] == csp.patch_req[j]
+
+
+@settings(max_examples=30, deadline=None)
+@given(res_strategy)
+def test_neighbor_geometry(res):
+    csp = build_csp(res)
+    for j in range(csp.total):
+        r, c = csp.patch_rc[j]
+        i = csp.patch_req[j]
+        gh, gw = csp.grid[i]
+        for s, (dr, dc) in enumerate(NEIGHBOR_OFFSETS):
+            n = csp.neighbors[j, s]
+            inb = 0 <= r + dr < gh and 0 <= c + dc < gw
+            assert (n >= 0) == inb
+            if inb:
+                assert tuple(csp.patch_rc[n]) == (r + dr, c + dc)
+
+
+def test_gcd_patch():
+    assert gcd_patch_size([(16, 16), (24, 24)]) == 8
+    assert gcd_patch_size([(32, 32)]) == 32
+    assert gcd_patch_size([(32, 32)], cap=8) == 8
+    assert gcd_patch_size([(16, 16), (24, 24), (32, 32)]) == 8

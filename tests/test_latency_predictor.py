@@ -1,0 +1,48 @@
+"""Throughput Analyzer: MLP latency predictor accuracy (paper: <3.7% err)."""
+import numpy as np
+
+from repro.core.latency_model import (analytic_step_latency,
+                                      fit_latency_model, make_features)
+
+PPR = [4, 9, 16]
+
+
+def _dataset(n=200, seed=0, noise=0.01):
+    rng = np.random.default_rng(seed)
+    feats, lats = [], []
+    for _ in range(n):
+        counts = rng.integers(0, 5, size=3)
+        if counts.sum() == 0:
+            counts[rng.integers(3)] = 1
+        lat = analytic_step_latency(counts, PPR)
+        lat *= 1 + rng.normal() * noise
+        feats.append(make_features(counts, PPR))
+        lats.append(lat)
+    return np.stack(feats), np.asarray(lats)
+
+
+def test_mlp_beats_paper_error_bar():
+    X, y = _dataset()
+    m = fit_latency_model(X, y, epochs=1500)
+    # paper reports <3.7% relative error on the 20% eval split
+    assert m.eval_err < 0.037, m.eval_err
+
+
+def test_predictor_monotone_in_load():
+    X, y = _dataset()
+    m = fit_latency_model(X, y, epochs=1500)
+    lo = m.predict(make_features([1, 0, 0], PPR))
+    hi = m.predict(make_features([4, 4, 4], PPR))
+    assert hi > lo
+
+
+def test_cache_predictor_learns_threshold():
+    from repro.core.cache_predictor import train_mlp, predictor_features
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    delta = 10 ** rng.uniform(-6, 0, size=512)
+    feats = np.asarray(predictor_features(jnp.asarray(delta), 0.5, 0.5,
+                                          jnp.ones_like(jnp.asarray(delta))))
+    labels = (delta < 3e-3).astype(np.float32)
+    params, acc = train_mlp(feats, labels, epochs=300)
+    assert acc > 0.95, acc

@@ -1,0 +1,37 @@
+"""split/merge round-trip + group view — property-based."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.patching import (group_images, merge, split, ungroup_images)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from([(16, 16), (24, 24), (32, 32)]),
+                min_size=1, max_size=6),
+       st.integers(0, 2 ** 31 - 1))
+def test_round_trip(res, seed):
+    rng = np.random.default_rng(seed)
+    imgs = [jnp.asarray(rng.normal(size=(h, w, 4)), jnp.float32)
+            for h, w in res]
+    csp, patches = split(imgs)
+    back = merge(csp, patches)
+    for a, b in zip(imgs, back):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from([(16, 16), (24, 24), (32, 32)]),
+                min_size=1, max_size=6))
+def test_group_view_round_trip(res):
+    rng = np.random.default_rng(1)
+    imgs = [jnp.asarray(rng.normal(size=(h, w, 4)), jnp.float32)
+            for h, w in res]
+    csp, patches = split(imgs)
+    for g in range(csp.n_groups):
+        grp = group_images(csp, patches, g)
+        assert grp.shape[1:3] == tuple(csp.group_res[g])
+        back = ungroup_images(csp, grp, g)
+        np.testing.assert_allclose(np.asarray(back),
+                                   np.asarray(patches[csp.group_slice(g)]))

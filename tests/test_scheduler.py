@@ -1,0 +1,85 @@
+"""Algorithm 1 properties: schedulability, hopeless-drop, mode switch, FCFS."""
+import numpy as np
+import pytest
+
+from repro.core.requests import Request
+from repro.core.scheduler import Scheduler, SchedulerConfig
+
+RES = [(16, 16), (24, 24), (32, 32)]
+SA = {(16, 16): 1.0, (24, 24): 1.5, (32, 32): 2.5}
+PPR = {(16, 16): 4, (24, 24): 9, (32, 32): 16}
+
+
+def pred(reqs):
+    # simple additive surrogate: 10ms + 2ms per patch
+    return 0.01 + 0.002 * sum(PPR[r.resolution] for r in reqs)
+
+
+def mk(rid, res, arrival, slo_abs, steps=10, done=0):
+    r = Request(rid=rid, resolution=res, arrival=arrival, slo=slo_abs,
+                total_steps=steps)
+    r.steps_done = done
+    return r
+
+
+def sched(policy="slo", **kw):
+    return Scheduler(SchedulerConfig(policy=policy, **kw), patch=8,
+                     standalone_latency=SA, predict_step_latency=pred)
+
+
+def test_admits_feasible():
+    s = sched()
+    wait = [mk(1, (16, 16), 0, slo_abs=10.0)]
+    admitted, dropped = s.schedule(wait, [], now=0.0)
+    assert [r.rid for r in admitted] == [1] and not dropped
+
+
+def test_drops_hopeless():
+    s = sched()
+    # 10 steps x >=18ms/step > 50ms deadline: impossible
+    wait = [mk(1, (16, 16), 0, slo_abs=0.05)]
+    admitted, dropped = s.schedule(wait, [], now=0.0)
+    assert not admitted and [r.rid for r in dropped] == [1]
+
+
+def test_schedulability_protects_active():
+    s = sched()
+    # active task with a deadline met only at the current batch latency
+    active = mk(0, (32, 32), 0, slo_abs=10 * pred([mk(0, (32, 32), 0, 1)]) + 1e-4,
+                steps=10)
+    active.state = "active"
+    big = mk(1, (32, 32), 0, slo_abs=100.0)
+    admitted, dropped = s.schedule([big], [active], now=0.0)
+    assert not admitted          # admitting would push active past deadline
+    assert not dropped           # but the candidate itself is feasible later
+
+
+def test_least_slack_first():
+    s = sched(slack_relaxed=1e9)    # force urgency mode (never switch)
+    urgent = mk(1, (16, 16), 0, slo_abs=0.5)
+    relaxed = mk(2, (16, 16), 0, slo_abs=50.0)
+    admitted, _ = s.schedule([relaxed, urgent], [], now=0.0)
+    assert admitted[0].rid == 1
+
+
+def test_throughput_mode_prefers_cheap():
+    s = sched(slack_relaxed=0.0)    # everything is "relaxed" -> throughput mode
+    cheap = mk(1, (16, 16), 0, slo_abs=1000.0)
+    pricey = mk(2, (32, 32), 0, slo_abs=1000.0)
+    admitted, _ = s.schedule([pricey, cheap], [], now=0.0)
+    assert admitted[0].rid == 1     # smallest marginal latency first
+
+
+def test_fcfs_order():
+    s = sched(policy="fcfs")
+    a = mk(1, (32, 32), 0.0, slo_abs=1000.0)
+    b = mk(2, (16, 16), 0.5, slo_abs=1000.0)
+    admitted, _ = s.schedule([b, a], [], now=1.0)
+    assert [r.rid for r in admitted][0] == 1
+
+
+def test_batch_limits():
+    s = sched()
+    wait = [mk(i, (16, 16), 0, slo_abs=1000.0) for i in range(40)]
+    admitted, _ = s.schedule(wait, [], now=0.0)
+    assert len(admitted) <= s.cfg.max_batch_requests
