@@ -98,3 +98,17 @@ def workload(eng, qps, duration=40.0, slo_scale=5.0, steps=10, seed=0,
              mix=None):
     return poisson_workload(qps, duration, RES, slo_scale, eng.sa,
                             steps=steps, seed=seed, mix=mix)
+
+
+def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
+                 steps=10, scale=1.0, record_timeseries=True):
+    """Multi-replica sim cluster over the benchmark resolution ladder.
+    Engines are synthetic sim (no tensors) with the patch-aware latency
+    surrogate; pair with ``repro.cluster.simtools.cluster_workload`` so
+    SLOs use the same standalone normalizers."""
+    from repro.cluster import Cluster, ClusterConfig, sim_engine_factory
+    factory = sim_engine_factory(RES, steps=steps, scale=scale)
+    return Cluster(factory, RES,
+                   ClusterConfig(n_replicas=n_replicas, policy=policy,
+                                 autoscaler=autoscaler,
+                                 record_timeseries=record_timeseries))

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the fast deterministic suite (slow-marked e2e tests are
+# excluded via pytest.ini). Usage: scripts/tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,51 @@
+"""Multi-replica cluster serving on top of the steppable PatchedServe
+engine (ROADMAP: "serves heavy traffic from millions of users").
+
+Layers:
+
+- ``replica``    — one engine + cluster-side state (cold start, busy
+                   horizon, utilization);
+- ``router``     — frontend queue with pluggable dispatch policies
+                   (round_robin / join_shortest_queue / least_slack /
+                   resolution_affinity) and the affinity partitioner;
+- ``autoscaler`` — reactive replica scaling from queue-slack and SLO
+                   attainment, cold start charged honestly;
+- ``driver``     — the discrete-event loop interleaving all replicas on
+                   one sim clock;
+- ``metrics``    — fleet + per-replica aggregation (SLO satisfaction,
+                   goodput, utilization, queue time series);
+- ``simtools``   — patch-aware sim engine factories shared by tests,
+                   benchmarks and examples.
+
+Quick start::
+
+    from repro.cluster import Cluster, ClusterConfig, sim_engine_factory
+    from repro.cluster.simtools import DEFAULT_RES, cluster_workload
+
+    cl = Cluster(sim_engine_factory(), DEFAULT_RES,
+                 ClusterConfig(n_replicas=4, policy="least_slack"))
+    fleet = cl.run(cluster_workload(qps=24.0, duration=30.0))
+    print(fleet.summary())
+"""
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.driver import Cluster, ClusterConfig
+from repro.cluster.metrics import ClusterMetrics, ReplicaReport
+from repro.cluster.replica import Replica
+from repro.cluster.router import (POLICIES, DispatchPolicy,
+                                  JoinShortestQueue, LeastSlack,
+                                  ResolutionAffinity, RoundRobin, Router,
+                                  allocate_replica_counts, make_policy,
+                                  partition_resolutions)
+from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
+                                    cluster_workload, sim_engine_factory,
+                                    standalone_latencies)
+
+__all__ = [
+    "Autoscaler", "AutoscalerConfig", "Cluster", "ClusterConfig",
+    "ClusterMetrics", "ReplicaReport", "Replica", "Router",
+    "DispatchPolicy", "RoundRobin", "JoinShortestQueue", "LeastSlack",
+    "ResolutionAffinity", "POLICIES", "make_policy",
+    "partition_resolutions", "allocate_replica_counts",
+    "DEFAULT_RES", "PatchAwareLatency", "cluster_workload",
+    "sim_engine_factory", "standalone_latencies",
+]

@@ -1,0 +1,115 @@
+"""Reactive autoscaler — replica count follows queue slack and SLO
+attainment (DiffServe-style query-aware scaling; see PAPERS.md).
+
+Signals, evaluated by the driver at every sim event:
+
+- **backlog pressure**: mean predicted drain seconds per dispatchable
+  replica (from each engine's latency predictor via
+  ``Replica.backlog``);
+- **frontend pressure**: requests parked in the router queue per
+  dispatchable replica (covers the cold-start window, when work exists
+  but nobody can take it);
+- **SLO attainment** over a sliding window of recent outcomes
+  (completions met/missed + drops).
+
+Scale-up spawns a replica that serves traffic only after ``cold_start``
+seconds — the model-load/compile penalty is charged honestly: arrivals
+keep queueing meanwhile. Scale-down marks a victim as *retiring*: it
+takes nothing new, drains, and is only then retired. A shared cooldown
+prevents up/down flapping.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Optional, Sequence, Tuple
+
+from repro.cluster.replica import Replica
+from repro.core.serving import TickEvents
+
+
+@dataclass
+class AutoscalerConfig:
+    min_replicas: int = 1
+    max_replicas: int = 8
+    cold_start: float = 2.0          # seconds before a new replica serves
+    scale_up_backlog: float = 1.5    # mean drain-seconds per replica
+    scale_up_frontend: float = 2.0   # frontend requests per replica
+    scale_down_backlog: float = 0.2
+    slo_target: float = 0.95
+    # hysteresis: retiring needs near-perfect recent attainment AND the idle
+    # condition to hold continuously, else constant load oscillates
+    # (capacity drops -> SLO dips -> scale back up, forever)
+    scale_down_attainment: float = 0.99
+    scale_down_hold: float = 8.0
+    window: float = 10.0             # attainment sliding window (seconds)
+    cooldown: float = 4.0            # min seconds between actions
+
+
+class Autoscaler:
+    def __init__(self, cfg: AutoscalerConfig):
+        self.cfg = cfg
+        self._last_action = -1e18
+        self._idle_since: Optional[float] = None
+        self._outcomes: Deque[Tuple[float, bool]] = deque()
+        self.actions: list = []      # (now, +1 | -1) decision log
+
+    # -- signals -----------------------------------------------------------
+    def observe(self, now: float, events: Sequence[TickEvents]) -> None:
+        """Fold a tick's completions/drops into the attainment window."""
+        for ev in events:
+            for r in ev.completed:
+                self._outcomes.append(
+                    (now, r.finish is not None and r.finish <= r.slo))
+            for r in ev.dropped:
+                self._outcomes.append((now, False))
+        horizon = now - self.cfg.window
+        while self._outcomes and self._outcomes[0][0] < horizon:
+            self._outcomes.popleft()
+
+    def attainment(self) -> Optional[float]:
+        if not self._outcomes:
+            return None
+        return sum(met for _, met in self._outcomes) / len(self._outcomes)
+
+    # -- decision ----------------------------------------------------------
+    def decide(self, now: float, frontend_depth: int,
+               replicas: Sequence[Replica]) -> int:
+        """Returns +1 (spawn), -1 (retire one), or 0. The driver picks the
+        concrete victim / resolution block."""
+        cfg = self.cfg
+        pool = [r for r in replicas if not r.retiring and r.retired_at is None]
+        n = len(pool)
+        backlog = (sum(r.backlog(now) for r in pool) / n) if n else 0.0
+        att = self.attainment()
+
+        idle = (backlog < cfg.scale_down_backlog and frontend_depth == 0
+                and (att is None or att >= cfg.scale_down_attainment))
+        if idle:
+            if self._idle_since is None:
+                self._idle_since = now
+        else:
+            self._idle_since = None
+
+        if now - self._last_action < cfg.cooldown:
+            return 0
+        if n == 0:
+            self._last_action = now
+            self.actions.append((now, +1))
+            return +1
+
+        pressured = (backlog > cfg.scale_up_backlog
+                     or frontend_depth > cfg.scale_up_frontend * n
+                     or (att is not None and att < cfg.slo_target))
+        if pressured and n < cfg.max_replicas:
+            self._idle_since = None
+            self._last_action = now
+            self.actions.append((now, +1))
+            return +1
+
+        if (idle and n > cfg.min_replicas
+                and now - self._idle_since >= cfg.scale_down_hold):
+            self._last_action = now
+            self.actions.append((now, -1))
+            return -1
+        return 0

@@ -1,0 +1,212 @@
+"""Cluster driver — interleaves many steppable ``PatchedServeEngine``s on
+one discrete-event sim clock.
+
+The driver owns global time. Per event it: (1) delivers Poisson arrivals to
+the router frontend, (2) finalizes drained retiring replicas, (3) lets the
+autoscaler add/retire replicas, (4) dispatches the frontend queue via the
+configured policy, (5) ticks every ready, free replica that has work (one
+non-preemptible denoising step each, exactly the single-engine iteration),
+then advances to the next arrival / step-completion / warm-up instant.
+
+Replica construction is policy-aware: under ``resolution_affinity`` the
+fleet's resolution ladder is partitioned (``partition_resolutions``) and
+each replica's engine is built over one block only — so its GCD patch is
+larger and its patch cache sees fewer distinct shapes. All other policies
+build uniform replicas over the full ladder.
+
+Engines must be sim-clock (``EngineConfig.clock == "sim"``); for large
+sweeps build them with ``sim_synthetic=True`` (see
+``repro.cluster.simtools``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.requests import Request
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.metrics import ClusterMetrics, ReplicaReport
+from repro.cluster.replica import Replica
+from repro.cluster.router import (Router, allocate_replica_counts,
+                                  make_policy, partition_resolutions)
+
+Resolution = Tuple[int, int]
+EngineFactory = Callable[[Sequence[Resolution]], "object"]
+
+
+@dataclass
+class ClusterConfig:
+    n_replicas: int = 2
+    policy: str = "round_robin"
+    autoscaler: Optional[AutoscalerConfig] = None
+    record_timeseries: bool = True
+    max_events: int = 2_000_000        # runaway-loop backstop
+
+
+class Cluster:
+    def __init__(self, engine_factory: EngineFactory,
+                 resolutions: Sequence[Resolution], cfg: ClusterConfig):
+        self.make_engine = engine_factory
+        self.resolutions = sorted({tuple(r) for r in resolutions})
+        self.cfg = cfg
+        self.policy = make_policy(cfg.policy)
+        self.router = Router(self.policy)
+        self.autoscaler = Autoscaler(cfg.autoscaler) if cfg.autoscaler else None
+        self.replicas: List[Replica] = []
+        self._next_rid = 0
+        if self.policy.name == "resolution_affinity":
+            self._blocks = partition_resolutions(self.resolutions,
+                                                 cfg.n_replicas)
+            counts = allocate_replica_counts(self._blocks, cfg.n_replicas)
+        else:
+            self._blocks = [list(self.resolutions)]
+            counts = [cfg.n_replicas]
+        for block, c in zip(self._blocks, counts):
+            for _ in range(c):
+                self._spawn(block, now=0.0, cold=0.0)
+
+    # ---------------- fleet mutation ----------------
+
+    def _spawn(self, resolutions: Sequence[Resolution], now: float,
+               cold: float) -> Replica:
+        eng = self.make_engine(list(resolutions))
+        if eng.cfg.clock != "sim":
+            raise ValueError("cluster driver requires sim-clock engines")
+        rep = Replica(self._next_rid, eng, spawn_at=now, cold_start=cold)
+        self._next_rid += 1
+        self.replicas.append(rep)
+        return rep
+
+    def _dispatchable(self) -> List[Replica]:
+        return [r for r in self.replicas
+                if r.retired_at is None and not r.retiring]
+
+    def _scale_up(self, now: float) -> None:
+        cold = self.autoscaler.cfg.cold_start if self.autoscaler else 0.0
+        if self.policy.name == "resolution_affinity":
+            # join the partition block with the worst backlog per server
+            # (uncovered blocks first)
+            def pressure(block):
+                servers = [r for r in self._dispatchable()
+                           if {tuple(x) for x in r.resolutions}
+                           == {tuple(x) for x in block}]
+                if not servers:
+                    return float("inf")
+                return sum(r.backlog(now) for r in servers) / len(servers)
+            block = max(self._blocks, key=pressure)
+        else:
+            block = list(self.resolutions)
+        self._spawn(block, now=now, cold=cold)
+
+    def _scale_down(self, now: float) -> None:
+        cands = self._dispatchable()
+        if self.policy.name == "resolution_affinity":
+            # never retire a block's last server: its resolutions would
+            # become unroutable
+            by_block = {}
+            for r in cands:
+                by_block.setdefault(
+                    frozenset(tuple(x) for x in r.resolutions), []).append(r)
+            cands = [r for grp in by_block.values() if len(grp) > 1
+                     for r in grp]
+        if not cands:
+            return
+        victim = min(cands, key=lambda r: (r.queue_depth, r.backlog(now),
+                                           -r.rid))
+        victim.retiring = True             # drains, then retires
+
+    # ---------------- event loop ----------------
+
+    def run(self, workload: List[Request]) -> ClusterMetrics:
+        """Serve one workload to completion; single-use per Cluster."""
+        pending = sorted(workload, key=lambda r: r.arrival)
+        mts = ClusterMetrics()
+        now = pending[0].arrival if pending else 0.0
+        events = 0
+
+        while pending or self.router.queue \
+                or any(r.has_work for r in self.replicas):
+            events += 1
+            if events > self.cfg.max_events:
+                break
+            progress = False
+
+            while pending and pending[0].arrival <= now:
+                self.router.enqueue(pending.pop(0))
+                progress = True
+
+            for rep in self.replicas:
+                if rep.retiring and rep.retired_at is None \
+                        and not rep.has_work:
+                    rep.retired_at = now
+                    progress = True
+
+            if self.autoscaler:
+                act = self.autoscaler.decide(now, self.router.depth,
+                                             self.replicas)
+                if act > 0:
+                    self._scale_up(now)
+                    progress = True
+                elif act < 0:
+                    self._scale_down(now)
+                    progress = True
+
+            if self.router.dispatch(self._dispatchable(), now):
+                progress = True
+
+            ticked = []
+            for rep in self.replicas:
+                if (rep.retired_at is None and rep.ready_at <= now
+                        and rep.next_free <= now and rep.has_work):
+                    ev = rep.tick(now)
+                    ticked.append(ev)
+                    if ev.stepped or ev.admitted or ev.dropped:
+                        progress = True
+            if self.autoscaler and ticked:
+                self.autoscaler.observe(now, ticked)
+
+            if self.cfg.record_timeseries:
+                mts.queue_ts.append((
+                    now, self.router.depth,
+                    sum(r.queue_depth for r in self.replicas
+                        if r.retired_at is None),
+                    len([r for r in self._dispatchable()
+                         if r.ready_at <= now])))
+
+            # next event: arrival, step completion / warm-up of a loaded
+            # replica, warm-up that could unblock the frontend, or the next
+            # autoscaler decision while work is parked
+            nxt = []
+            if pending:
+                nxt.append(pending[0].arrival)
+            for rep in self.replicas:
+                if rep.retired_at is None and rep.has_work:
+                    nxt.append(max(rep.next_free, rep.ready_at))
+            if self.router.queue:
+                nxt.extend(rep.ready_at for rep in self._dispatchable()
+                           if rep.ready_at > now)
+                if self.autoscaler:
+                    nxt.append(max(
+                        self.autoscaler._last_action
+                        + self.autoscaler.cfg.cooldown, now))
+
+            future = [t for t in nxt if t > now]
+            if progress and nxt:
+                now = max(now, min(nxt))
+            elif future:
+                now = min(future)
+            else:
+                # nothing can ever serve what's left
+                for r in self.router.queue:
+                    r.state = "dropped"
+                mts.router_dropped += len(self.router.queue)
+                self.router.queue.clear()
+                break
+
+        mts.span = now
+        for rep in self.replicas:
+            mts.per_replica[rep.rid] = ReplicaReport(
+                metrics=rep.engine.metrics, patch=rep.patch,
+                resolutions=[tuple(r) for r in rep.resolutions],
+                busy_time=rep.busy_time, alive_time=rep.alive_span(now))
+        return mts

@@ -1,0 +1,117 @@
+"""Cluster-wide metric aggregation: fleet + per-replica SLO satisfaction,
+goodput, utilization, and queue-depth / replica-count time series.
+
+Fleet numbers fold every replica's engine ``Metrics`` together with
+router-level drops (requests that died in the frontend queue because no
+replica could ever take them). Utilization charges a replica's whole
+lifetime — cold start included — as capacity, so aggressive scaling that
+thrashes replicas shows up as poor utilization rather than being hidden.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.serving import Metrics
+
+
+@dataclass
+class ReplicaReport:
+    metrics: Metrics
+    patch: int
+    resolutions: List[Tuple[int, int]]
+    busy_time: float
+    alive_time: float
+
+    @property
+    def utilization(self) -> float:
+        return self.busy_time / self.alive_time if self.alive_time else 0.0
+
+
+@dataclass
+class ClusterMetrics:
+    per_replica: Dict[int, ReplicaReport] = field(default_factory=dict)
+    router_dropped: int = 0
+    span: float = 0.0
+    # (t, frontend depth, queued-in-replicas, dispatchable replicas)
+    queue_ts: List[Tuple[float, int, int, int]] = field(default_factory=list)
+
+    # -- fleet aggregates --------------------------------------------------
+    @property
+    def completed(self) -> int:
+        return sum(r.metrics.completed for r in self.per_replica.values())
+
+    @property
+    def dropped(self) -> int:
+        return self.router_dropped + sum(
+            r.metrics.dropped for r in self.per_replica.values())
+
+    @property
+    def slo_met(self) -> int:
+        return sum(r.metrics.slo_met for r in self.per_replica.values())
+
+    @property
+    def slo_satisfaction(self) -> float:
+        total = self.completed + self.dropped
+        return self.slo_met / total if total else 1.0
+
+    @property
+    def goodput(self) -> float:
+        return self.slo_met / self.span if self.span else 0.0
+
+    @property
+    def utilization(self) -> float:
+        busy = sum(r.busy_time for r in self.per_replica.values())
+        alive = sum(r.alive_time for r in self.per_replica.values())
+        return busy / alive if alive else 0.0
+
+    @property
+    def latencies(self) -> List[float]:
+        out: List[float] = []
+        for r in self.per_replica.values():
+            out.extend(r.metrics.latencies)
+        return out
+
+    def latency_quantile(self, q: float) -> float:
+        lats = self.latencies
+        return float(np.quantile(lats, q)) if lats else 0.0
+
+    def replica_count_stats(self) -> Dict[str, float]:
+        if not self.queue_ts:
+            return {"min": 0, "max": 0, "mean": 0.0, "final": 0}
+        counts = np.asarray([p[3] for p in self.queue_ts], np.float64)
+        return {"min": float(counts.min()), "max": float(counts.max()),
+                "mean": float(counts.mean()), "final": float(counts[-1])}
+
+    # -- JSON --------------------------------------------------------------
+    def summary(self) -> dict:
+        """JSON-ready fleet summary (time series reduced to stats so sweep
+        artifacts stay small)."""
+        depths = np.asarray([p[1] + p[2] for p in self.queue_ts], np.float64) \
+            if self.queue_ts else np.zeros(1)
+        return {
+            "completed": self.completed,
+            "dropped": self.dropped,
+            "router_dropped": self.router_dropped,
+            "slo_met": self.slo_met,
+            "slo_satisfaction": round(self.slo_satisfaction, 4),
+            "goodput": round(self.goodput, 4),
+            "utilization": round(self.utilization, 4),
+            "span": round(self.span, 3),
+            "latency_p50": round(self.latency_quantile(0.5), 4),
+            "latency_p95": round(self.latency_quantile(0.95), 4),
+            "queue_depth_mean": round(float(depths.mean()), 3),
+            "queue_depth_max": int(depths.max()),
+            "replicas": self.replica_count_stats(),
+            "per_replica": {
+                str(rid): {
+                    "patch": rep.patch,
+                    "resolutions": [list(r) for r in rep.resolutions],
+                    "completed": rep.metrics.completed,
+                    "dropped": rep.metrics.dropped,
+                    "slo_satisfaction": round(rep.metrics.slo_satisfaction, 4),
+                    "utilization": round(rep.utilization, 4),
+                } for rid, rep in sorted(self.per_replica.items())},
+        }

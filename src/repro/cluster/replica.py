@@ -1,0 +1,99 @@
+"""Replica — one steppable ``PatchedServeEngine`` plus the cluster-side
+state the router and autoscaler need: readiness (cold start), busy horizon,
+resolution coverage, and utilization accounting.
+
+The cluster driver (``repro.cluster.driver``) owns the sim clock; a replica
+only executes when the driver calls ``tick(now)`` and is considered busy
+until ``next_free = now + dt`` (one denoising step is non-preemptible, as in
+the single-engine loop). Cold start is charged honestly: a freshly spawned
+replica has ``ready_at = spawn_at + cold_start`` and the router will not
+dispatch to it before then — arrivals keep waiting in the frontend queue.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.core.requests import Request
+from repro.core.serving import PatchedServeEngine, TickEvents
+
+
+class Replica:
+    def __init__(self, rid: int, engine: PatchedServeEngine,
+                 spawn_at: float = 0.0, cold_start: float = 0.0):
+        self.rid = rid
+        self.engine = engine
+        self.spawn_at = spawn_at
+        self.ready_at = spawn_at + cold_start
+        self.next_free = self.ready_at
+        self.retiring = False                 # drains, accepts nothing new
+        self.retired_at: Optional[float] = None
+        self.busy_time = 0.0
+        self._res_set = {tuple(r) for r in engine.resolutions}
+
+    # -- identity / coverage ----------------------------------------------
+    @property
+    def resolutions(self) -> List[Tuple[int, int]]:
+        return self.engine.resolutions
+
+    @property
+    def patch(self) -> int:
+        """The engine's GCD patch size — larger under resolution-affinity
+        partitioning, which is exactly the point (paper §4.1)."""
+        return self.engine.patch
+
+    def supports(self, resolution: Tuple[int, int]) -> bool:
+        return tuple(resolution) in self._res_set
+
+    # -- dispatchability ---------------------------------------------------
+    def ready(self, now: float) -> bool:
+        """May the router send new work here at ``now``?"""
+        return self.ready_at <= now and not self.retiring \
+            and self.retired_at is None
+
+    @property
+    def has_work(self) -> bool:
+        return self.engine.has_work
+
+    @property
+    def queue_depth(self) -> int:
+        return self.engine.queue_depth
+
+    def backlog(self, now: float) -> float:
+        """Predicted seconds of work ahead of a new arrival: the remainder
+        of the in-flight step plus the engine's drain estimate."""
+        return max(self.next_free - now, 0.0) + self.engine.backlog_estimate()
+
+    def admission_slack(self, req: Request, now: float) -> float:
+        """Slack ``req`` would have on this replica, after queueing behind
+        everything already here (in-flight step + queued work, so one
+        dispatch round spreads a burst instead of herding it onto whichever
+        replica is momentarily idle) — priced by this replica's own latency
+        predictor."""
+        return self.engine.scheduler.admission_slack(
+            req, self.engine.active, now, queue_delay=self.backlog(now))
+
+    # -- execution ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if not self.supports(req.resolution):
+            raise ValueError(
+                f"replica {self.rid} serves {sorted(self._res_set)}, "
+                f"got {req.resolution}")
+        self.engine.submit(req)
+
+    def tick(self, now: float) -> TickEvents:
+        ev = self.engine.tick(now)
+        if ev.stepped:
+            self.busy_time += ev.dt
+            self.next_free = now + ev.dt
+        return ev
+
+    def alive_span(self, end: float) -> float:
+        """Seconds this replica existed (cold start included — it is paid
+        for even while warming)."""
+        return max((self.retired_at if self.retired_at is not None else end)
+                   - self.spawn_at, 0.0)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Replica(rid={self.rid}, res={self.resolutions}, "
+                f"patch={self.patch}, q={self.queue_depth}, "
+                f"retiring={self.retiring})")

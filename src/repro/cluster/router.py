@@ -1,0 +1,187 @@
+"""Cluster frontend: arrival queue + pluggable dispatch policies.
+
+Policies (DiffServe-style SLO-aware routing, TetriServe-style
+resolution-aware placement — see PAPERS.md):
+
+- ``round_robin``        — cycle over ready replicas; load-blind baseline.
+- ``join_shortest_queue``— fewest queued+active requests, tie-broken by
+                           predicted backlog seconds.
+- ``least_slack``        — send where the request would retain the MOST
+                           slack (Algorithm 1's normalized urgency), i.e.
+                           the replica whose own latency predictor says it
+                           can absorb the request with most headroom.
+- ``resolution_affinity``— resolutions are partitioned across replicas to
+                           maximize each replica's GCD patch size (bigger
+                           patches -> less halo/stitch overhead and better
+                           patch-cache locality); within the replicas of a
+                           partition block, fall back to shortest-queue.
+
+A policy returns ``None`` when no ready replica can take the request (e.g.
+every covering replica is still cold-starting); the request then stays in
+the frontend queue and is retried at the next dispatch round.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.csp import gcd_patch_size
+from repro.core.requests import Request
+from repro.cluster.replica import Replica
+
+Resolution = Tuple[int, int]
+
+
+# ---------------- resolution partitioning (affinity placement) -----------
+
+def _set_partitions(items: List[Resolution]) -> Iterator[List[List[Resolution]]]:
+    if not items:
+        yield []
+        return
+    first, rest = items[0], items[1:]
+    for part in _set_partitions(rest):
+        for i in range(len(part)):
+            yield part[:i] + [[first] + part[i]] + part[i + 1:]
+        yield [[first]] + part
+
+
+def partition_resolutions(resolutions: Sequence[Resolution],
+                          k: int) -> List[List[Resolution]]:
+    """Split the resolution set into at most ``k`` blocks maximizing the
+    smallest per-block GCD patch (ties: larger summed patch, then fewer
+    blocks). Exhaustive over set partitions — resolution ladders are tiny
+    (the paper serves 3-5), so Bell-number enumeration is fine."""
+    res = sorted({tuple(r) for r in resolutions})
+    if k <= 1 or len(res) <= 1:
+        return [list(res)]
+    best, best_score = None, None
+    for part in _set_partitions(list(res)):
+        if len(part) > k:
+            continue
+        gcds = [gcd_patch_size(block) for block in part]
+        score = (min(gcds), sum(gcds), -len(part))
+        if best_score is None or score > best_score:
+            best, best_score = part, score
+    return [sorted(block) for block in best]
+
+
+def allocate_replica_counts(blocks: Sequence[Sequence[Resolution]],
+                            k: int) -> List[int]:
+    """Give each partition block >=1 replica and spread the remaining
+    ``k - len(blocks)`` by latent-pixel load (uniform resolution mix
+    assumed, as in the paper's workloads)."""
+    weights = [max(sum(h * w for h, w in block), 1) for block in blocks]
+    counts = [1] * len(blocks)
+    for _ in range(k - len(blocks)):
+        i = max(range(len(blocks)),
+                key=lambda j: weights[j] / counts[j])
+        counts[i] += 1
+    return counts
+
+
+# ---------------- dispatch policies --------------------------------------
+
+class DispatchPolicy:
+    name = "base"
+
+    def _candidates(self, req: Request, replicas: Sequence[Replica],
+                    now: float) -> List[Replica]:
+        return [r for r in replicas
+                if r.ready(now) and r.supports(req.resolution)]
+
+    def select(self, req: Request, replicas: Sequence[Replica],
+               now: float) -> Optional[Replica]:
+        raise NotImplementedError
+
+
+class RoundRobin(DispatchPolicy):
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._i = 0
+
+    def select(self, req, replicas, now):
+        cands = self._candidates(req, replicas, now)
+        if not cands:
+            return None
+        rep = cands[self._i % len(cands)]
+        self._i += 1
+        return rep
+
+
+class JoinShortestQueue(DispatchPolicy):
+    name = "join_shortest_queue"
+
+    def select(self, req, replicas, now):
+        cands = self._candidates(req, replicas, now)
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.queue_depth, r.backlog(now),
+                                         r.rid))
+
+
+class LeastSlack(DispatchPolicy):
+    """Max-remaining-slack placement: each candidate replica prices the
+    request with its own latency predictor (scheduler.admission_slack) and
+    the request goes where it keeps the most slack."""
+    name = "least_slack"
+
+    def select(self, req, replicas, now):
+        cands = self._candidates(req, replicas, now)
+        if not cands:
+            return None
+        return max(cands, key=lambda r: (r.admission_slack(req, now),
+                                         -r.queue_depth, -r.rid))
+
+
+class ResolutionAffinity(JoinShortestQueue):
+    """Placement is decided at replica-construction time (the driver builds
+    replicas over ``partition_resolutions`` blocks), so ``supports`` already
+    restricts candidates to the request's block; within the block this is
+    shortest-queue."""
+    name = "resolution_affinity"
+
+
+POLICIES = {p.name: p for p in
+            (RoundRobin, JoinShortestQueue, LeastSlack, ResolutionAffinity)}
+
+
+def make_policy(name: str) -> DispatchPolicy:
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown dispatch policy {name!r}; have {sorted(POLICIES)}")
+
+
+# ---------------- frontend ------------------------------------------------
+
+class Router:
+    """FIFO frontend queue feeding the dispatch policy. Requests that no
+    ready replica covers stay queued and are retried every round."""
+
+    def __init__(self, policy: DispatchPolicy):
+        self.policy = policy
+        self.queue: List[Request] = []
+        self.dispatched = 0
+
+    @property
+    def depth(self) -> int:
+        return len(self.queue)
+
+    def enqueue(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def dispatch(self, replicas: Sequence[Replica],
+                 now: float) -> List[Tuple[Request, Replica]]:
+        sent, kept = [], []
+        for req in self.queue:
+            rep = self.policy.select(req, replicas, now)
+            if rep is None:
+                kept.append(req)
+                continue
+            rep.submit(req)
+            self.dispatched += 1
+            sent.append((req, rep))
+        self.queue = kept
+        return sent

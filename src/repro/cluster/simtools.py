@@ -1,0 +1,104 @@
+"""Sim-clock engine factories for cluster experiments.
+
+Every replica gets a ``PatchedServeEngine`` in ``sim_synthetic`` mode (no
+tensors; a step is pure accounting) with a **patch-aware** latency surrogate
+(``repro.core.latency_model.patch_aware_step_latency``): compute priced in
+latent pixels, overhead in patch count — so replicas built over an affinity
+block (larger GCD patch) are honestly faster, and replicas with different
+resolution sets remain comparable on one clock.
+
+Standalone latencies (SLO normalizers, Clockwork convention) are always
+computed on the *baseline* full-ladder GCD patch so SLOs mean the same
+thing fleet-wide regardless of how replicas are partitioned.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.csp import gcd_patch_size
+from repro.core.latency_model import patch_aware_step_latency
+from repro.core.requests import Request, poisson_workload
+from repro.core.scheduler import SchedulerConfig
+from repro.core.serving import EngineConfig, PatchedServeEngine
+
+Resolution = Tuple[int, int]
+
+#: latent Low / Medium / High ladder used across benchmarks (see
+#: benchmarks/common.py)
+DEFAULT_RES: List[Resolution] = [(16, 16), (24, 24), (32, 32)]
+
+
+class PatchAwareLatency:
+    """Adapter giving one engine's composition features to the patch-aware
+    surrogate (plugs into ``PatchedServeEngine.latency_model``)."""
+
+    def __init__(self, resolutions: Sequence[Resolution], patch: int,
+                 scale: float = 1.0):
+        self.resolutions = [tuple(r) for r in resolutions]
+        self.patch = patch
+        self.scale = scale
+
+    def predict(self, feats) -> float:
+        counts = [max(float(c), 0.0) for c in feats[:len(self.resolutions)]]
+        return patch_aware_step_latency(
+            counts, self.resolutions, self.patch) * self.scale
+
+
+def standalone_latencies(resolutions: Sequence[Resolution] = None,
+                         steps: int = 10,
+                         scale: float = 1.0) -> Dict[Resolution, float]:
+    """Full-request standalone latency per resolution on the baseline
+    (full-ladder GCD) configuration — the fleet-wide SLO normalizer."""
+    res = [tuple(r) for r in (resolutions or DEFAULT_RES)]
+    patch = gcd_patch_size(res)
+    return {
+        r: patch_aware_step_latency(
+            [1 if rr == r else 0 for rr in res], res, patch) * steps * scale
+        for r in res}
+
+
+def sim_engine_factory(resolutions: Sequence[Resolution] = None,
+                       steps: int = 10, scale: float = 1.0,
+                       sched_policy: str = "slo",
+                       synthetic: bool = True,
+                       model_builder: Optional[Callable] = None
+                       ) -> Callable[[Sequence[Resolution]],
+                                     PatchedServeEngine]:
+    """Returns ``factory(replica_resolutions) -> engine`` for
+    ``Cluster(engine_factory=...)``. One tiny diffusion model is shared by
+    every replica (sim engines never run it; synthetic mode skips tensors
+    entirely)."""
+    fleet_res = [tuple(r) for r in (resolutions or DEFAULT_RES)]
+    sa = standalone_latencies(fleet_res, steps=steps, scale=scale)
+    if model_builder is None:
+        from repro.models import diffusion as dm
+        import jax
+        mcfg = dm.DiffusionConfig(kind="unet", width=16, levels=2,
+                                  blocks_per_level=1, n_heads=2, groups=4,
+                                  d_text=8, n_text=2, use_kernels=False)
+        params = dm.init_diffusion(mcfg, jax.random.PRNGKey(0))
+    else:
+        mcfg, params = model_builder()
+
+    def factory(replica_res: Sequence[Resolution]) -> PatchedServeEngine:
+        res = [tuple(r) for r in replica_res]
+        ecfg = EngineConfig(clock="sim", sim_synthetic=synthetic,
+                            scheduler=SchedulerConfig(policy=sched_policy))
+        eng = PatchedServeEngine(mcfg, params, ecfg, dict(sa), res)
+        eng.latency_model = PatchAwareLatency(res, eng.patch, scale)
+        return eng
+
+    return factory
+
+
+def cluster_workload(qps: float, duration: float,
+                     resolutions: Sequence[Resolution] = None,
+                     slo_scale: float = 5.0, steps: int = 10,
+                     scale: float = 1.0, seed: int = 0,
+                     mix: Optional[Sequence[float]] = None) -> List[Request]:
+    """Poisson fleet workload with SLOs normalized on the baseline system
+    (same ``standalone_latencies`` every replica's scheduler sees)."""
+    res = [tuple(r) for r in (resolutions or DEFAULT_RES)]
+    sa = standalone_latencies(res, steps=steps, scale=scale)
+    return poisson_workload(qps, duration, res, slo_scale, sa,
+                            steps=steps, seed=seed, mix=mix)

@@ -104,3 +104,32 @@ def analytic_step_latency(counts: Sequence[int],
     groups = float(np.sum(counts > 0))
     attn = float(np.sum(counts * pres ** 2)) * attn_scale
     return base + per_patch * total_patches ** 0.82 + per_group * groups + attn
+
+
+def patch_aware_step_latency(counts: Sequence[int],
+                             resolutions: Sequence[Tuple[int, int]],
+                             patch: int, base: float = 2.0e-3,
+                             per_patch: float = 0.45e-3,
+                             per_pixel: float = 6.5e-6,
+                             per_group: float = 0.6e-3) -> float:
+    """Patch-size-aware step-latency surrogate for **cross-engine**
+    comparison in the cluster sim (``repro.cluster``).
+
+    ``analytic_step_latency`` prices a step purely in patch counts, which is
+    fine inside one engine (its patch size is fixed) but cannot compare
+    engines with different GCD patches. Here compute scales with latent
+    pixels (invariant to how latents are cut) while per-patch overhead —
+    halo exchange, gather bookkeeping, boundary stitching (paper §4.2/4.3) —
+    scales with patch count and redundant halo pixels, so a replica whose
+    resolution set admits a larger GCD patch is honestly faster, by the
+    overhead share only."""
+    counts = np.asarray(counts, np.float64)
+    hw = np.asarray(resolutions, np.float64)
+    n_patches = float(np.sum(
+        counts * (hw[:, 0] // patch) * (hw[:, 1] // patch)))
+    pixels = float(np.sum(counts * hw[:, 0] * hw[:, 1]))
+    groups = float(np.sum(counts > 0))
+    halo = n_patches * 4.0 * patch          # redundant halo ring per patch
+    return (base + per_group * groups
+            + per_patch * n_patches ** 0.9
+            + per_pixel * (pixels + halo) ** 0.85)

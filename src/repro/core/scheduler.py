@@ -58,6 +58,15 @@ class Scheduler:
         step_lat = self.predict(batch + [req])
         return now + step_lat * req.remaining_steps > req.slo
 
+    # -- slack estimates exposed to the cluster router ---------------------
+    def admission_slack(self, req: Request, active: List[Request],
+                        now: float, queue_delay: float = 0.0) -> float:
+        """Slack ``req`` would have if it joined this engine's batch after
+        ``queue_delay`` seconds of queueing — the router's least-slack
+        dispatch compares this across replicas (each using its own latency
+        predictor). Pure estimate; mutates nothing."""
+        return self.slack(req, now + queue_delay, list(active))
+
     # -- Algorithm 1 -------------------------------------------------------
     def schedule(self, wait_queue: List[Request], active: List[Request],
                  now: float) -> Tuple[List[Request], List[Request]]:

@@ -19,6 +19,11 @@ preemption):
   5. finished requests -> Postprocessing (VAE decode stub), record SLO;
   6. straggler mitigation: if a step ran > straggler_factor x predicted,
      re-estimate active requests and drop newly-hopeless ones.
+
+The engine is **steppable**: an external driver (``repro.cluster``) owns the
+clock and interleaves many engines by calling ``submit(req)`` and
+``tick(now)`` — one engine iteration that returns a ``TickEvents`` record —
+while ``run()`` is a thin single-engine wrapper around the same loop.
 """
 from __future__ import annotations
 
@@ -50,6 +55,11 @@ class EngineConfig:
     cache_capacity: int = 8192
     patch_cap: int = 0                  # 0 = pure GCD (paper default)
     straggler_factor: float = 3.0
+    # sim-clock only: skip latent/text allocation, patch split/merge and VAE
+    # decode entirely — requests carry no tensors and a step just advances
+    # steps_done. Makes large cluster sweeps cheap; latency accounting is
+    # identical (the predictor only sees batch compositions).
+    sim_synthetic: bool = False
     # Composition bucketing (DESIGN.md §3.4): per-resolution request counts
     # are padded up to this ladder with dummy requests so XLA compiles a
     # small bounded program set. The padding overhead is charged honestly to
@@ -79,6 +89,21 @@ class Metrics:
         return self.slo_met / self.span if self.span else 0.0
 
 
+@dataclass
+class TickEvents:
+    """What one engine iteration did — the steppable-API return value."""
+    now: float                                   # clock at tick start
+    admitted: List[Request] = field(default_factory=list)
+    dropped: List[Request] = field(default_factory=list)
+    completed: List[Request] = field(default_factory=list)
+    dt: float = 0.0                              # step duration (0 if idle)
+    stepped: bool = False
+
+    @property
+    def end(self) -> float:
+        return self.now + self.dt
+
+
 class PatchedServeEngine:
     def __init__(self, model_cfg: dm.DiffusionConfig, params,
                  engine_cfg: EngineConfig,
@@ -103,6 +128,12 @@ class PatchedServeEngine:
         self.predictor = ThresholdPredictor(engine_cfg.cache_tau)
         self._uid_base: Dict[int, int] = {}   # rid -> uid namespace
         self.outputs: Dict[int, np.ndarray] = {}
+        # steppable state (owned here so an external driver can interleave
+        # many engines; run() resets metrics but keeps compile/shape caches)
+        self.wait: List[Request] = []
+        self.active: List[Request] = []
+        self.metrics = Metrics()
+        self._seen_shapes: set = set()
 
     # ---------------- latency prediction ----------------
 
@@ -189,15 +220,19 @@ class PatchedServeEngine:
     # ---------------- stages ----------------
 
     def _prepare(self, req: Request) -> None:
+        self._uid_base[req.rid] = req.rid * (1 << 20)
+        if self.cfg.clock == "sim" and self.cfg.sim_synthetic:
+            return
         h, w = req.resolution
         req.latent = jnp.asarray(
             self.rng.normal(size=(h, w, self.mcfg.latent_channels)),
             jnp.float32)
         req.text = vae_mod.encode_prompt(req.prompt, self.mcfg.n_text,
                                          self.mcfg.d_text)
-        self._uid_base[req.rid] = req.rid * (1 << 20)
 
     def _postprocess(self, req: Request) -> None:
+        if self.cfg.clock == "sim" and self.cfg.sim_synthetic:
+            return
         img = vae_mod.vae_decode(self.vae, req.latent[None])[0]
         self.outputs[req.rid] = np.asarray(img)
 
@@ -247,13 +282,130 @@ class PatchedServeEngine:
 
         return hook, savings
 
-    # ---------------- main loop ----------------
+    # ---------------- steppable API ----------------
+
+    def submit(self, req: Request) -> None:
+        """Enqueue an arrived request; it is considered by Algorithm 1 on the
+        next ``tick``."""
+        self.wait.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.wait or self.active)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.wait) + len(self.active)
+
+    def backlog_estimate(self) -> float:
+        """Predicted seconds until this engine drains everything it holds,
+        assuming all of it batches together (upper-bounds composition; the
+        router only needs a comparable load signal, not an exact forecast)."""
+        reqs = self.active + self.wait
+        if not reqs:
+            return 0.0
+        step = self._predict_step_latency(reqs)
+        return step * max(r.remaining_steps for r in reqs)
+
+    def reset_metrics(self) -> None:
+        """Fresh Metrics; keeps compile/shape caches so warm engines stay
+        warm across runs."""
+        self.metrics = Metrics()
+
+    def tick(self, now: float) -> TickEvents:
+        """One engine iteration at clock time ``now``: admit via Algorithm 1,
+        run one denoising step for the active batch, retire completions.
+        The caller owns the clock and should advance it by ``events.dt``."""
+        ev = TickEvents(now=now)
+        m = self.metrics
+
+        admitted, dropped = self.scheduler.schedule(self.wait, self.active, now)
+        for r in dropped:
+            self.wait.remove(r)
+            r.state = "dropped"
+            m.dropped += 1
+            ev.dropped.append(r)
+        for r in admitted:
+            self.wait.remove(r)
+            r.state = "active"
+            self._prepare(r)
+            self.active.append(r)
+            ev.admitted.append(r)
+        if not self.active:
+            return ev
+
+        # one denoising step for the whole mixed-resolution batch
+        step_pred = self._predict_step_latency(self.active)
+        comp = tuple(self._bucket(c) for c in self._counts(self.active))
+        is_cold = comp not in self._seen_shapes
+        self._seen_shapes.add(comp)
+        t0 = time.perf_counter()
+        savings = self._denoise_step(self.active)
+        step_real = time.perf_counter() - t0
+        if savings:
+            m.compute_savings.append(float(np.mean(savings)))
+
+        ev.dt = step_real if self.cfg.clock == "real" else step_pred
+        ev.stepped = True
+        m.step_latencies.append(ev.dt)
+        end = ev.end
+
+        # straggler mitigation: a step far over prediction triggers
+        # re-estimation; newly hopeless actives are dropped at once.
+        # Cold (first-compile) compositions are exempt.
+        if (self.cfg.clock == "real" and not is_cold
+                and step_real > self.cfg.straggler_factor * max(step_pred, 1e-9)):
+            for r in list(self.active):
+                if end + step_real * r.remaining_steps > r.slo:
+                    self.active.remove(r)
+                    r.state = "dropped"
+                    m.dropped += 1
+                    ev.dropped.append(r)
+
+        # completions
+        for r in list(self.active):
+            if r.steps_done >= r.total_steps:
+                self.active.remove(r)
+                self._postprocess(r)
+                r.state = "done"
+                r.finish = end
+                m.completed += 1
+                m.latencies.append(end - r.arrival)
+                if end <= r.slo:
+                    m.slo_met += 1
+                ev.completed.append(r)
+        return ev
+
+    def drain(self, now: float = 0.0,
+              max_wall: float = 1e9) -> Tuple[float, List[TickEvents]]:
+        """Tick until both queues are empty (or no progress is possible).
+        Returns the clock time at idle and the event trail."""
+        t0 = time.perf_counter()
+        start_now = now
+        events: List[TickEvents] = []
+        while self.has_work:
+            ev = self.tick(now)
+            events.append(ev)
+            if self.cfg.clock == "sim":
+                now += ev.dt
+            else:
+                now = start_now + (time.perf_counter() - t0)
+            if not (ev.stepped or ev.admitted or ev.dropped):
+                break                      # starved: nothing admissible
+            if time.perf_counter() - t0 > max_wall:
+                break
+        return now, events
+
+    # ---------------- main loop (thin wrapper over the steppable API) ------
 
     def run(self, workload: List[Request], max_wall: float = 1e9) -> Metrics:
         pending = sorted(workload, key=lambda r: r.arrival)
-        wait: List[Request] = []
-        active: List[Request] = []
-        m = Metrics()
+        # each run() is self-contained: discard anything a previous
+        # max_wall-truncated run (or external submit/tick use) left queued
+        self.wait.clear()
+        self.active.clear()
+        self.reset_metrics()
+        m = self.metrics
         now = 0.0
         t_start = time.perf_counter()
 
@@ -261,78 +413,24 @@ class PatchedServeEngine:
             return (time.perf_counter() - t_start
                     if self.cfg.clock == "real" else now)
 
-        while pending or wait or active:
+        while pending or self.has_work:
             t = clock()
-            if self.cfg.clock == "sim" and not active and not wait and pending:
+            if (self.cfg.clock == "sim" and not self.has_work and pending):
                 now = max(now, pending[0].arrival)
                 t = now
             while pending and pending[0].arrival <= t:
-                wait.append(pending.pop(0))
-            if not active and not wait:
-                if self.cfg.clock == "real":
-                    if pending:
-                        time.sleep(max(pending[0].arrival - t, 0))
-                    continue
+                self.submit(pending.pop(0))
+            if not self.has_work:
+                if self.cfg.clock == "real" and pending:
+                    time.sleep(max(pending[0].arrival - t, 0))
                 continue
 
-            admitted, dropped = self.scheduler.schedule(wait, active, t)
-            for r in dropped:
-                wait.remove(r)
-                r.state = "dropped"
-                m.dropped += 1
-            for r in admitted:
-                wait.remove(r)
-                r.state = "active"
-                self._prepare(r)
-                active.append(r)
-            if not active:
-                if self.cfg.clock == "sim" and pending:
-                    now = pending[0].arrival
-                continue
-
-            # one denoising step for the whole mixed-resolution batch
-            step_pred = self._predict_step_latency(active)
-            comp = tuple(self._bucket(c) for c in self._counts(active))
-            seen = getattr(self, "_seen_shapes", None)
-            if seen is None:
-                seen = self._seen_shapes = set()
-            is_cold = comp not in seen
-            seen.add(comp)
-            t0 = time.perf_counter()
-            savings = self._denoise_step(active)
-            step_real = time.perf_counter() - t0
-            if savings:
-                m.compute_savings.append(float(np.mean(savings)))
-
-            dt = step_real if self.cfg.clock == "real" else step_pred
+            ev = self.tick(t)
             if self.cfg.clock == "sim":
-                now += dt
-            m.step_latencies.append(dt)
-
-            # straggler mitigation: a step far over prediction triggers
-            # re-estimation; newly hopeless actives are dropped at once.
-            # Cold (first-compile) compositions are exempt.
-            if (self.cfg.clock == "real" and not is_cold
-                    and step_real > self.cfg.straggler_factor * max(step_pred, 1e-9)):
-                t = clock()
-                for r in list(active):
-                    if t + step_real * r.remaining_steps > r.slo:
-                        active.remove(r)
-                        r.state = "dropped"
-                        m.dropped += 1
-
-            # completions
-            t = clock()
-            for r in list(active):
-                if r.steps_done >= r.total_steps:
-                    active.remove(r)
-                    self._postprocess(r)
-                    r.state = "done"
-                    r.finish = t
-                    m.completed += 1
-                    m.latencies.append(t - r.arrival)
-                    if t <= r.slo:
-                        m.slo_met += 1
+                if ev.stepped:
+                    now = ev.end
+                elif not self.active and pending:
+                    now = pending[0].arrival
             if time.perf_counter() - t_start > max_wall:
                 break
         m.span = clock()
@@ -357,6 +455,11 @@ class PatchedServeEngine:
         return r
 
     def _denoise_step(self, active: List[Request]) -> List[float]:
+        if self.cfg.clock == "sim" and self.cfg.sim_synthetic:
+            # synthetic sim: no tensors exist; a step is pure accounting
+            for r in active:
+                r.steps_done += 1
+            return []
         # bucket-pad per resolution so XLA sees a bounded shape lattice
         padded = list(active)
         for res, c in zip(self.resolutions, self._counts(active)):

@@ -1,7 +1,17 @@
-"""Patch-cache semantics: Common/New/Expired sets, reuse masks, updates."""
+"""Patch-cache semantics: Common/New/Expired sets, reuse masks, updates.
+
+Property-based coverage needs ``hypothesis`` (optional, see
+requirements-dev.txt); without it those cases report as skipped and the
+deterministic tests plus a smoke sweep still run.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
 
 from repro.core.cache import PatchCache, bucket_size, masked_block_apply
 from repro.core.cache_predictor import ThresholdPredictor
@@ -52,13 +62,26 @@ def test_reuse_and_update_flow():
     assert m3[0] and not m3[1] and m3[2]
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 5000))
-def test_bucket_monotone(n):
+def _check_bucket(n):
     b = bucket_size(n)
     assert b >= n
     if n > 0:
         assert b <= 2 * n or b <= 8
+
+
+def test_bucket_monotone_smoke():
+    for n in (0, 1, 2, 7, 8, 9, 63, 64, 65, 1023, 1024, 5000):
+        _check_bucket(n)
+
+
+if st is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 5000))
+    def test_bucket_monotone(n):
+        _check_bucket(n)
+else:
+    def test_bucket_monotone():
+        pytest.importorskip("hypothesis")
 
 
 def test_masked_block_apply():

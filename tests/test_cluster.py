@@ -1,0 +1,185 @@
+"""Cluster serving — deterministic sim-clock tests: steppable-engine
+equivalence, dispatch-policy ordering, affinity partitioning, autoscaler
+convergence, cold start, and unroutable-work handling."""
+import numpy as np
+import pytest
+
+from repro.cluster import (AutoscalerConfig, Cluster, ClusterConfig,
+                           Replica, allocate_replica_counts,
+                           partition_resolutions, sim_engine_factory)
+from repro.cluster.simtools import DEFAULT_RES, cluster_workload
+from repro.core.csp import gcd_patch_size
+from repro.core.requests import Request
+
+SKEW = (0.2, 0.2, 0.6)          # mostly-High mix: stresses routing
+
+
+def _cluster(policy, n=3, autoscaler=None, record=False):
+    return Cluster(sim_engine_factory(DEFAULT_RES), DEFAULT_RES,
+                   ClusterConfig(n_replicas=n, policy=policy,
+                                 autoscaler=autoscaler,
+                                 record_timeseries=record))
+
+
+def _fleet(policy, qps, n=3, seed=1, mix=SKEW, duration=30.0, **kw):
+    cl = _cluster(policy, n=n, **kw)
+    return cl.run(cluster_workload(qps=qps, duration=duration, seed=seed,
+                                   mix=mix)), cl
+
+
+# ---------------- steppable engine API ----------------
+
+def test_steppable_api_matches_run():
+    """submit/tick driven externally reproduces the run() wrapper exactly
+    on the sim clock."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    wl = cluster_workload(qps=8.0, duration=10.0, seed=0)
+
+    ref = factory(DEFAULT_RES).run([Request(**{
+        k: getattr(r, k) for k in
+        ("rid", "resolution", "arrival", "slo", "total_steps", "prompt")})
+        for r in wl])
+
+    eng = factory(DEFAULT_RES)
+    pending = sorted(wl, key=lambda r: r.arrival)
+    now = 0.0
+    while pending or eng.has_work:
+        if not eng.has_work and pending:
+            now = max(now, pending[0].arrival)
+        while pending and pending[0].arrival <= now:
+            eng.submit(pending.pop(0))
+        ev = eng.tick(now)
+        if ev.stepped:
+            now = ev.end
+        elif not eng.active and pending:
+            now = pending[0].arrival
+    m = eng.metrics
+    assert (m.completed, m.dropped, m.slo_met) == \
+        (ref.completed, ref.dropped, ref.slo_met)
+    np.testing.assert_allclose(m.latencies, ref.latencies)
+
+
+def test_drain_empties_engine():
+    eng = sim_engine_factory(DEFAULT_RES)(DEFAULT_RES)
+    for r in cluster_workload(qps=50.0, duration=0.2, seed=0):
+        eng.submit(r)
+    assert eng.has_work
+    end, events = eng.drain(now=0.0)
+    assert not eng.has_work
+    assert end > 0.0 and any(ev.stepped for ev in events)
+    assert eng.metrics.completed + eng.metrics.dropped > 0
+
+
+# ---------------- affinity partitioning ----------------
+
+def test_partition_resolutions_maximizes_min_gcd():
+    assert partition_resolutions(DEFAULT_RES, 1) == [sorted(DEFAULT_RES)]
+    two = partition_resolutions(DEFAULT_RES, 2)
+    # best split keeps 16/32 together (gcd 16) and isolates 24 (gcd 24)
+    assert sorted(map(tuple, sum(two, []))) == sorted(map(tuple, DEFAULT_RES))
+    assert min(gcd_patch_size(b) for b in two) == 16
+    three = partition_resolutions(DEFAULT_RES, 3)
+    assert [gcd_patch_size(b) for b in three] == [16, 24, 32]
+
+
+def test_allocate_replica_counts_covers_all_blocks():
+    blocks = partition_resolutions(DEFAULT_RES, 2)
+    counts = allocate_replica_counts(blocks, 5)
+    assert sum(counts) == 5 and min(counts) >= 1
+
+
+# ---------------- dispatch policy ordering (issue checks a+b) ----------
+
+def test_join_shortest_queue_beats_round_robin_on_skew():
+    jsq, _ = _fleet("join_shortest_queue", qps=48.0)
+    rr, _ = _fleet("round_robin", qps=48.0)
+    assert jsq.slo_satisfaction > rr.slo_satisfaction, \
+        (jsq.slo_satisfaction, rr.slo_satisfaction)
+
+
+def test_least_slack_beats_round_robin_under_load():
+    ls, _ = _fleet("least_slack", qps=48.0)
+    rr, _ = _fleet("round_robin", qps=48.0)
+    assert ls.slo_satisfaction > rr.slo_satisfaction
+    assert ls.goodput >= rr.goodput
+
+
+def test_resolution_affinity_grows_patches_and_wins():
+    aff, cl = _fleet("resolution_affinity", qps=48.0)
+    rr, _ = _fleet("round_robin", qps=48.0)
+    mixed_patch = gcd_patch_size(DEFAULT_RES)
+    patches = [rep.patch for rep in aff.per_replica.values()]
+    # every affinity replica runs a strictly larger GCD patch than mixed
+    # routing's fleet-wide GCD
+    assert min(patches) > mixed_patch
+    assert all(rep.patch == mixed_patch
+               for rep in rr.per_replica.values())
+    assert aff.slo_satisfaction > rr.slo_satisfaction
+    # nothing got lost across the partition
+    assert aff.completed + aff.dropped == rr.completed + rr.dropped
+
+
+# ---------------- autoscaler (issue check c) ----------------
+
+def test_autoscaler_converges_under_constant_qps():
+    cl = _cluster("join_shortest_queue", n=1,
+                  autoscaler=AutoscalerConfig(min_replicas=1,
+                                              max_replicas=6),
+                  record=True)
+    m = cl.run(cluster_workload(qps=32.0, duration=60.0, seed=2, mix=None))
+    counts = [(t, n) for t, _, _, n in m.queue_ts]
+    last_third = [n for t, n in counts if t > m.span * 2 / 3]
+    assert last_third, "no time series recorded"
+    # scaled up from 1 and settled on one stable count
+    assert min(last_third) == max(last_third)
+    assert 1 < last_third[0] <= 6
+    # the ramp is monotone: no down-scaling while load is constant
+    assert all(a > 0 for _, a in cl.autoscaler.actions)
+    assert m.slo_satisfaction > 0.9
+
+
+def test_cold_start_delays_readiness():
+    eng = sim_engine_factory(DEFAULT_RES)(DEFAULT_RES)
+    rep = Replica(0, eng, spawn_at=1.0, cold_start=2.0)
+    assert not rep.ready(2.9)
+    assert rep.ready(3.0)
+    assert rep.alive_span(end=5.0) == pytest.approx(4.0)
+
+
+def test_autoscaler_cold_start_charged():
+    """During warm-up the new replica takes nothing; frontend pressure only
+    drains after ready_at."""
+    cfg = AutoscalerConfig(min_replicas=1, max_replicas=2, cold_start=3.0,
+                           cooldown=1.0)
+    cl = _cluster("join_shortest_queue", n=1, autoscaler=cfg, record=True)
+    m = cl.run(cluster_workload(qps=32.0, duration=15.0, seed=2, mix=None))
+    spawned = [r for r in cl.replicas if r.spawn_at > 0.0]
+    assert spawned, "autoscaler never scaled up"
+    for rep in spawned:
+        assert rep.ready_at == pytest.approx(rep.spawn_at + 3.0)
+        served = rep.engine.metrics.completed + rep.engine.metrics.dropped
+        if served:
+            # nothing finished before the replica was ready
+            assert all(lat >= 0 for lat in rep.engine.metrics.latencies)
+            assert rep.busy_time == 0.0 or rep.next_free >= rep.ready_at
+
+
+# ---------------- router edge cases ----------------
+
+def test_unroutable_resolution_is_dropped_not_hung():
+    cl = _cluster("round_robin", n=2)
+    odd = Request(rid=0, resolution=(40, 40), arrival=0.0, slo=10.0,
+                  total_steps=2)
+    m = cl.run([odd])
+    assert m.router_dropped == 1
+    assert odd.state == "dropped"
+    assert m.completed == 0
+
+
+def test_fleet_conservation():
+    """Every request ends exactly once: completed or dropped."""
+    for policy in ("round_robin", "join_shortest_queue", "least_slack",
+                   "resolution_affinity"):
+        m, _ = _fleet(policy, qps=24.0, duration=10.0)
+        wl = cluster_workload(qps=24.0, duration=10.0, seed=1, mix=SKEW)
+        assert m.completed + m.dropped == len(wl), policy

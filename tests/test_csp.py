@@ -1,18 +1,26 @@
-"""CSP format invariants — property-based (hypothesis)."""
+"""CSP format invariants — property-based when ``hypothesis`` is installed
+(optional, see requirements-dev.txt), with a deterministic smoke sweep that
+always runs."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
 
 from repro.core.csp import NEIGHBOR_OFFSETS, build_csp, gcd_patch_size
 
-res_strategy = st.lists(
-    st.sampled_from([(16, 16), (24, 24), (32, 32), (16, 32), (48, 16)]),
-    min_size=1, max_size=8)
+RES_POOL = [(16, 16), (24, 24), (32, 32), (16, 32), (48, 16)]
+SMOKE_CASES = [
+    [(16, 16)],
+    [(16, 16), (24, 24), (32, 32)],
+    [(48, 16), (16, 32), (16, 32), (24, 24)],
+    RES_POOL,
+]
 
 
-@settings(max_examples=30, deadline=None)
-@given(res_strategy)
-def test_offsets_and_sorting(res):
+def _check_offsets_and_sorting(res):
     csp = build_csp(res)
     # requests sorted by resolution
     key = csp.res[:, 0] * 10_000 + csp.res[:, 1]
@@ -30,9 +38,7 @@ def test_offsets_and_sorting(res):
         assert np.all(csp.patch_req[sl] == i)
 
 
-@settings(max_examples=30, deadline=None)
-@given(res_strategy)
-def test_neighbors_symmetric(res):
+def _check_neighbors_symmetric(res):
     csp = build_csp(res)
     # neighbor relation is symmetric with the mirrored slot
     mirror = {0: 1, 1: 0, 2: 3, 3: 2, 4: 7, 7: 4, 5: 6, 6: 5}
@@ -45,9 +51,7 @@ def test_neighbors_symmetric(res):
                 assert csp.patch_req[n] == csp.patch_req[j]
 
 
-@settings(max_examples=30, deadline=None)
-@given(res_strategy)
-def test_neighbor_geometry(res):
+def _check_neighbor_geometry(res):
     csp = build_csp(res)
     for j in range(csp.total):
         r, c = csp.patch_rc[j]
@@ -59,6 +63,36 @@ def test_neighbor_geometry(res):
             assert (n >= 0) == inb
             if inb:
                 assert tuple(csp.patch_rc[n]) == (r + dr, c + dc)
+
+
+def test_csp_invariants_smoke():
+    for res in SMOKE_CASES:
+        _check_offsets_and_sorting(res)
+        _check_neighbors_symmetric(res)
+        _check_neighbor_geometry(res)
+
+
+if st is not None:
+    res_strategy = st.lists(st.sampled_from(RES_POOL), min_size=1,
+                            max_size=8)
+
+    @settings(max_examples=30, deadline=None)
+    @given(res_strategy)
+    def test_offsets_and_sorting(res):
+        _check_offsets_and_sorting(res)
+
+    @settings(max_examples=30, deadline=None)
+    @given(res_strategy)
+    def test_neighbors_symmetric(res):
+        _check_neighbors_symmetric(res)
+
+    @settings(max_examples=30, deadline=None)
+    @given(res_strategy)
+    def test_neighbor_geometry(res):
+        _check_neighbor_geometry(res)
+else:
+    def test_csp_properties():
+        pytest.importorskip("hypothesis")
 
 
 def test_gcd_patch():

@@ -1,16 +1,21 @@
-"""split/merge round-trip + group view — property-based."""
+"""split/merge round-trip + group view — property-based when ``hypothesis``
+is installed (optional, see requirements-dev.txt), with deterministic smoke
+cases that always run."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
 
 from repro.core.patching import (group_images, merge, split, ungroup_images)
 
+RES_POOL = [(16, 16), (24, 24), (32, 32)]
 
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.sampled_from([(16, 16), (24, 24), (32, 32)]),
-                min_size=1, max_size=6),
-       st.integers(0, 2 ** 31 - 1))
-def test_round_trip(res, seed):
+
+def _check_round_trip(res, seed):
     rng = np.random.default_rng(seed)
     imgs = [jnp.asarray(rng.normal(size=(h, w, 4)), jnp.float32)
             for h, w in res]
@@ -21,10 +26,7 @@ def test_round_trip(res, seed):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.sampled_from([(16, 16), (24, 24), (32, 32)]),
-                min_size=1, max_size=6))
-def test_group_view_round_trip(res):
+def _check_group_view(res):
     rng = np.random.default_rng(1)
     imgs = [jnp.asarray(rng.normal(size=(h, w, 4)), jnp.float32)
             for h, w in res]
@@ -35,3 +37,30 @@ def test_group_view_round_trip(res):
         back = ungroup_images(csp, grp, g)
         np.testing.assert_allclose(np.asarray(back),
                                    np.asarray(patches[csp.group_slice(g)]))
+
+
+def test_round_trip_smoke():
+    for seed, res in enumerate(([(16, 16)], RES_POOL,
+                                [(24, 24), (24, 24), (32, 32)])):
+        _check_round_trip(res, seed)
+
+
+def test_group_view_smoke():
+    for res in ([(16, 16)], RES_POOL, [(32, 32), (16, 16), (32, 32)]):
+        _check_group_view(res)
+
+
+if st is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.sampled_from(RES_POOL), min_size=1, max_size=6),
+           st.integers(0, 2 ** 31 - 1))
+    def test_round_trip(res, seed):
+        _check_round_trip(res, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.sampled_from(RES_POOL), min_size=1, max_size=6))
+    def test_group_view_round_trip(res):
+        _check_group_view(res)
+else:
+    def test_patching_properties():
+        pytest.importorskip("hypothesis")
