@@ -3,7 +3,7 @@ clock, JSON artifact like the figures pipeline (paper Fig. 12-15 analogues,
 lifted to fleet scale).
 
 Run:  PYTHONPATH=src python -m benchmarks.cluster_sweep [--fast]
-          [--out benchmarks/cluster_results.json]
+          [--adaptive] [--out benchmarks/cluster_results.json]
 
 Emits one record per (qps, policy, n_replicas) with the fleet summary from
 ``ClusterMetrics.summary()`` plus an autoscaler trajectory section, and
@@ -11,6 +11,14 @@ prints a compact table. The headline check — SLO-aware routing
 (``least_slack``) and resolution-partitioned placement
 (``resolution_affinity``) beating ``round_robin`` — is asserted at the end
 so CI catches regressions in the policies themselves.
+
+``--adaptive`` adds the workload-adaptation axis: (1) drifting-mix
+workloads (Low-heavy flipping to High-heavy mid-run) served by a static
+affinity partition provisioned for the opening mix vs. drift-triggered
+repartitioning, both on the cache-aware latency surrogate; (2) a ramping
+arrival rate served by the reactive autoscaler vs. the predictive
+(Holt-forecast) one. The adaptive runs must beat their frozen baselines on
+fleet SLO satisfaction — asserted, like the routing headline.
 """
 from __future__ import annotations
 
@@ -21,11 +29,16 @@ import time
 from pathlib import Path
 
 from benchmarks.common import make_cluster
-from repro.cluster import AutoscalerConfig
-from repro.cluster.simtools import cluster_workload
+from repro.cluster import AutoscalerConfig, RepartitionConfig
+from repro.cluster.simtools import (cluster_workload, phased_workload,
+                                    ramp_workload)
 
 POLICIES = ("round_robin", "join_shortest_queue", "least_slack",
             "resolution_affinity")
+
+#: drifting-mix scenario: provisioned for Low-heavy, drifts to High-heavy
+DRIFT_MIX_A = (0.6, 0.3, 0.1)
+DRIFT_MIX_B = (0.1, 0.3, 0.6)
 
 
 def sweep(qps_grid, replica_grid, duration, seed, mix):
@@ -62,10 +75,63 @@ def autoscale_trace(qps, duration, seed, mix):
             "actions": cl.autoscaler.actions}
 
 
+def adaptive_repartition_trace(qps_grid, duration, seed):
+    """Static affinity (partition frozen at the opening mix) vs.
+    drift-triggered repartitioning on the same drifting-mix workload,
+    cache-aware surrogate for both."""
+    runs = []
+    for qps in qps_grid:
+        row = {"qps": qps, "mix_a": list(DRIFT_MIX_A),
+               "mix_b": list(DRIFT_MIX_B)}
+        for tag, rcfg in (("static", None),
+                          ("adaptive", RepartitionConfig())):
+            cl = make_cluster(n_replicas=4, policy="resolution_affinity",
+                              initial_mix=DRIFT_MIX_A, repartition=rcfg,
+                              cache=True, record_timeseries=False)
+            wl = phased_workload([(duration / 2, qps, DRIFT_MIX_A),
+                                  (duration / 2, qps, DRIFT_MIX_B)],
+                                 seed=seed)
+            m = cl.run(wl)
+            row[tag] = m.summary()
+            print(f"drift qps={qps:5.1f} {tag:8s} "
+                  f"slo={row[tag]['slo_satisfaction']:.3f} "
+                  f"goodput={row[tag]['goodput']:7.2f} "
+                  f"hit={row[tag]['cache_hit_rate']:.3f} "
+                  f"migrations={row[tag]['migrations']}")
+        runs.append(row)
+    return runs
+
+
+def predictive_autoscale_trace(duration, seed):
+    """Reactive vs. predictive autoscaler on a linearly ramping arrival
+    rate; the forecaster should pre-spawn so cold start lands before the
+    wave."""
+    out = {}
+    for tag, predictive in (("reactive", False), ("predictive", True)):
+        cfg = AutoscalerConfig(min_replicas=2, max_replicas=8,
+                               cold_start=5.0, cooldown=2.0,
+                               predictive=predictive, service_rate=24.0)
+        cl = make_cluster(n_replicas=2, policy="join_shortest_queue",
+                          autoscaler=cfg, record_timeseries=True)
+        m = cl.run(ramp_workload(8.0, 140.0, duration, seed=seed))
+        s = m.summary()
+        s["actions"] = [(round(t, 2), a) for t, a in cl.autoscaler.actions]
+        s["predictive_spawns"] = [
+            round(t, 2) for t in cl.autoscaler.predictive_spawns]
+        out[tag] = s
+        print(f"ramp {tag:10s} slo={s['slo_satisfaction']:.3f} "
+              f"p95={s['latency_p95']:.3f}s replicas={s['replicas']} "
+              f"pre-spawns={len(s['predictive_spawns'])}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="3 QPS points, one replica count")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="add drifting-mix repartitioning + predictive "
+                         "autoscaling comparisons (cache-aware surrogate)")
     ap.add_argument("--out", default="benchmarks/cluster_results.json")
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--seed", type=int, default=1)
@@ -79,6 +145,16 @@ def main() -> None:
     results = sweep(qps_grid, replica_grid, args.duration, args.seed, mix)
     scaled = autoscale_trace(qps=48.0, duration=max(args.duration, 40.0),
                              seed=args.seed + 1, mix=mix)
+
+    adaptive = None
+    if args.adaptive:
+        drift_qps = [96.0, 128.0] if args.fast else [96.0, 128.0, 160.0]
+        adaptive = {
+            "repartition": adaptive_repartition_trace(
+                drift_qps, duration=max(args.duration, 60.0),
+                seed=args.seed),
+            "autoscale": predictive_autoscale_trace(
+                duration=max(args.duration, 35.0), seed=args.seed + 2)}
 
     # headline: SLO-aware / resolution-aware routing must beat round-robin
     # somewhere in the sweep
@@ -98,12 +174,30 @@ def main() -> None:
                {"qps": q, "n_replicas": n, "policy": p,
                 "slo": s, "round_robin_slo": rr}
                for q, n, p, s, rr in wins]}
+    if adaptive is not None:
+        out["adaptive"] = adaptive
+        adaptive_wins = [
+            row["qps"] for row in adaptive["repartition"]
+            if row["adaptive"]["slo_satisfaction"]
+            > row["static"]["slo_satisfaction"]]
+        out["adaptive"]["repartition_wins_qps"] = adaptive_wins
     Path(args.out).write_text(json.dumps(out, indent=1))
     print(f"# wrote {args.out} ({len(results)} sweep points, "
           f"{len(wins)} routing wins vs round_robin)", file=sys.stderr)
     if not wins:
         raise SystemExit("no sweep point where SLO/resolution-aware "
                          "routing beat round_robin — policy regression?")
+    if adaptive is not None:
+        if not adaptive_wins:
+            raise SystemExit(
+                "no drifting-mix workload where adaptive repartitioning "
+                "beat the static affinity partition — adaptation "
+                "regression?")
+        ra, rr2 = (adaptive["autoscale"]["predictive"],
+                   adaptive["autoscale"]["reactive"])
+        if ra["slo_satisfaction"] < rr2["slo_satisfaction"]:
+            raise SystemExit("predictive autoscaler lost to reactive on "
+                             "the ramp workload — forecaster regression?")
 
 
 if __name__ == "__main__":

@@ -101,14 +101,23 @@ def workload(eng, qps, duration=40.0, slo_scale=5.0, steps=10, seed=0,
 
 
 def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
-                 steps=10, scale=1.0, record_timeseries=True):
+                 steps=10, scale=1.0, record_timeseries=True,
+                 initial_mix=None, repartition=None, cache=None):
     """Multi-replica sim cluster over the benchmark resolution ladder.
     Engines are synthetic sim (no tensors) with the patch-aware latency
     surrogate; pair with ``repro.cluster.simtools.cluster_workload`` so
-    SLOs use the same standalone normalizers."""
+    SLOs use the same standalone normalizers. ``cache=True`` (or a
+    ``CacheHitModel``) makes the surrogate cache-aware; ``initial_mix`` +
+    ``repartition`` drive the workload-adaptive affinity path."""
     from repro.cluster import Cluster, ClusterConfig, sim_engine_factory
-    factory = sim_engine_factory(RES, steps=steps, scale=scale)
+    from repro.core.latency_model import CacheHitModel
+    if cache is True:
+        cache = CacheHitModel()
+    factory = sim_engine_factory(RES, steps=steps, scale=scale,
+                                 cache=cache or None)
     return Cluster(factory, RES,
                    ClusterConfig(n_replicas=n_replicas, policy=policy,
                                  autoscaler=autoscaler,
+                                 initial_mix=initial_mix,
+                                 repartition=repartition,
                                  record_timeseries=record_timeseries))

@@ -1,17 +1,23 @@
 """Cluster serving demo: one Poisson fleet workload through every dispatch
-policy on the sim clock, then an autoscaled run from a single replica.
+policy on the sim clock, an autoscaled run from a single replica, then the
+workload-adaptive layer — drift-triggered repartitioning on a mix flip and
+predictive (forecast-driven) autoscaling on an arrival ramp.
 
-Shows the two cluster-level levers on top of the single-engine paper
-reproduction: SLO-aware routing (least_slack) and resolution-partitioned
-placement (resolution_affinity, which maximizes each replica's GCD patch).
+Shows the cluster-level levers on top of the single-engine paper
+reproduction: SLO-aware routing (least_slack), resolution-partitioned
+placement (resolution_affinity, which maximizes each replica's GCD patch
+and patch-cache locality), and online adaptation when the workload the
+fleet actually sees stops matching what it was provisioned for.
 
 Run: PYTHONPATH=src python examples/serve_cluster.py
 """
 import time
 
 from repro.cluster import (AutoscalerConfig, Cluster, ClusterConfig,
-                           sim_engine_factory)
-from repro.cluster.simtools import DEFAULT_RES, cluster_workload
+                           RepartitionConfig, sim_engine_factory)
+from repro.cluster.simtools import (DEFAULT_RES, cluster_workload,
+                                    phased_workload, ramp_workload)
+from repro.core.latency_model import CacheHitModel
 
 QPS, DURATION, SEED = 48.0, 30.0, 1
 MIX = (0.2, 0.2, 0.6)              # skewed toward High resolution
@@ -43,3 +49,35 @@ print(f"replicas min={stats['min']:.0f} max={stats['max']:.0f} "
       f"slo={m.slo_satisfaction:.3f} util={m.utilization:.2f}")
 print("scaling actions (t, +1 up / -1 down):",
       [(round(t, 1), a) for t, a in cl.autoscaler.actions])
+
+# ---- workload adaptation: the mix the fleet was provisioned for flips ----
+print("\ndrifting mix (Low-heavy -> High-heavy at t=30s), cache-aware sim, "
+      "partition provisioned for the opening mix:")
+MIX_A, MIX_B = (0.6, 0.3, 0.1), (0.1, 0.3, 0.6)
+cache_factory = sim_engine_factory(DEFAULT_RES, cache=CacheHitModel())
+for tag, rcfg in (("static affinity", None),
+                  ("adaptive (drift-repartition)", RepartitionConfig())):
+    cl = Cluster(cache_factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=4, policy="resolution_affinity",
+                               initial_mix=MIX_A, repartition=rcfg))
+    m = cl.run(phased_workload([(30.0, 128.0, MIX_A), (30.0, 128.0, MIX_B)],
+                               seed=SEED))
+    print(f"{tag:30s} slo={m.slo_satisfaction:.3f} goodput={m.goodput:6.1f} "
+          f"cache_hit={m.cache_hit_rate:.3f} migrations={m.migrations} "
+          f"repartitions={[e['t'] for e in m.repartitions]}")
+
+print("\narrival ramp (8 -> 140 qps over 35s), reactive vs predictive "
+      "autoscaler:")
+for tag, predictive in (("reactive", False), ("predictive", True)):
+    cfg = AutoscalerConfig(min_replicas=2, max_replicas=8, cold_start=5.0,
+                           cooldown=2.0, predictive=predictive,
+                           service_rate=24.0)
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=2, policy="join_shortest_queue",
+                               autoscaler=cfg))
+    m = cl.run(ramp_workload(8.0, 140.0, 35.0, seed=SEED + 2))
+    pre = cl.autoscaler.predictive_spawns
+    print(f"{tag:10s} slo={m.slo_satisfaction:.3f} "
+          f"p95={m.latency_quantile(0.95):.3f}s "
+          f"spawns={[round(t, 1) for t, a in cl.autoscaler.actions if a > 0]}"
+          f" pre-spawns={[round(t, 1) for t in pre]}")

@@ -4,18 +4,25 @@ engine (ROADMAP: "serves heavy traffic from millions of users").
 Layers:
 
 - ``replica``    — one engine + cluster-side state (cold start, busy
-                   horizon, utilization);
+                   horizon, utilization, drain-before-switch migration);
 - ``router``     — frontend queue with pluggable dispatch policies
                    (round_robin / join_shortest_queue / least_slack /
-                   resolution_affinity) and the affinity partitioner;
+                   resolution_affinity), the affinity partitioner, and the
+                   windowed arrival-mix tracker for drift detection;
 - ``autoscaler`` — reactive replica scaling from queue-slack and SLO
-                   attainment, cold start charged honestly;
+                   attainment, plus an optional predictive path (Holt
+                   arrival-rate forecaster) that pre-spawns ahead of ramps;
+                   cold start charged honestly either way;
 - ``driver``     — the discrete-event loop interleaving all replicas on
-                   one sim clock;
+                   one sim clock; owns drift-triggered repartitioning
+                   (recompute affinity blocks when the resolution mix
+                   drifts, migrate replicas drain-before-switch);
 - ``metrics``    — fleet + per-replica aggregation (SLO satisfaction,
-                   goodput, utilization, queue time series);
-- ``simtools``   — patch-aware sim engine factories shared by tests,
-                   benchmarks and examples.
+                   goodput, utilization, patch-cache hit rates, queue and
+                   repartition time series);
+- ``simtools``   — patch-aware (optionally cache-aware) sim engine
+                   factories plus steady / phased-drift / ramp workload
+                   generators shared by tests, benchmarks and examples.
 
 Quick start::
 
@@ -27,25 +34,28 @@ Quick start::
     fleet = cl.run(cluster_workload(qps=24.0, duration=30.0))
     print(fleet.summary())
 """
-from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
-from repro.cluster.driver import Cluster, ClusterConfig
+from repro.cluster.autoscaler import (ArrivalForecaster, Autoscaler,
+                                      AutoscalerConfig)
+from repro.cluster.driver import Cluster, ClusterConfig, RepartitionConfig
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
 from repro.cluster.replica import Replica
 from repro.cluster.router import (POLICIES, DispatchPolicy,
-                                  JoinShortestQueue, LeastSlack,
+                                  JoinShortestQueue, LeastSlack, MixTracker,
                                   ResolutionAffinity, RoundRobin, Router,
                                   allocate_replica_counts, make_policy,
-                                  partition_resolutions)
+                                  mix_drift, partition_resolutions)
 from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
-                                    cluster_workload, sim_engine_factory,
+                                    cluster_workload, phased_workload,
+                                    ramp_workload, sim_engine_factory,
                                     standalone_latencies)
 
 __all__ = [
-    "Autoscaler", "AutoscalerConfig", "Cluster", "ClusterConfig",
-    "ClusterMetrics", "ReplicaReport", "Replica", "Router",
-    "DispatchPolicy", "RoundRobin", "JoinShortestQueue", "LeastSlack",
-    "ResolutionAffinity", "POLICIES", "make_policy",
-    "partition_resolutions", "allocate_replica_counts",
-    "DEFAULT_RES", "PatchAwareLatency", "cluster_workload",
+    "ArrivalForecaster", "Autoscaler", "AutoscalerConfig", "Cluster",
+    "ClusterConfig", "RepartitionConfig", "ClusterMetrics", "ReplicaReport",
+    "Replica", "Router", "DispatchPolicy", "RoundRobin",
+    "JoinShortestQueue", "LeastSlack", "ResolutionAffinity", "POLICIES",
+    "make_policy", "MixTracker", "mix_drift", "partition_resolutions",
+    "allocate_replica_counts", "DEFAULT_RES", "PatchAwareLatency",
+    "cluster_workload", "phased_workload", "ramp_workload",
     "sim_engine_factory", "standalone_latencies",
 ]

@@ -1,7 +1,8 @@
-"""Reactive autoscaler — replica count follows queue slack and SLO
-attainment (DiffServe-style query-aware scaling; see PAPERS.md).
+"""Autoscaler — reactive replica scaling from queue slack and SLO
+attainment (DiffServe-style query-aware scaling; see PAPERS.md), plus an
+optional **predictive** path that pre-spawns ahead of arrival ramps.
 
-Signals, evaluated by the driver at every sim event:
+Reactive signals, evaluated by the driver at every sim event:
 
 - **backlog pressure**: mean predicted drain seconds per dispatchable
   replica (from each engine's latency predictor via
@@ -12,6 +13,16 @@ Signals, evaluated by the driver at every sim event:
 - **SLO attainment** over a sliding window of recent outcomes
   (completions met/missed + drops).
 
+Predictive path (``AutoscalerConfig.predictive``): a short-horizon
+arrival-rate forecaster (Holt double exponential smoothing — EWMA level +
+linear trend over fixed time bins) projects the arrival rate one cold-start
+ahead. When the forecast says demand will exceed what the current fleet
+(warming replicas included) can sustain, a replica is spawned *before* the
+backlog materializes, so cold start lands before the wave. The forecaster
+self-monitors: its one-bin-ahead relative error is tracked, and while that
+error is high (or too few bins have been seen) the predictive path stands
+down and only the reactive signals act.
+
 Scale-up spawns a replica that serves traffic only after ``cold_start``
 seconds — the model-load/compile penalty is charged honestly: arrivals
 keep queueing meanwhile. Scale-down marks a victim as *retiring*: it
@@ -20,12 +31,75 @@ prevents up/down flapping.
 """
 from __future__ import annotations
 
+import math
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, Optional, Sequence, Tuple
+from typing import Deque, List, Optional, Sequence, Tuple
 
 from repro.cluster.replica import Replica
 from repro.core.serving import TickEvents
+
+
+class ArrivalForecaster:
+    """Holt linear smoothing over binned arrival counts: level tracks the
+    current rate, trend its drift; ``forecast(h)`` extrapolates ``h``
+    seconds out. Tracks its own one-bin-ahead relative error so callers can
+    fall back to reactive scaling when the forecast is unreliable."""
+
+    def __init__(self, bin_s: float = 1.0, alpha: float = 0.5,
+                 beta: float = 0.3, err_decay: float = 0.7):
+        self.bin_s = bin_s
+        self.alpha = alpha
+        self.beta = beta
+        self.err_decay = err_decay
+        self.level: Optional[float] = None   # arrivals per second
+        self.trend = 0.0                     # rate drift per second
+        self.rel_err: Optional[float] = None
+        self.bins_seen = 0
+        self._bin_start = 0.0
+        self._bin_count = 0
+
+    def _close_bin(self) -> None:
+        rate = self._bin_count / self.bin_s
+        if self.level is None:
+            self.level = rate
+        else:
+            pred = self.forecast(self.bin_s)
+            err = abs(pred - rate) / max(rate, 1.0 / self.bin_s)
+            self.rel_err = err if self.rel_err is None else (
+                self.err_decay * self.rel_err + (1 - self.err_decay) * err)
+            prev = self.level
+            self.level = (self.alpha * rate
+                          + (1 - self.alpha) * (self.level
+                                                + self.trend * self.bin_s))
+            self.trend = (self.beta * (self.level - prev) / self.bin_s
+                          + (1 - self.beta) * self.trend)
+        self.bins_seen += 1
+        self._bin_count = 0
+        self._bin_start += self.bin_s
+
+    def advance(self, now: float) -> None:
+        """Close every bin that ended at or before ``now`` (empty bins
+        count: silence is evidence of a falling rate)."""
+        while now >= self._bin_start + self.bin_s:
+            self._close_bin()
+
+    def observe(self, t: float) -> None:
+        """Record one arrival at time ``t`` (non-decreasing)."""
+        self.advance(t)
+        self._bin_count += 1
+
+    def forecast(self, horizon_s: float) -> float:
+        """Predicted arrival rate (req/s) ``horizon_s`` seconds from the
+        current bin; never negative."""
+        if self.level is None:
+            return 0.0
+        return max(self.level + self.trend * horizon_s, 0.0)
+
+    def reliable(self, min_bins: int, max_rel_err: float) -> bool:
+        return (self.bins_seen >= min_bins
+                and self.rel_err is not None
+                and self.rel_err <= max_rel_err)
 
 
 @dataclass
@@ -44,6 +118,16 @@ class AutoscalerConfig:
     scale_down_hold: float = 8.0
     window: float = 10.0             # attainment sliding window (seconds)
     cooldown: float = 4.0            # min seconds between actions
+    # -- predictive pre-spawning (off by default: pure reactive) ----------
+    predictive: bool = False
+    forecast_bin: float = 1.0        # forecaster bin width (seconds)
+    forecast_horizon: Optional[float] = None   # default: cold_start + bin
+    forecast_min_bins: int = 4       # bins before the forecast is trusted
+    forecast_max_err: float = 0.5    # EWMA one-bin-ahead rel. error gate
+    headroom: float = 1.15           # provision above the forecast
+    # per-replica sustainable throughput (req/s); None = learn online from
+    # the completion rate while the fleet is under pressure
+    service_rate: Optional[float] = None
 
 
 class Autoscaler:
@@ -51,18 +135,28 @@ class Autoscaler:
         self.cfg = cfg
         self._last_action = -1e18
         self._idle_since: Optional[float] = None
-        self._outcomes: Deque[Tuple[float, bool]] = deque()
+        self._outcomes: Deque[Tuple[float, bool, bool]] = deque()
         self.actions: list = []      # (now, +1 | -1) decision log
+        self.forecaster = ArrivalForecaster(bin_s=cfg.forecast_bin)
+        self.predictive_spawns: List[float] = []   # pre-spawn times
+        self._mu: Optional[float] = None           # learned req/s/replica
 
     # -- signals -----------------------------------------------------------
+    def observe_arrival(self, t: float) -> None:
+        """Feed one frontend arrival (its arrival timestamp) to the
+        forecaster. The driver calls this as it delivers arrivals."""
+        self.forecaster.observe(t)
+
     def observe(self, now: float, events: Sequence[TickEvents]) -> None:
-        """Fold a tick's completions/drops into the attainment window."""
+        """Fold a tick's completions/drops into the attainment window.
+        Entries are (t, slo_met, completed): drops count against attainment
+        but are not served throughput."""
         for ev in events:
             for r in ev.completed:
                 self._outcomes.append(
-                    (now, r.finish is not None and r.finish <= r.slo))
+                    (now, r.finish is not None and r.finish <= r.slo, True))
             for r in ev.dropped:
-                self._outcomes.append((now, False))
+                self._outcomes.append((now, False, False))
         horizon = now - self.cfg.window
         while self._outcomes and self._outcomes[0][0] < horizon:
             self._outcomes.popleft()
@@ -70,7 +164,30 @@ class Autoscaler:
     def attainment(self) -> Optional[float]:
         if not self._outcomes:
             return None
-        return sum(met for _, met in self._outcomes) / len(self._outcomes)
+        return sum(met for _, met, _ in self._outcomes) / len(self._outcomes)
+
+    # -- capacity estimate (predictive path) -------------------------------
+    def service_rate(self) -> Optional[float]:
+        """Per-replica sustainable throughput: configured value, else the
+        online estimate learned while the fleet was under pressure."""
+        return self.cfg.service_rate if self.cfg.service_rate is not None \
+            else self._mu
+
+    def _learn_service_rate(self, now: float, backlog: float,
+                            ready: int) -> None:
+        """EWMA of fleet completions/s per ready replica, sampled only when
+        backlog shows the fleet is saturated (completions then measure
+        capacity, not demand)."""
+        if not ready or backlog < 0.5 * self.cfg.scale_up_backlog:
+            return
+        done = sum(1 for _, _, completed in self._outcomes if completed)
+        if not done:
+            return
+        span = now - self._outcomes[0][0]
+        if span < self.cfg.forecast_bin:
+            return                # too little evidence: rate would explode
+        rate = done / min(span, self.cfg.window) / ready
+        self._mu = rate if self._mu is None else 0.7 * self._mu + 0.3 * rate
 
     # -- decision ----------------------------------------------------------
     def decide(self, now: float, frontend_depth: int,
@@ -82,6 +199,10 @@ class Autoscaler:
         n = len(pool)
         backlog = (sum(r.backlog(now) for r in pool) / n) if n else 0.0
         att = self.attainment()
+        self.forecaster.advance(now)
+        if cfg.predictive:
+            n_ready = sum(1 for r in pool if r.ready_at <= now)
+            self._learn_service_rate(now, backlog, n_ready)
 
         idle = (backlog < cfg.scale_down_backlog and frontend_depth == 0
                 and (att is None or att >= cfg.scale_down_attainment))
@@ -106,6 +227,25 @@ class Autoscaler:
             self._last_action = now
             self.actions.append((now, +1))
             return +1
+
+        # predictive pre-spawn: provision for the rate one cold-start out,
+        # counting replicas already warming; reliability-gated so a bad
+        # forecast degrades to pure reactive scaling
+        if cfg.predictive and n < cfg.max_replicas:
+            mu = self.service_rate()
+            horizon = cfg.forecast_horizon if cfg.forecast_horizon \
+                is not None else cfg.cold_start + cfg.forecast_bin
+            if mu and self.forecaster.reliable(cfg.forecast_min_bins,
+                                               cfg.forecast_max_err):
+                lam = self.forecaster.forecast(horizon)
+                desired = min(int(math.ceil(lam * cfg.headroom / mu)),
+                              cfg.max_replicas)
+                if desired > n:
+                    self._idle_since = None
+                    self._last_action = now
+                    self.actions.append((now, +1))
+                    self.predictive_spawns.append(now)
+                    return +1
 
         if (idle and n > cfg.min_replicas
                 and now - self._idle_since >= cfg.scale_down_hold):

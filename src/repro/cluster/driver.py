@@ -14,24 +14,48 @@ each replica's engine is built over one block only — so its GCD patch is
 larger and its patch cache sees fewer distinct shapes. All other policies
 build uniform replicas over the full ladder.
 
+With a ``RepartitionConfig`` the affinity partition is no longer frozen at
+construction: the driver keeps a windowed resolution-mix histogram
+(``MixTracker``) over frontend arrivals, and when the observed mix drifts
+past an L1 threshold from the mix the current partition was built for, it
+recomputes the partition for the *observed* mix and migrates surplus
+replicas to their new blocks — drain-before-switch (in-flight requests
+finish on the old block) with an honest ``switch_cost`` charged on the sim
+clock before the migrated replica serves again.
+
 Engines must be sim-clock (``EngineConfig.clock == "sim"``); for large
 sweeps build them with ``sim_synthetic=True`` (see
 ``repro.cluster.simtools``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.requests import Request
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
 from repro.cluster.replica import Replica
-from repro.cluster.router import (Router, allocate_replica_counts,
-                                  make_policy, partition_resolutions)
+from repro.cluster.router import (MixTracker, Router,
+                                  allocate_replica_counts, make_policy,
+                                  mix_drift, partition_resolutions)
 
 Resolution = Tuple[int, int]
 EngineFactory = Callable[[Sequence[Resolution]], "object"]
+
+
+@dataclass
+class RepartitionConfig:
+    """Drift-triggered affinity repartitioning (resolution_affinity only)."""
+    drift_threshold: float = 0.3     # L1(observed mix, built-for mix)
+    window: float = 10.0             # arrival-mix histogram window (s)
+    min_samples: int = 30            # arrivals before drift is trusted
+    cooldown: float = 8.0            # min seconds between repartitions
+    switch_cost: float = 1.0         # charged when a replica swaps blocks
+    max_concurrent: int = 1          # replicas draining-to-migrate at once
 
 
 @dataclass
@@ -39,6 +63,10 @@ class ClusterConfig:
     n_replicas: int = 2
     policy: str = "round_robin"
     autoscaler: Optional[AutoscalerConfig] = None
+    # resolution mix the initial affinity partition is provisioned for
+    # (uniform if None — the paper's workload assumption)
+    initial_mix: Optional[Sequence[float]] = None
+    repartition: Optional[RepartitionConfig] = None
     record_timeseries: bool = True
     max_events: int = 2_000_000        # runaway-loop backstop
 
@@ -54,16 +82,43 @@ class Cluster:
         self.autoscaler = Autoscaler(cfg.autoscaler) if cfg.autoscaler else None
         self.replicas: List[Replica] = []
         self._next_rid = 0
+        if cfg.initial_mix is not None:
+            mix0 = np.asarray(cfg.initial_mix, np.float64)
+            if len(mix0) != len(self.resolutions) or (mix0 < 0).any() \
+                    or mix0.sum() <= 0:
+                raise ValueError(
+                    f"initial_mix must be {len(self.resolutions)} "
+                    f"non-negative shares (one per resolution in "
+                    f"{self.resolutions}), got {cfg.initial_mix!r}")
+        else:
+            mix0 = np.full(len(self.resolutions),
+                           1.0 / max(len(self.resolutions), 1))
+        mix0 = mix0 / mix0.sum()
+        self._built_mix = mix0
+        mix_map = self._mix_map(mix0) if cfg.initial_mix is not None else None
         if self.policy.name == "resolution_affinity":
             self._blocks = partition_resolutions(self.resolutions,
-                                                 cfg.n_replicas)
-            counts = allocate_replica_counts(self._blocks, cfg.n_replicas)
+                                                 cfg.n_replicas, mix=mix_map)
+            counts = allocate_replica_counts(self._blocks, cfg.n_replicas,
+                                             mix=mix_map)
         else:
             self._blocks = [list(self.resolutions)]
             counts = [cfg.n_replicas]
         for block, c in zip(self._blocks, counts):
             for _ in range(c):
                 self._spawn(block, now=0.0, cold=0.0)
+        # drift-triggered repartitioning state
+        self.mix_tracker: Optional[MixTracker] = None
+        self._migration_queue: Deque[Tuple[Replica, List[Resolution]]] = \
+            deque()
+        self._last_repartition = -1e18
+        self.repartition_log: List[dict] = []
+        if cfg.repartition and self.policy.name == "resolution_affinity":
+            self.mix_tracker = MixTracker(self.resolutions,
+                                          window=cfg.repartition.window)
+
+    def _mix_map(self, mix: Sequence[float]) -> Dict[Resolution, float]:
+        return {res: float(m) for res, m in zip(self.resolutions, mix)}
 
     # ---------------- fleet mutation ----------------
 
@@ -99,7 +154,12 @@ class Cluster:
         self._spawn(block, now=now, cold=cold)
 
     def _scale_down(self, now: float) -> None:
-        cands = self._dispatchable()
+        # replicas in (or queued for) a repartition migration already have a
+        # block assignment the plan depends on — retiring one would leave
+        # its target block unserved
+        queued = {id(rep) for rep, _ in self._migration_queue}
+        cands = [r for r in self._dispatchable()
+                 if r.migrating_to is None and id(r) not in queued]
         if self.policy.name == "resolution_affinity":
             # never retire a block's last server: its resolutions would
             # become unroutable
@@ -114,6 +174,90 @@ class Cluster:
         victim = min(cands, key=lambda r: (r.queue_depth, r.backlog(now),
                                            -r.rid))
         victim.retiring = True             # drains, then retires
+
+    # ---------------- drift-triggered repartitioning ----------------
+
+    def _maybe_repartition(self, now: float) -> bool:
+        """Recompute the affinity partition when the windowed arrival mix
+        has drifted past the threshold from the mix the current partition
+        was built for; queue drain-before-switch migrations for replicas
+        whose block changed."""
+        rcfg = self.cfg.repartition
+        if self.mix_tracker is None or rcfg is None:
+            return False
+        if self._migration_queue or \
+                any(r.migrating_to is not None for r in self.replicas):
+            return False                   # previous plan still in flight
+        if now - self._last_repartition < rcfg.cooldown:
+            return False
+        # mix(now) trims the window first — after an idle gap the stale
+        # pre-trim sample count must not satisfy the min_samples gate
+        mix = self.mix_tracker.mix(now)
+        if self.mix_tracker.n_samples < rcfg.min_samples:
+            return False
+        drift = mix_drift(mix, self._built_mix)
+        if drift <= rcfg.drift_threshold:
+            return False
+
+        movers = self._dispatchable()
+        k = len(movers)
+        if k == 0:
+            return False
+        mix_map = self._mix_map(mix)
+        blocks = partition_resolutions(self.resolutions, k, mix=mix_map)
+        counts = allocate_replica_counts(blocks, k, mix=mix_map)
+        # match replicas to target blocks, keeping ones already in place
+        targets: List[List[Resolution]] = []
+        for block, c in zip(blocks, counts):
+            targets.extend([list(block)] * c)
+        moving: List[Replica] = []
+        remaining = list(targets)
+        for rep in movers:
+            have = sorted(tuple(r) for r in rep.resolutions)
+            hit = next((i for i, t in enumerate(remaining)
+                        if [tuple(x) for x in t] == have), None)
+            if hit is not None:
+                remaining.pop(hit)
+            else:
+                moving.append(rep)
+        self._blocks = blocks
+        self._built_mix = mix
+        self._last_repartition = now
+        self._migration_queue = deque(zip(moving, remaining))
+        self.repartition_log.append({
+            "t": round(now, 3), "drift": round(drift, 4),
+            "mix": [round(float(m), 4) for m in mix],
+            "blocks": [[list(r) for r in b] for b in blocks],
+            "counts": counts, "migrations": len(moving)})
+        self._start_migrations()
+        return True
+
+    def _start_migrations(self) -> None:
+        active = sum(1 for r in self.replicas if r.migrating_to is not None)
+        limit = self.cfg.repartition.max_concurrent if self.cfg.repartition \
+            else 1
+        while self._migration_queue and active < limit:
+            rep, block = self._migration_queue.popleft()
+            if rep.retiring or rep.retired_at is not None:
+                continue                   # victim vanished; drop the move
+            rep.migrating_to = [tuple(r) for r in block]
+            active += 1
+
+    def _finish_migrations(self, now: float) -> bool:
+        """Swap engines on drained migrating replicas (switch cost charged)
+        and start the next queued migration."""
+        progress = False
+        cost = self.cfg.repartition.switch_cost if self.cfg.repartition \
+            else 0.0
+        for rep in self.replicas:
+            if rep.migrating_to is not None and rep.retired_at is None \
+                    and not rep.has_work:
+                eng = self.make_engine(list(rep.migrating_to))
+                rep.switch_engine(eng, now, switch_cost=cost)
+                progress = True
+        if progress:
+            self._start_migrations()
+        return progress
 
     # ---------------- event loop ----------------
 
@@ -132,7 +276,12 @@ class Cluster:
             progress = False
 
             while pending and pending[0].arrival <= now:
-                self.router.enqueue(pending.pop(0))
+                req = pending.pop(0)
+                self.router.enqueue(req)
+                if self.mix_tracker is not None:
+                    self.mix_tracker.observe(req.arrival, req.resolution)
+                if self.autoscaler:
+                    self.autoscaler.observe_arrival(req.arrival)
                 progress = True
 
             for rep in self.replicas:
@@ -140,6 +289,9 @@ class Cluster:
                         and not rep.has_work:
                     rep.retired_at = now
                     progress = True
+
+            if self._finish_migrations(now):
+                progress = True
 
             if self.autoscaler:
                 act = self.autoscaler.decide(now, self.router.depth,
@@ -150,6 +302,9 @@ class Cluster:
                 elif act < 0:
                     self._scale_down(now)
                     progress = True
+
+            if self._maybe_repartition(now):
+                progress = True
 
             if self.router.dispatch(self._dispatchable(), now):
                 progress = True
@@ -170,8 +325,7 @@ class Cluster:
                     now, self.router.depth,
                     sum(r.queue_depth for r in self.replicas
                         if r.retired_at is None),
-                    len([r for r in self._dispatchable()
-                         if r.ready_at <= now])))
+                    len([r for r in self.replicas if r.ready(now)])))
 
             # next event: arrival, step completion / warm-up of a loaded
             # replica, warm-up that could unblock the frontend, or the next
@@ -196,6 +350,11 @@ class Cluster:
             elif future:
                 now = min(future)
             else:
+                # a replica that finished draining for a migration this very
+                # iteration is invisible to nxt (no work, not dispatchable):
+                # swap it now — its post-switch warm-up may serve the queue
+                if self._finish_migrations(now):
+                    continue
                 # nothing can ever serve what's left
                 for r in self.router.queue:
                     r.state = "dropped"
@@ -204,9 +363,11 @@ class Cluster:
                 break
 
         mts.span = now
+        mts.repartitions = list(self.repartition_log)
         for rep in self.replicas:
             mts.per_replica[rep.rid] = ReplicaReport(
-                metrics=rep.engine.metrics, patch=rep.patch,
+                metrics=rep.merged_metrics, patch=rep.patch,
                 resolutions=[tuple(r) for r in rep.resolutions],
-                busy_time=rep.busy_time, alive_time=rep.alive_span(now))
+                busy_time=rep.busy_time, alive_time=rep.alive_span(now),
+                migrations=rep.migrations)
         return mts

@@ -24,10 +24,19 @@ class ReplicaReport:
     resolutions: List[Tuple[int, int]]
     busy_time: float
     alive_time: float
+    migrations: int = 0                # affinity-block switches survived
 
     @property
     def utilization(self) -> float:
         return self.busy_time / self.alive_time if self.alive_time else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Mean per-step patch-cache hit rate: measured reuse-mask means on
+        the real tensor path, the modeled hit rate under the cache-aware sim
+        surrogate (0.0 when neither is active)."""
+        s = self.metrics.compute_savings
+        return float(np.mean(s)) if s else 0.0
 
 
 @dataclass
@@ -37,6 +46,8 @@ class ClusterMetrics:
     span: float = 0.0
     # (t, frontend depth, queued-in-replicas, dispatchable replicas)
     queue_ts: List[Tuple[float, int, int, int]] = field(default_factory=list)
+    # drift-triggered repartition events (driver.repartition_log entries)
+    repartitions: List[dict] = field(default_factory=list)
 
     # -- fleet aggregates --------------------------------------------------
     @property
@@ -66,6 +77,21 @@ class ClusterMetrics:
         busy = sum(r.busy_time for r in self.per_replica.values())
         alive = sum(r.alive_time for r in self.per_replica.values())
         return busy / alive if alive else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fleet patch-cache hit rate: per-replica step hit rates weighted
+        by how many steps each replica executed."""
+        num = den = 0.0
+        for r in self.per_replica.values():
+            steps = len(r.metrics.compute_savings)
+            num += r.cache_hit_rate * steps
+            den += steps
+        return num / den if den else 0.0
+
+    @property
+    def migrations(self) -> int:
+        return sum(r.migrations for r in self.per_replica.values())
 
     @property
     def latencies(self) -> List[float]:
@@ -105,6 +131,9 @@ class ClusterMetrics:
             "queue_depth_mean": round(float(depths.mean()), 3),
             "queue_depth_max": int(depths.max()),
             "replicas": self.replica_count_stats(),
+            "cache_hit_rate": round(self.cache_hit_rate, 4),
+            "migrations": self.migrations,
+            "repartitions": self.repartitions,
             "per_replica": {
                 str(rid): {
                     "patch": rep.patch,
@@ -113,5 +142,7 @@ class ClusterMetrics:
                     "dropped": rep.metrics.dropped,
                     "slo_satisfaction": round(rep.metrics.slo_satisfaction, 4),
                     "utilization": round(rep.utilization, 4),
+                    "cache_hit_rate": round(rep.cache_hit_rate, 4),
+                    "migrations": rep.migrations,
                 } for rid, rep in sorted(self.per_replica.items())},
         }

@@ -8,13 +8,20 @@ until ``next_free = now + dt`` (one denoising step is non-preemptible, as in
 the single-engine loop). Cold start is charged honestly: a freshly spawned
 replica has ``ready_at = spawn_at + cold_start`` and the router will not
 dispatch to it before then — arrivals keep waiting in the frontend queue.
+
+Repartition migration uses the same drain-before-switch honesty: a replica
+marked ``migrating_to`` takes nothing new, finishes its in-flight work on
+the old affinity block, then swaps engines and pays ``switch_cost`` on the
+sim clock before serving again. Metrics accumulated on retired engines are
+folded into ``merged_metrics`` so nothing a replica served is lost across
+migrations.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.requests import Request
-from repro.core.serving import PatchedServeEngine, TickEvents
+from repro.core.serving import Metrics, PatchedServeEngine, TickEvents
 
 
 class Replica:
@@ -29,6 +36,10 @@ class Replica:
         self.retired_at: Optional[float] = None
         self.busy_time = 0.0
         self._res_set = {tuple(r) for r in engine.resolutions}
+        # repartition migration: target affinity block while draining
+        self.migrating_to: Optional[List[Tuple[int, int]]] = None
+        self.migrations = 0
+        self._metrics_hist: List[Metrics] = []
 
     # -- identity / coverage ----------------------------------------------
     @property
@@ -48,7 +59,7 @@ class Replica:
     def ready(self, now: float) -> bool:
         """May the router send new work here at ``now``?"""
         return self.ready_at <= now and not self.retiring \
-            and self.retired_at is None
+            and self.retired_at is None and self.migrating_to is None
 
     @property
     def has_work(self) -> bool:
@@ -86,6 +97,43 @@ class Replica:
             self.busy_time += ev.dt
             self.next_free = now + ev.dt
         return ev
+
+    # -- repartition migration --------------------------------------------
+    def switch_engine(self, engine: PatchedServeEngine, now: float,
+                      switch_cost: float = 0.0) -> None:
+        """Swap to an engine over a new affinity block. Only legal once the
+        old engine is drained (in-flight work finished where it started).
+        ``switch_cost`` — cache flush + shape-set recompile — is charged on
+        the clock; it never shortcuts a still-pending cold start."""
+        if self.engine.has_work:
+            raise RuntimeError(
+                f"replica {self.rid}: cannot switch engines with work "
+                "in flight")
+        self._metrics_hist.append(self.engine.metrics)
+        self.engine = engine
+        self._res_set = {tuple(r) for r in engine.resolutions}
+        self.ready_at = max(self.ready_at, now + switch_cost)
+        self.next_free = max(self.next_free, self.ready_at)
+        self.migrating_to = None
+        self.migrations += 1
+
+    @property
+    def merged_metrics(self) -> Metrics:
+        """Engine metrics folded across every engine this replica ran
+        (migrations replace the engine; served work must not vanish)."""
+        if not self._metrics_hist:
+            return self.engine.metrics
+        out = Metrics()
+        for m in self._metrics_hist + [self.engine.metrics]:
+            out.completed += m.completed
+            out.dropped += m.dropped
+            out.slo_met += m.slo_met
+            out.latencies.extend(m.latencies)
+            out.step_latencies.extend(m.step_latencies)
+            out.compute_savings.extend(m.compute_savings)
+            out.cache_samples.extend(m.cache_samples)
+            out.span = max(out.span, m.span)
+        return out
 
     def alive_span(self, end: float) -> float:
         """Seconds this replica existed (cold start included — it is paid

@@ -22,14 +22,69 @@ the frontend queue and is retried at the next dispatch round.
 """
 from __future__ import annotations
 
-import math
-from typing import Iterator, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Deque, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.csp import gcd_patch_size
 from repro.core.requests import Request
 from repro.cluster.replica import Replica
 
 Resolution = Tuple[int, int]
+
+
+# ---------------- workload mix tracking (drift detection) -----------------
+
+class MixTracker:
+    """Windowed resolution-mix histogram over arrivals. The cluster driver
+    feeds every frontend arrival in; drift-triggered repartitioning compares
+    the windowed empirical mix against the mix the current affinity
+    partition was built for."""
+
+    def __init__(self, resolutions: Sequence[Resolution],
+                 window: float = 10.0):
+        self.resolutions = [tuple(r) for r in resolutions]
+        self._index = {r: i for i, r in enumerate(self.resolutions)}
+        self.window = window
+        self._events: Deque[Tuple[float, int]] = deque()
+        # histogram maintained incrementally: mix() runs every sim event
+        self._counts = np.zeros(len(self.resolutions), np.float64)
+
+    def observe(self, now: float, resolution: Resolution) -> None:
+        i = self._index.get(tuple(resolution))
+        if i is None:
+            return                          # unroutable shapes don't count
+        self._events.append((now, i))
+        self._counts[i] += 1
+        self._trim(now)
+
+    def _trim(self, now: float) -> None:
+        horizon = now - self.window
+        while self._events and self._events[0][0] < horizon:
+            _, i = self._events.popleft()
+            self._counts[i] -= 1
+
+    @property
+    def n_samples(self) -> int:
+        return len(self._events)
+
+    def mix(self, now: Optional[float] = None) -> np.ndarray:
+        """Empirical per-resolution arrival shares in ladder order (uniform
+        when the window is empty)."""
+        if now is not None:
+            self._trim(now)
+        total = self._counts.sum()
+        if total == 0:
+            return np.full(len(self.resolutions),
+                           1.0 / len(self.resolutions))
+        return self._counts / total
+
+
+def mix_drift(a: Sequence[float], b: Sequence[float]) -> float:
+    """L1 distance between two mixes, in [0, 2]."""
+    return float(np.abs(np.asarray(a, np.float64)
+                        - np.asarray(b, np.float64)).sum())
 
 
 # ---------------- resolution partitioning (affinity placement) -----------
@@ -45,12 +100,16 @@ def _set_partitions(items: List[Resolution]) -> Iterator[List[List[Resolution]]]
         yield [[first]] + part
 
 
-def partition_resolutions(resolutions: Sequence[Resolution],
-                          k: int) -> List[List[Resolution]]:
+def partition_resolutions(resolutions: Sequence[Resolution], k: int,
+                          mix: Optional[Dict[Resolution, float]] = None
+                          ) -> List[List[Resolution]]:
     """Split the resolution set into at most ``k`` blocks maximizing the
     smallest per-block GCD patch (ties: larger summed patch, then fewer
-    blocks). Exhaustive over set partitions — resolution ladders are tiny
-    (the paper serves 3-5), so Bell-number enumeration is fine."""
+    blocks). With an observed ``mix`` (resolution -> arrival share) the
+    summed-patch tie-break is traffic-weighted, so the resolutions carrying
+    the load land in the large-patch blocks. Exhaustive over set
+    partitions — resolution ladders are tiny (the paper serves 3-5), so
+    Bell-number enumeration is fine."""
     res = sorted({tuple(r) for r in resolutions})
     if k <= 1 or len(res) <= 1:
         return [list(res)]
@@ -59,18 +118,31 @@ def partition_resolutions(resolutions: Sequence[Resolution],
         if len(part) > k:
             continue
         gcds = [gcd_patch_size(block) for block in part]
-        score = (min(gcds), sum(gcds), -len(part))
+        if mix:
+            weighted = sum(g * sum(mix.get(tuple(r), 0.0) for r in block)
+                           for g, block in zip(gcds, part))
+        else:
+            weighted = sum(gcds)
+        score = (min(gcds), weighted, -len(part))
         if best_score is None or score > best_score:
             best, best_score = part, score
     return [sorted(block) for block in best]
 
 
-def allocate_replica_counts(blocks: Sequence[Sequence[Resolution]],
-                            k: int) -> List[int]:
+def allocate_replica_counts(blocks: Sequence[Sequence[Resolution]], k: int,
+                            mix: Optional[Dict[Resolution, float]] = None
+                            ) -> List[int]:
     """Give each partition block >=1 replica and spread the remaining
-    ``k - len(blocks)`` by latent-pixel load (uniform resolution mix
-    assumed, as in the paper's workloads)."""
-    weights = [max(sum(h * w for h, w in block), 1) for block in blocks]
+    ``k - len(blocks)`` by latent-pixel load. ``mix`` (resolution ->
+    arrival share) weights each resolution's pixels by observed traffic;
+    without it the paper's uniform-mix workload is assumed — which is
+    exactly what drift-triggered repartitioning replaces with the windowed
+    empirical mix."""
+    def share(r: Resolution) -> float:
+        return mix.get(tuple(r), 0.0) if mix else 1.0
+
+    weights = [max(sum(share(r) * r[0] * r[1] for r in block), 1e-9)
+               for block in blocks]
     counts = [1] * len(blocks)
     for _ in range(k - len(blocks)):
         i = max(range(len(blocks)),

@@ -15,8 +15,11 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.csp import gcd_patch_size
-from repro.core.latency_model import patch_aware_step_latency
+from repro.core.latency_model import (CacheHitModel, patch_aware_step_latency,
+                                      resolution_concentration)
 from repro.core.requests import Request, poisson_workload
 from repro.core.scheduler import SchedulerConfig
 from repro.core.serving import EngineConfig, PatchedServeEngine
@@ -30,18 +33,48 @@ DEFAULT_RES: List[Resolution] = [(16, 16), (24, 24), (32, 32)]
 
 class PatchAwareLatency:
     """Adapter giving one engine's composition features to the patch-aware
-    surrogate (plugs into ``PatchedServeEngine.latency_model``)."""
+    surrogate (plugs into ``PatchedServeEngine.latency_model``).
+
+    With a ``CacheHitModel`` attached the surrogate is also *cache-aware*:
+    each step's predicted latency is discounted by the modeled patch-cache
+    hit rate, which grows with the replica's resolution-set concentration
+    and the batch's step fraction — so affinity placement is rewarded for
+    cache locality, not just for its larger GCD patch."""
 
     def __init__(self, resolutions: Sequence[Resolution], patch: int,
-                 scale: float = 1.0):
+                 scale: float = 1.0, cache: Optional[CacheHitModel] = None):
         self.resolutions = [tuple(r) for r in resolutions]
         self.patch = patch
         self.scale = scale
+        self.cache = cache
+        self.patches_per_res = [(h // patch) * (w // patch)
+                                for h, w in self.resolutions]
+
+    def modeled_hit_rate(self, concentration: float,
+                         step_frac: float) -> float:
+        """Hit probability for one step — read back by the engine tick for
+        fleet hit-rate metrics. The engine only calls this when ``cache``
+        is set (a surrogate advertises cache-awareness by exposing a truthy
+        ``cache`` alongside this method)."""
+        return self.cache.hit_rate(concentration, step_frac)
+
+    def _latency(self, counts: Sequence[float], hit: float) -> float:
+        return patch_aware_step_latency(
+            counts, self.resolutions, self.patch,
+            cache_hit_rate=hit) * self.scale
 
     def predict(self, feats) -> float:
         counts = [max(float(c), 0.0) for c in feats[:len(self.resolutions)]]
-        return patch_aware_step_latency(
-            counts, self.resolutions, self.patch) * self.scale
+        return self._latency(counts, 0.0)
+
+    def predict_batch(self, counts: Sequence[int], reqs) -> float:
+        counts = [max(float(c), 0.0) for c in counts]
+        if self.cache is None or not reqs:
+            return self._latency(counts, 0.0)
+        conc = resolution_concentration(counts, self.patches_per_res)
+        frac = float(np.mean([r.steps_done / max(r.total_steps, 1)
+                              for r in reqs]))
+        return self._latency(counts, self.modeled_hit_rate(conc, frac))
 
 
 def standalone_latencies(resolutions: Sequence[Resolution] = None,
@@ -61,13 +94,17 @@ def sim_engine_factory(resolutions: Sequence[Resolution] = None,
                        steps: int = 10, scale: float = 1.0,
                        sched_policy: str = "slo",
                        synthetic: bool = True,
-                       model_builder: Optional[Callable] = None
+                       model_builder: Optional[Callable] = None,
+                       cache: Optional[CacheHitModel] = None
                        ) -> Callable[[Sequence[Resolution]],
                                      PatchedServeEngine]:
     """Returns ``factory(replica_resolutions) -> engine`` for
     ``Cluster(engine_factory=...)``. One tiny diffusion model is shared by
     every replica (sim engines never run it; synthetic mode skips tensors
-    entirely)."""
+    entirely). Pass ``cache=CacheHitModel()`` for a cache-aware surrogate
+    (replica steps get faster with resolution concentration and step
+    fraction); SLO normalizers stay cache-free either way so deadlines mean
+    the same thing across configurations."""
     fleet_res = [tuple(r) for r in (resolutions or DEFAULT_RES)]
     sa = standalone_latencies(fleet_res, steps=steps, scale=scale)
     if model_builder is None:
@@ -85,7 +122,8 @@ def sim_engine_factory(resolutions: Sequence[Resolution] = None,
         ecfg = EngineConfig(clock="sim", sim_synthetic=synthetic,
                             scheduler=SchedulerConfig(policy=sched_policy))
         eng = PatchedServeEngine(mcfg, params, ecfg, dict(sa), res)
-        eng.latency_model = PatchAwareLatency(res, eng.patch, scale)
+        eng.latency_model = PatchAwareLatency(res, eng.patch, scale,
+                                              cache=cache)
         return eng
 
     return factory
@@ -102,3 +140,64 @@ def cluster_workload(qps: float, duration: float,
     sa = standalone_latencies(res, steps=steps, scale=scale)
     return poisson_workload(qps, duration, res, slo_scale, sa,
                             steps=steps, seed=seed, mix=mix)
+
+
+def phased_workload(phases: Sequence[Tuple[float, float,
+                                           Optional[Sequence[float]]]],
+                    resolutions: Sequence[Resolution] = None,
+                    slo_scale: float = 5.0, steps: int = 10,
+                    scale: float = 1.0, seed: int = 0) -> List[Request]:
+    """Drifting workload: concatenated Poisson phases, each
+    ``(duration, qps, mix)`` — the resolution mix (and rate) shifts at phase
+    boundaries while SLOs stay normalized on the same baseline standalone
+    latencies. This is the workload where a frozen affinity partition loses
+    to drift-triggered repartitioning."""
+    res = [tuple(r) for r in (resolutions or DEFAULT_RES)]
+    sa = standalone_latencies(res, steps=steps, scale=scale)
+    out: List[Request] = []
+    t0 = 0.0
+    for i, (duration, qps, mix) in enumerate(phases):
+        part = poisson_workload(qps, duration, res, slo_scale, sa,
+                                steps=steps, seed=seed + i, mix=mix)
+        for r in part:
+            r.arrival += t0
+            r.slo += t0
+        out.extend(part)
+        t0 += duration
+    out.sort(key=lambda r: r.arrival)
+    for rid, r in enumerate(out):
+        r.rid = rid
+    return out
+
+
+def ramp_workload(qps0: float, qps1: float, duration: float,
+                  resolutions: Sequence[Resolution] = None,
+                  slo_scale: float = 5.0, steps: int = 10,
+                  scale: float = 1.0, seed: int = 0,
+                  mix: Optional[Sequence[float]] = None) -> List[Request]:
+    """Non-homogeneous Poisson arrivals whose rate ramps linearly from
+    ``qps0`` to ``qps1`` over ``duration`` (thinning construction) — the
+    arrival trend a predictive autoscaler can see coming, unlike a step
+    change."""
+    res = [tuple(r) for r in (resolutions or DEFAULT_RES)]
+    sa = standalone_latencies(res, steps=steps, scale=scale)
+    rng = np.random.default_rng(seed)
+    qmax = max(qps0, qps1, 1e-9)
+    p = np.asarray(mix if mix is not None else [1 / len(res)] * len(res),
+                   np.float64)
+    p = p / p.sum()
+    out: List[Request] = []
+    t, rid = 0.0, 0
+    while True:
+        t += rng.exponential(1.0 / qmax)
+        if t > duration:
+            break
+        rate = qps0 + (qps1 - qps0) * (t / duration)
+        if rng.uniform() > rate / qmax:
+            continue                        # thinned-out candidate arrival
+        r = tuple(res[rng.choice(len(res), p=p)])
+        out.append(Request(rid=rid, resolution=r, arrival=t,
+                           slo=t + slo_scale * sa[r], total_steps=steps,
+                           prompt=f"prompt-{rid}"))
+        rid += 1
+    return out

@@ -146,7 +146,7 @@ class PatchCache:
 def bucket_size(n: int, ladder: Sequence[int] = (0, 8, 16, 32, 64, 128, 256,
                                                  512, 1024, 2048, 4096)) -> int:
     """Pad dynamic unmasked-counts to a small static ladder (bounded compile
-    set — the JAX-serving adaptation, DESIGN.md §3.4)."""
+    set — the JAX-serving adaptation, docs/ARCHITECTURE.md §4)."""
     for b in ladder:
         if n <= b:
             return b

@@ -7,7 +7,8 @@ reuse decision:
   paper bottoms out in; tau trades quality vs savings);
 - ``MLPPredictor``: a small learned classifier trained on profiled
   (input-delta features -> was the output delta < eps?) pairs — our
-  TPU-idiomatic stand-in for the paper's cuML random forest (DESIGN.md §3.3).
+  TPU-idiomatic stand-in for the paper's cuML random forest (see
+  docs/ARCHITECTURE.md §4, "reuse predictor" adaptation).
   Features: [log delta, step fraction, block fraction, log input scale].
 """
 from __future__ import annotations

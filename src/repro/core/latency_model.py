@@ -111,7 +111,9 @@ def patch_aware_step_latency(counts: Sequence[int],
                              patch: int, base: float = 2.0e-3,
                              per_patch: float = 0.45e-3,
                              per_pixel: float = 6.5e-6,
-                             per_group: float = 0.6e-3) -> float:
+                             per_group: float = 0.6e-3,
+                             cache_hit_rate: float = 0.0,
+                             reuse_efficiency: float = 0.65) -> float:
     """Patch-size-aware step-latency surrogate for **cross-engine**
     comparison in the cluster sim (``repro.cluster``).
 
@@ -122,7 +124,13 @@ def patch_aware_step_latency(counts: Sequence[int],
     halo exchange, gather bookkeeping, boundary stitching (paper §4.2/4.3) —
     scales with patch count and redundant halo pixels, so a replica whose
     resolution set admits a larger GCD patch is honestly faster, by the
-    overhead share only."""
+    overhead share only.
+
+    ``cache_hit_rate`` (from ``CacheHitModel``) discounts the compute share:
+    a reused patch skips its block math but still pays gather/scatter and
+    bookkeeping, so only ``reuse_efficiency`` of a hit's cost is saved
+    (paper Fig. 10's dense-run-with-cache-filled-inputs fallback keeps the
+    rest). ``base`` and per-group overhead are never discounted."""
     counts = np.asarray(counts, np.float64)
     hw = np.asarray(resolutions, np.float64)
     n_patches = float(np.sum(
@@ -130,6 +138,64 @@ def patch_aware_step_latency(counts: Sequence[int],
     pixels = float(np.sum(counts * hw[:, 0] * hw[:, 1]))
     groups = float(np.sum(counts > 0))
     halo = n_patches * 4.0 * patch          # redundant halo ring per patch
-    return (base + per_group * groups
-            + per_patch * n_patches ** 0.9
-            + per_pixel * (pixels + halo) ** 0.85)
+    compute = (per_patch * n_patches ** 0.9
+               + per_pixel * (pixels + halo) ** 0.85)
+    discount = 1.0 - reuse_efficiency * min(max(cache_hit_rate, 0.0), 1.0)
+    return base + per_group * groups + compute * discount
+
+
+# ---------------- patch-cache hit-rate surrogate (cluster sim) -------------
+
+def resolution_concentration(counts: Sequence[int],
+                             patches_per_res: Sequence[int]) -> float:
+    """Herfindahl index of the batch's per-resolution patch shares, in
+    (0, 1]: 1.0 when every patch comes from one resolution (a pure affinity
+    block), approaching 1/n for an even n-way shape mix. Distinct shapes
+    compete for patch-cache slots and cannot share entries, so higher
+    concentration means better cache locality."""
+    counts = np.asarray(counts, np.float64)
+    ppr = np.asarray(patches_per_res, np.float64)
+    patches = counts * ppr
+    total = float(patches.sum())
+    if total <= 0:
+        return 1.0
+    shares = patches / total
+    return float(np.sum(shares ** 2))
+
+
+@dataclass
+class CacheHitModel:
+    """Per-step patch-cache hit probability as a logistic in the replica's
+    resolution-set concentration and the batch's mean step fraction —
+    the two locality drivers the tensor path exhibits (``core/cache.py``:
+    fewer distinct shapes -> fewer Expired/New transitions; later denoising
+    steps -> smaller input deltas -> more reuse under the threshold
+    predictor). Default coefficients are loosely calibrated against
+    ``PatchCache.stats`` from tiny real-engine runs; refit with
+    ``fit_cache_hit_model`` against ``Metrics.cache_samples``."""
+    b0: float = -3.0      # intercept (hit rate floor)
+    b_conc: float = 2.2   # >= 0: monotone in concentration
+    b_step: float = 2.8   # >= 0: monotone in step fraction
+
+    def hit_rate(self, concentration: float, step_frac: float) -> float:
+        z = (self.b0 + self.b_conc * min(max(concentration, 0.0), 1.0)
+             + self.b_step * min(max(step_frac, 0.0), 1.0))
+        return float(1.0 / (1.0 + np.exp(-z)))
+
+
+def fit_cache_hit_model(samples: Sequence[Tuple[float, float, float]]
+                        ) -> CacheHitModel:
+    """Least-squares logit fit of (concentration, step_frac, hit_rate)
+    samples — e.g. ``Metrics.cache_samples`` recorded by the real tensor
+    path. Slopes are clamped non-negative so the surrogate stays monotone
+    in both locality drivers even on noisy calibration data."""
+    arr = np.asarray(samples, np.float64)
+    if arr.ndim != 2 or arr.shape[0] < 3 or arr.shape[1] != 3:
+        raise ValueError("need >= 3 (concentration, step_frac, hit) samples")
+    y = np.clip(arr[:, 2], 1e-3, 1.0 - 1e-3)
+    logit = np.log(y / (1.0 - y))
+    X = np.stack([np.ones(len(arr)), arr[:, 0], arr[:, 1]], axis=1)
+    coef, *_ = np.linalg.lstsq(X, logit, rcond=None)
+    return CacheHitModel(b0=float(coef[0]),
+                         b_conc=float(max(coef[1], 0.0)),
+                         b_step=float(max(coef[2], 0.0)))

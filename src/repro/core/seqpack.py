@@ -1,5 +1,5 @@
 """Compressed Sparse Sequence packing — the CSP idea applied to LM serving
-(DESIGN.md §4): variable-length prompt prefills become one packed token
+(docs/ARCHITECTURE.md §2): variable-length prefills become one packed token
 batch with request offsets, exactly the CSP layout with 1-D "patches".
 
 - ``pack``: heterogeneous prompts -> (tokens (1, T_pad), segment_ids,

@@ -38,7 +38,8 @@ import numpy as np
 from repro.core import cache as cache_mod
 from repro.core.cache_predictor import ThresholdPredictor
 from repro.core.csp import gcd_patch_size
-from repro.core.latency_model import analytic_step_latency, make_features
+from repro.core.latency_model import (analytic_step_latency, make_features,
+                                      resolution_concentration)
 from repro.core.patching import merge_by_request, split
 from repro.core.requests import Request
 from repro.core.scheduler import Scheduler, SchedulerConfig
@@ -60,7 +61,7 @@ class EngineConfig:
     # steps_done. Makes large cluster sweeps cheap; latency accounting is
     # identical (the predictor only sees batch compositions).
     sim_synthetic: bool = False
-    # Composition bucketing (DESIGN.md §3.4): per-resolution request counts
+    # Composition bucketing (docs/ARCHITECTURE.md §4): per-resolution counts
     # are padded up to this ladder with dummy requests so XLA compiles a
     # small bounded program set. The padding overhead is charged honestly to
     # the latency predictor (a request that fits the current bucket is free).
@@ -77,6 +78,10 @@ class Metrics:
     latencies: List[float] = field(default_factory=list)
     step_latencies: List[float] = field(default_factory=list)
     compute_savings: List[float] = field(default_factory=list)
+    # per-step (resolution concentration, step fraction, cache hit rate)
+    # triples — the calibration feed for fit_cache_hit_model
+    cache_samples: List[Tuple[float, float, float]] = field(
+        default_factory=list)
     span: float = 0.0
 
     @property
@@ -152,8 +157,13 @@ class PatchedServeEngine:
             return 0.0
         # predict for the *bucketed* composition — what actually executes
         counts = [self._bucket(c) for c in self._counts(reqs)]
-        if getattr(self, "latency_model", None) is not None:
-            return max(self.latency_model.predict(
+        lm = getattr(self, "latency_model", None)
+        if lm is not None:
+            if hasattr(lm, "predict_batch"):
+                # cache-aware surrogates also need the requests' step state
+                # (reuse probability grows as denoising converges)
+                return max(lm.predict_batch(counts, reqs), 1e-5)
+            return max(lm.predict(
                 make_features(counts, self.patches_per_res)), 1e-5)
         return analytic_step_latency(counts, self.patches_per_res)
 
@@ -339,11 +349,35 @@ class PatchedServeEngine:
         comp = tuple(self._bucket(c) for c in self._counts(self.active))
         is_cold = comp not in self._seen_shapes
         self._seen_shapes.add(comp)
+        # batch locality features, captured before steps_done advances —
+        # consumed by the real-path cache calibrator and the cache-aware sim
+        # surrogate's hit-rate metric; skipped when neither is active.
+        # A surrogate advertises cache-awareness by exposing a truthy
+        # ``cache`` attribute alongside ``modeled_hit_rate``.
+        lm = getattr(self, "latency_model", None)
+        mh = getattr(lm, "modeled_hit_rate", None) \
+            if self.cfg.clock == "sim" and getattr(lm, "cache", None) \
+            is not None else None
+        conc = step_frac = 0.0
+        if mh is not None or (self.cfg.use_cache and self.cfg.clock == "real"):
+            # concentration of the *bucketed* composition (what executes,
+            # dummy padding included) — matches what a cache-aware
+            # surrogate's predict_batch prices, so the reported hit rate
+            # agrees with the one that shaped the latency
+            conc = resolution_concentration(comp, self.patches_per_res)
+            step_frac = float(np.mean([r.steps_done / max(r.total_steps, 1)
+                                       for r in self.active]))
         t0 = time.perf_counter()
         savings = self._denoise_step(self.active)
         step_real = time.perf_counter() - t0
         if savings:
+            # measured tensor-path reuse: also feed the hit-model calibrator
             m.compute_savings.append(float(np.mean(savings)))
+            m.cache_samples.append((conc, step_frac, float(np.mean(savings))))
+        elif mh is not None:
+            # sim clock: a cache-aware surrogate reports its *modeled* hit
+            # rate so fleet metrics can aggregate locality per replica
+            m.compute_savings.append(mh(conc, step_frac))
 
         ev.dt = step_real if self.cfg.clock == "real" else step_pred
         ev.stepped = True

@@ -1,17 +1,27 @@
 """Cluster serving — deterministic sim-clock tests: steppable-engine
 equivalence, dispatch-policy ordering, affinity partitioning, autoscaler
-convergence, cold start, and unroutable-work handling."""
+convergence, cold start, unroutable-work handling, and the workload-
+adaptive layer (drift detection, drain-before-switch repartitioning,
+predictive autoscaling, cache-aware latency surrogate)."""
 import numpy as np
 import pytest
 
 from repro.cluster import (AutoscalerConfig, Cluster, ClusterConfig,
-                           Replica, allocate_replica_counts,
-                           partition_resolutions, sim_engine_factory)
-from repro.cluster.simtools import DEFAULT_RES, cluster_workload
+                           MixTracker, Replica, RepartitionConfig,
+                           allocate_replica_counts, mix_drift,
+                           partition_resolutions, phased_workload,
+                           ramp_workload, sim_engine_factory)
+from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
+                                    cluster_workload)
 from repro.core.csp import gcd_patch_size
+from repro.core.latency_model import (CacheHitModel, fit_cache_hit_model,
+                                      patch_aware_step_latency,
+                                      resolution_concentration)
 from repro.core.requests import Request
 
 SKEW = (0.2, 0.2, 0.6)          # mostly-High mix: stresses routing
+MIX_A = (0.6, 0.3, 0.1)         # drift scenario: Low-heavy ...
+MIX_B = (0.1, 0.3, 0.6)         # ... flipping to High-heavy
 
 
 def _cluster(policy, n=3, autoscaler=None, record=False):
@@ -183,3 +193,325 @@ def test_fleet_conservation():
         m, _ = _fleet(policy, qps=24.0, duration=10.0)
         wl = cluster_workload(qps=24.0, duration=10.0, seed=1, mix=SKEW)
         assert m.completed + m.dropped == len(wl), policy
+
+
+# ---------------- drift detection (adaptive layer) ----------------
+
+def _feed(tracker, mix, t0, n, seed, qps=20.0):
+    rng = np.random.default_rng(seed)
+    t = t0
+    for _ in range(n):
+        t += rng.exponential(1.0 / qps)
+        i = rng.choice(len(DEFAULT_RES), p=np.asarray(mix) / np.sum(mix))
+        tracker.observe(t, DEFAULT_RES[i])
+    return t
+
+
+def test_drift_detector_fires_on_shift_not_noise():
+    """Windowed mix drift crosses the threshold on a real mix flip but not
+    under resampling noise of an unchanged mix."""
+    threshold = RepartitionConfig().drift_threshold
+    for seed in (0, 1, 2):
+        tr = MixTracker(DEFAULT_RES, window=10.0)
+        t = _feed(tr, MIX_A, 0.0, 120, seed)
+        # noise only: fresh samples from the same mix stay under threshold
+        assert mix_drift(tr.mix(t), MIX_A) < threshold
+        # real shift: window fills with MIX_B arrivals
+        t = _feed(tr, MIX_B, t, 250, seed + 10)
+        assert mix_drift(tr.mix(t), MIX_A) > threshold
+
+
+def test_mix_tracker_window_forgets_old_arrivals():
+    tr = MixTracker(DEFAULT_RES, window=5.0)
+    tr.observe(0.0, DEFAULT_RES[0])
+    tr.observe(6.0, DEFAULT_RES[2])      # evicts the t=0 sample
+    mix = tr.mix(6.0)
+    assert mix[0] == 0.0 and mix[2] == 1.0
+    assert tr.n_samples == 1
+
+
+def test_allocate_replica_counts_follows_mix():
+    """Replica allocation shifts toward the blocks carrying the observed
+    traffic — the repartition lever."""
+    blocks = partition_resolutions(DEFAULT_RES, 4)
+    low_heavy = {res: m for res, m in zip(sorted(DEFAULT_RES), MIX_A)}
+    high_heavy = {res: m for res, m in zip(sorted(DEFAULT_RES), MIX_B)}
+    c_low = allocate_replica_counts(blocks, 4, mix=low_heavy)
+    c_high = allocate_replica_counts(blocks, 4, mix=high_heavy)
+    hi = next(i for i, b in enumerate(blocks) if (32, 32) in b)
+    assert c_high[hi] > c_low[hi]
+    assert sum(c_low) == sum(c_high) == 4 and min(c_low + c_high) >= 1
+
+
+# ---------------- drift-triggered repartitioning ----------------
+
+def _drift_cluster(repartition, qps=128.0, seed=1):
+    factory = sim_engine_factory(DEFAULT_RES, cache=CacheHitModel())
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=4, policy="resolution_affinity",
+                               initial_mix=MIX_A, repartition=repartition,
+                               record_timeseries=False))
+    wl = phased_workload([(30.0, qps, MIX_A), (30.0, qps, MIX_B)], seed=seed)
+    return cl.run(wl), cl, wl
+
+
+def test_repartition_fires_and_preserves_in_flight():
+    m, cl, wl = _drift_cluster(RepartitionConfig())
+    # the mix flip triggered at least one repartition + block migration
+    assert m.repartitions and m.migrations >= 1
+    assert all(e["t"] > 30.0 for e in m.repartitions)  # after the flip
+    # in-flight preservation: every request ended exactly once, none stuck
+    assert m.completed + m.dropped == len(wl)
+    assert all(r.state in ("done", "dropped") for r in wl)
+    # migrated replicas switched engines without losing served work
+    moved = [r for r in cl.replicas if r.migrations]
+    assert moved and all(r.merged_metrics.completed > 0 for r in moved)
+
+
+def test_adaptive_repartition_beats_static_on_drift():
+    static, _, _ = _drift_cluster(None)
+    adaptive, _, _ = _drift_cluster(RepartitionConfig())
+    assert adaptive.slo_satisfaction > static.slo_satisfaction, \
+        (adaptive.slo_satisfaction, static.slo_satisfaction)
+    assert adaptive.goodput >= static.goodput
+
+
+def test_repartition_charges_switch_cost():
+    """A migrated replica is not dispatchable before drain + switch_cost."""
+    m, cl, _ = _drift_cluster(RepartitionConfig(switch_cost=2.0))
+    moved = [r for r in cl.replicas if r.migrations]
+    assert moved
+    t0 = min(e["t"] for e in m.repartitions)
+    for rep in moved:
+        # it went unready for at least the switch cost after the plan fired
+        assert rep.ready_at >= t0 + 2.0
+
+
+def test_static_affinity_unchanged_without_repartition_config():
+    """No RepartitionConfig -> the PR-1 frozen-partition behavior."""
+    m, cl, _ = _drift_cluster(None)
+    assert not m.repartitions and m.migrations == 0
+    assert cl.mix_tracker is None
+
+
+def test_invalid_initial_mix_fails_fast():
+    factory = sim_engine_factory(DEFAULT_RES)
+    for bad in ((0.5, 0.5), (0.0, 0.0, 0.0), (1.5, -1.0, 0.5)):
+        with pytest.raises(ValueError, match="initial_mix"):
+            Cluster(factory, DEFAULT_RES,
+                    ClusterConfig(n_replicas=3,
+                                  policy="resolution_affinity",
+                                  initial_mix=bad))
+
+
+def test_repartition_gate_ignores_stale_window():
+    """After an idle gap longer than the mix window, the pre-trim sample
+    count must not satisfy min_samples — else a repartition fires from the
+    empty window's uniform-fallback mix."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=3, policy="resolution_affinity",
+                               initial_mix=MIX_B,
+                               repartition=RepartitionConfig(
+                                   min_samples=10, cooldown=0.0)))
+    for i in range(40):                       # burst, then a long gap
+        cl.mix_tracker.observe(i * 0.1, DEFAULT_RES[2])
+    assert not cl._maybe_repartition(100.0)
+    assert not cl.repartition_log
+
+
+def test_drained_migrator_swaps_before_queue_is_declared_dead():
+    """A request routable only to a migrating replica's target block must
+    wait for the engine swap, not be dropped as unservable the moment the
+    migrator finishes draining."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=2, policy="resolution_affinity",
+                               repartition=RepartitionConfig(
+                                   switch_cost=0.5),
+                               record_timeseries=False))
+    # r1 owns the {24x24} block; give it in-flight work, then mark it
+    # migrating so the frontend request below has no ready server until
+    # the drain + swap completes
+    r1 = next(r for r in cl.replicas if r.supports((24, 24)))
+    inflight = Request(rid=900, resolution=(24, 24), arrival=0.0, slo=1e9,
+                       total_steps=2)
+    r1.submit(inflight)
+    r1.migrating_to = [(24, 24)]
+    queued = Request(rid=901, resolution=(24, 24), arrival=0.0, slo=1e9,
+                     total_steps=2)
+    m = cl.run([queued])
+    assert m.router_dropped == 0
+    assert queued.state == "done" and inflight.state == "done"
+    assert r1.migrations == 1 and r1.migrating_to is None
+
+
+def test_repartition_with_autoscaler_keeps_every_block_served():
+    """Autoscaler scale-down and repartition migration interact safely:
+    no resolution ever becomes permanently unroutable (a retired mover
+    would strand its target block), every request still ends once."""
+    factory = sim_engine_factory(DEFAULT_RES, cache=CacheHitModel())
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=4, policy="resolution_affinity",
+                               initial_mix=MIX_A,
+                               repartition=RepartitionConfig(),
+                               autoscaler=AutoscalerConfig(
+                                   min_replicas=3, max_replicas=6,
+                                   cold_start=1.0, cooldown=2.0),
+                               record_timeseries=False))
+    wl = phased_workload([(15.0, 96.0, MIX_A), (15.0, 96.0, MIX_B),
+                          (20.0, 4.0, MIX_B)], seed=2)
+    m = cl.run(wl)
+    assert m.router_dropped == 0
+    assert m.completed + m.dropped == len(wl)
+    assert all(r.state in ("done", "dropped") for r in wl)
+
+
+# ---------------- predictive autoscaling ----------------
+
+def _ramp_cluster(predictive, seed=3):
+    cfg = AutoscalerConfig(min_replicas=2, max_replicas=8, cold_start=5.0,
+                           cooldown=2.0, predictive=predictive,
+                           service_rate=24.0)
+    cl = Cluster(sim_engine_factory(DEFAULT_RES), DEFAULT_RES,
+                 ClusterConfig(n_replicas=2, policy="join_shortest_queue",
+                               autoscaler=cfg, record_timeseries=True))
+    m = cl.run(ramp_workload(8.0, 140.0, 35.0, seed=seed))
+    return m, cl
+
+
+def _time_to_ready(m, k):
+    for t, _, _, n in m.queue_ts:
+        if n >= k:
+            return t
+    return float("inf")
+
+
+def test_predictive_prespawns_and_beats_reactive():
+    reactive, cl_r = _ramp_cluster(False)
+    predictive, cl_p = _ramp_cluster(True)
+    # the forecaster actually pre-spawned (reactive path never does)
+    assert cl_p.autoscaler.predictive_spawns
+    assert not cl_r.autoscaler.predictive_spawns
+    # pre-spawn lands before reactive even starts scaling
+    first_r = min(t for t, a in cl_r.autoscaler.actions if a > 0)
+    assert min(cl_p.autoscaler.predictive_spawns) < first_r
+    # capacity arrives earlier: time until 5 replicas are warm
+    assert _time_to_ready(predictive, 5) < _time_to_ready(reactive, 5)
+    assert predictive.slo_satisfaction > reactive.slo_satisfaction
+
+
+def test_forecaster_tracks_ramp_and_reliability():
+    from repro.cluster import ArrivalForecaster
+    fc = ArrivalForecaster(bin_s=1.0)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    while t < 30.0:                     # rate ramps 5 -> 65 qps
+        rate = 5.0 + 2.0 * t
+        t += rng.exponential(1.0 / rate)
+        fc.observe(t)
+    fc.advance(30.0)
+    assert fc.reliable(min_bins=4, max_rel_err=0.5)
+    # trend extrapolates: the 5s-out forecast exceeds the current level
+    assert fc.forecast(5.0) > fc.level
+    assert fc.forecast(5.0) == pytest.approx(65.0 + 10.0, rel=0.4)
+
+
+def test_unreliable_forecast_falls_back_to_reactive():
+    """With no arrival history the predictive path must stand down."""
+    from repro.cluster import ArrivalForecaster
+    fc = ArrivalForecaster()
+    assert not fc.reliable(min_bins=4, max_rel_err=0.5)
+    assert fc.forecast(10.0) == 0.0
+
+
+def test_service_rate_learning_ignores_drops():
+    """The learned per-replica throughput counts completions only — drops
+    are demand that was shed, not capacity."""
+    from repro.cluster import Autoscaler
+    from repro.core.serving import TickEvents
+    asc = Autoscaler(AutoscalerConfig(predictive=True, window=10.0))
+    done = [Request(rid=i, resolution=DEFAULT_RES[0], arrival=0.0, slo=9.0,
+                    total_steps=1) for i in range(10)]
+    for r in done:
+        r.finish = 5.0
+    shed = [Request(rid=100 + i, resolution=DEFAULT_RES[0], arrival=0.0,
+                    slo=1.0, total_steps=1) for i in range(40)]
+    asc.observe(0.0, [TickEvents(now=0.0, completed=done[:5])])
+    asc.observe(5.0, [TickEvents(now=5.0, completed=done[5:], dropped=shed)])
+    asc._learn_service_rate(now=5.0, backlog=10.0, ready=1)
+    # 10 completions over a 5 s span and 1 ready replica -> 2 req/s, not
+    # the 10 req/s that counting the 40 drops would give
+    assert asc.service_rate() == pytest.approx(2.0)
+
+
+# ---------------- cache-aware latency surrogate ----------------
+
+def test_hit_model_monotone_in_concentration_and_step():
+    model = CacheHitModel()
+    concs = np.linspace(0.2, 1.0, 9)
+    hits = [model.hit_rate(c, 0.5) for c in concs]
+    assert all(b > a for a, b in zip(hits, hits[1:]))
+    fracs = np.linspace(0.0, 1.0, 9)
+    hits = [model.hit_rate(0.8, f) for f in fracs]
+    assert all(b > a for a, b in zip(hits, hits[1:]))
+
+
+def test_surrogate_latency_decreases_with_hit_rate():
+    counts, patch = [2, 2, 2], gcd_patch_size(DEFAULT_RES)
+    lats = [patch_aware_step_latency(counts, DEFAULT_RES, patch,
+                                     cache_hit_rate=h)
+            for h in (0.0, 0.3, 0.6, 0.9)]
+    assert all(b < a for a, b in zip(lats, lats[1:]))
+
+
+def test_concentration_rewards_affinity_blocks():
+    patch = gcd_patch_size(DEFAULT_RES)
+    ppr = [(h // patch) * (w // patch) for h, w in DEFAULT_RES]
+    pure = resolution_concentration([4, 0, 0], ppr)
+    mixed = resolution_concentration([2, 2, 2], ppr)
+    assert pure == pytest.approx(1.0)
+    assert mixed < pure
+    # an affinity replica (single-res block) models a higher hit rate and a
+    # later-step batch predicts faster than the same batch at step 0
+    lm = PatchAwareLatency(DEFAULT_RES, patch, cache=CacheHitModel())
+    assert lm.modeled_hit_rate(pure, 0.5) > lm.modeled_hit_rate(mixed, 0.5)
+    early = [Request(rid=i, resolution=DEFAULT_RES[0], arrival=0.0,
+                     slo=1e9, total_steps=10) for i in range(4)]
+    late = [Request(rid=i, resolution=DEFAULT_RES[0], arrival=0.0,
+                    slo=1e9, total_steps=10, steps_done=8)
+            for i in range(4)]
+    assert lm.predict_batch([4, 0, 0], late) < \
+        lm.predict_batch([4, 0, 0], early)
+
+
+def test_fit_cache_hit_model_recovers_monotone_fit():
+    truth = CacheHitModel(b0=-2.5, b_conc=2.0, b_step=3.0)
+    rng = np.random.default_rng(0)
+    samples = []
+    for _ in range(200):
+        c, f = rng.uniform(0.2, 1.0), rng.uniform(0.0, 1.0)
+        noisy = np.clip(truth.hit_rate(c, f) + rng.normal(0, 0.02), 0, 1)
+        samples.append((c, f, noisy))
+    fit = fit_cache_hit_model(samples)
+    assert fit.b_conc > 0 and fit.b_step > 0
+    for c, f in ((0.3, 0.2), (0.7, 0.5), (1.0, 0.9)):
+        assert fit.hit_rate(c, f) == pytest.approx(truth.hit_rate(c, f),
+                                                   abs=0.05)
+
+
+def test_cluster_reports_cache_hit_rates():
+    """Cache-aware fleets report per-replica + fleet hit rates, and
+    affinity replicas (concentrated resolution sets) beat mixed ones."""
+    factory = sim_engine_factory(DEFAULT_RES, cache=CacheHitModel())
+    aff = Cluster(factory, DEFAULT_RES,
+                  ClusterConfig(n_replicas=3, policy="resolution_affinity",
+                                record_timeseries=False))
+    rr = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=3, policy="round_robin",
+                               record_timeseries=False))
+    ma = aff.run(cluster_workload(qps=48.0, duration=15.0, seed=1, mix=SKEW))
+    mr = rr.run(cluster_workload(qps=48.0, duration=15.0, seed=1, mix=SKEW))
+    assert 0.0 < mr.cache_hit_rate < ma.cache_hit_rate <= 1.0
+    assert all(rep.cache_hit_rate > 0 for rep in ma.per_replica.values())
+    assert "cache_hit_rate" in ma.summary()
