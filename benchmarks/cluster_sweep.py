@@ -19,6 +19,17 @@ repartitioning, both on the cache-aware latency surrogate; (2) a ramping
 arrival rate served by the reactive autoscaler vs. the predictive
 (Holt-forecast) one. The adaptive runs must beat their frozen baselines on
 fleet SLO satisfaction — asserted, like the routing headline.
+
+``--elastic`` adds the elastic fleet controller axis: (1) an up-then-down
+arrival wave served by the PR-2 frozen baseline (reactive autoscaler,
+block structure frozen at the initial fleet size) vs. the elastic
+controller (predictive spawn + predictive retirement + fleet-size-aware
+repartitioning) — the controller must win fleet SLO satisfaction *and*
+track the ramp-down with a strictly smaller final fleet; (2) a constant-
+rate workload under Poisson replica crashes, with vs. without recovery
+(crash-requeue + cold-started replacement) — recovery must win fleet SLO
+satisfaction. Both wins are asserted; CI's bench-smoke job runs them on
+every PR.
 """
 from __future__ import annotations
 
@@ -26,12 +37,15 @@ import argparse
 import json
 import sys
 import time
+from dataclasses import replace
 from pathlib import Path
 
 from benchmarks.common import make_cluster
-from repro.cluster import AutoscalerConfig, RepartitionConfig
-from repro.cluster.simtools import (cluster_workload, phased_workload,
-                                    ramp_workload)
+from repro.cluster import (AutoscalerConfig, FailureConfig,
+                           RepartitionConfig)
+from repro.cluster.simtools import (UPDOWN_KNOTS, cluster_workload,
+                                    phased_workload,
+                                    piecewise_rate_workload, ramp_workload)
 
 POLICIES = ("round_robin", "join_shortest_queue", "least_slack",
             "resolution_affinity")
@@ -125,6 +139,57 @@ def predictive_autoscale_trace(duration, seed):
     return out
 
 
+def elastic_updown_trace(seed):
+    """PR-2 frozen baseline (reactive autoscaler, blocks frozen at the
+    initial fleet size) vs. the elastic controller (predictive spawn +
+    predictive retirement + resize-triggered repartitioning) on the same
+    up-then-down arrival wave, resolution-affinity placement for both."""
+    base = AutoscalerConfig(min_replicas=2, max_replicas=8, cold_start=5.0,
+                            cooldown=2.0, service_rate=24.0)
+    out = {"knots": [list(k) for k in UPDOWN_KNOTS]}
+    for tag, asc, rcfg in (
+            ("baseline", base, None),
+            ("elastic",
+             replace(base, predictive=True, predictive_down=True),
+             RepartitionConfig(cooldown=3.0, switch_cost=0.5))):
+        cl = make_cluster(n_replicas=2, policy="resolution_affinity",
+                          autoscaler=asc, repartition=rcfg,
+                          record_timeseries=True)
+        m = cl.run(piecewise_rate_workload(UPDOWN_KNOTS, seed=seed))
+        s = m.summary()
+        s["predictive_retirements"] = [
+            round(t, 2) for t in cl.autoscaler.predictive_retirements]
+        out[tag] = s
+        print(f"updown {tag:9s} slo={s['slo_satisfaction']:.3f} "
+              f"p95={s['latency_p95']:.3f}s replicas={s['replicas']} "
+              f"early-retires={len(s['predictive_retirements'])} "
+              f"migrations={s['migrations']}")
+    return out
+
+
+def failure_recovery_trace(seed, qps=56.0, duration=40.0):
+    """Constant-rate fleet under Poisson replica crashes: the PR-2 baseline
+    has no failure handling beyond requeueing the dead replica's work (the
+    fleet just shrinks), the elastic controller also spawns a cold-started
+    replacement per crash."""
+    out = {"qps": qps, "mtbf": 25.0}
+    for tag, recover in (("no_recovery", False), ("recovery", True)):
+        cl = make_cluster(n_replicas=4, policy="join_shortest_queue",
+                          failures=FailureConfig(mtbf=25.0, recover=recover,
+                                                 seed=seed),
+                          record_timeseries=False)
+        m = cl.run(cluster_workload(qps=qps, duration=duration, seed=seed))
+        s = m.summary()
+        out[tag] = s
+        f = s["failures"]
+        print(f"crash {tag:12s} slo={s['slo_satisfaction']:.3f} "
+              f"failed={f['replicas_failed']} "
+              f"recovered={f['recoveries']} "
+              f"requeued={f['requests_requeued']} "
+              f"requeue-delay-p95={f['requeue_delay_p95']:.3f}s")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -132,6 +197,11 @@ def main() -> None:
     ap.add_argument("--adaptive", action="store_true",
                     help="add drifting-mix repartitioning + predictive "
                          "autoscaling comparisons (cache-aware surrogate)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="add elastic-controller comparisons: up/down "
+                         "arrival wave (predictive retirement + resize "
+                         "repartitioning vs frozen baseline) and Poisson "
+                         "replica crashes (recovery vs none)")
     ap.add_argument("--out", default="benchmarks/cluster_results.json")
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--seed", type=int, default=1)
@@ -155,6 +225,11 @@ def main() -> None:
                 seed=args.seed),
             "autoscale": predictive_autoscale_trace(
                 duration=max(args.duration, 35.0), seed=args.seed + 2)}
+
+    elastic = None
+    if args.elastic:
+        elastic = {"updown": elastic_updown_trace(seed=args.seed + 2),
+                   "crash": failure_recovery_trace(seed=args.seed + 4)}
 
     # headline: SLO-aware / resolution-aware routing must beat round-robin
     # somewhere in the sweep
@@ -181,6 +256,8 @@ def main() -> None:
             if row["adaptive"]["slo_satisfaction"]
             > row["static"]["slo_satisfaction"]]
         out["adaptive"]["repartition_wins_qps"] = adaptive_wins
+    if elastic is not None:
+        out["elastic"] = elastic
     Path(args.out).write_text(json.dumps(out, indent=1))
     print(f"# wrote {args.out} ({len(results)} sweep points, "
           f"{len(wins)} routing wins vs round_robin)", file=sys.stderr)
@@ -198,6 +275,28 @@ def main() -> None:
         if ra["slo_satisfaction"] < rr2["slo_satisfaction"]:
             raise SystemExit("predictive autoscaler lost to reactive on "
                              "the ramp workload — forecaster regression?")
+    if elastic is not None:
+        el, bl = elastic["updown"]["elastic"], elastic["updown"]["baseline"]
+        if el["slo_satisfaction"] <= bl["slo_satisfaction"]:
+            raise SystemExit(
+                "elastic controller lost to the frozen baseline on the "
+                "up/down wave — controller regression?")
+        if not el["predictive_retirements"]:
+            raise SystemExit("elastic controller never retired ahead of "
+                             "the ramp-down — predictive-down regression?")
+        if el["replicas"]["final"] >= bl["replicas"]["final"]:
+            raise SystemExit(
+                "elastic controller did not track the ramp-down (final "
+                "fleet not smaller than the frozen baseline's)")
+        rec = elastic["crash"]["recovery"]
+        norec = elastic["crash"]["no_recovery"]
+        if rec["failures"]["replicas_failed"] == 0:
+            raise SystemExit("crash scenario injected no failures — "
+                             "failure-injection regression?")
+        if rec["slo_satisfaction"] <= norec["slo_satisfaction"]:
+            raise SystemExit(
+                "failure recovery lost to no-recovery on the crash "
+                "workload — recovery regression?")
 
 
 if __name__ == "__main__":

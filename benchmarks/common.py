@@ -102,13 +102,15 @@ def workload(eng, qps, duration=40.0, slo_scale=5.0, steps=10, seed=0,
 
 def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                  steps=10, scale=1.0, record_timeseries=True,
-                 initial_mix=None, repartition=None, cache=None):
+                 initial_mix=None, repartition=None, cache=None,
+                 failures=None):
     """Multi-replica sim cluster over the benchmark resolution ladder.
     Engines are synthetic sim (no tensors) with the patch-aware latency
     surrogate; pair with ``repro.cluster.simtools.cluster_workload`` so
     SLOs use the same standalone normalizers. ``cache=True`` (or a
     ``CacheHitModel``) makes the surrogate cache-aware; ``initial_mix`` +
-    ``repartition`` drive the workload-adaptive affinity path."""
+    ``repartition`` drive the workload-adaptive affinity path; ``failures``
+    (a ``FailureConfig``) injects Poisson replica crashes."""
     from repro.cluster import Cluster, ClusterConfig, sim_engine_factory
     from repro.core.latency_model import CacheHitModel
     if cache is True:
@@ -120,4 +122,5 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                                  autoscaler=autoscaler,
                                  initial_mix=initial_mix,
                                  repartition=repartition,
+                                 failures=failures,
                                  record_timeseries=record_timeseries))

@@ -1,7 +1,10 @@
 """Cluster serving demo: one Poisson fleet workload through every dispatch
-policy on the sim clock, an autoscaled run from a single replica, then the
+policy on the sim clock, an autoscaled run from a single replica, the
 workload-adaptive layer — drift-triggered repartitioning on a mix flip and
-predictive (forecast-driven) autoscaling on an arrival ramp.
+predictive (forecast-driven) autoscaling on an arrival ramp — and the
+elastic fleet controller: predictive retirement + fleet-size-aware
+repartitioning on an up/down arrival wave, and crash-requeue + cold-started
+replacement under Poisson replica failures.
 
 Shows the cluster-level levers on top of the single-engine paper
 reproduction: SLO-aware routing (least_slack), resolution-partitioned
@@ -12,11 +15,14 @@ fleet actually sees stops matching what it was provisioned for.
 Run: PYTHONPATH=src python examples/serve_cluster.py
 """
 import time
+from dataclasses import replace
 
 from repro.cluster import (AutoscalerConfig, Cluster, ClusterConfig,
-                           RepartitionConfig, sim_engine_factory)
-from repro.cluster.simtools import (DEFAULT_RES, cluster_workload,
-                                    phased_workload, ramp_workload)
+                           FailureConfig, RepartitionConfig,
+                           sim_engine_factory)
+from repro.cluster.simtools import (DEFAULT_RES, UPDOWN_KNOTS,
+                                    cluster_workload, phased_workload,
+                                    piecewise_rate_workload, ramp_workload)
 from repro.core.latency_model import CacheHitModel
 
 QPS, DURATION, SEED = 48.0, 30.0, 1
@@ -81,3 +87,44 @@ for tag, predictive in (("reactive", False), ("predictive", True)):
           f"p95={m.latency_quantile(0.95):.3f}s "
           f"spawns={[round(t, 1) for t, a in cl.autoscaler.actions if a > 0]}"
           f" pre-spawns={[round(t, 1) for t in pre]}")
+
+# ---- elastic controller: the wave recedes, the fleet should too ----------
+print("\nup/down arrival wave (8 -> 140 -> 6 qps), frozen baseline vs "
+      "elastic controller\n(predictive retirement + resize-triggered "
+      "repartitioning), resolution_affinity:")
+base = AutoscalerConfig(min_replicas=2, max_replicas=8, cold_start=5.0,
+                        cooldown=2.0, service_rate=24.0)
+for tag, asc, rcfg in (
+        ("frozen baseline", base, None),
+        ("elastic controller",
+         replace(base, predictive=True, predictive_down=True),
+         RepartitionConfig(cooldown=3.0, switch_cost=0.5))):
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=2, policy="resolution_affinity",
+                               autoscaler=asc, repartition=rcfg))
+    m = cl.run(piecewise_rate_workload(UPDOWN_KNOTS, seed=SEED + 2))
+    stats = m.replica_count_stats()
+    print(f"{tag:20s} slo={m.slo_satisfaction:.3f} "
+          f"p95={m.latency_quantile(0.95):.3f}s "
+          f"final-fleet={stats['final']:.0f} "
+          f"early-retires={[round(t, 1) for t in cl.autoscaler.predictive_retirements]} "
+          f"resize-repartitions="
+          f"{len([e for e in m.repartitions if e['reason'] == 'resize'])}")
+
+# ---- failure injection: replicas crash, the controller repairs ----------
+print("\nPoisson replica crashes (mtbf=25s/replica) at constant 56 qps, "
+      "with and without recovery:")
+for tag, recover in (("no recovery", False),
+                     ("crash-requeue + respawn", True)):
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=4, policy="join_shortest_queue",
+                               failures=FailureConfig(mtbf=25.0,
+                                                      recover=recover,
+                                                      seed=SEED + 4)))
+    m = cl.run(cluster_workload(qps=56.0, duration=40.0, seed=SEED + 4))
+    delay = (sum(m.requeue_delays) / len(m.requeue_delays)
+             if m.requeue_delays else 0.0)
+    print(f"{tag:24s} slo={m.slo_satisfaction:.3f} "
+          f"crashed={m.replicas_failed} respawned={m.recoveries} "
+          f"requeued={m.requests_requeued} "
+          f"requeue-delay-mean={delay:.3f}s")

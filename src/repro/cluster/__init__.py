@@ -36,7 +36,8 @@ Quick start::
 """
 from repro.cluster.autoscaler import (ArrivalForecaster, Autoscaler,
                                       AutoscalerConfig)
-from repro.cluster.driver import Cluster, ClusterConfig, RepartitionConfig
+from repro.cluster.driver import (Cluster, ClusterConfig, FailureConfig,
+                                  RepartitionConfig)
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
 from repro.cluster.replica import Replica
 from repro.cluster.router import (POLICIES, DispatchPolicy,
@@ -46,16 +47,17 @@ from repro.cluster.router import (POLICIES, DispatchPolicy,
                                   mix_drift, partition_resolutions)
 from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
                                     cluster_workload, phased_workload,
-                                    ramp_workload, sim_engine_factory,
+                                    piecewise_rate_workload, ramp_workload,
+                                    sim_engine_factory,
                                     standalone_latencies)
 
 __all__ = [
     "ArrivalForecaster", "Autoscaler", "AutoscalerConfig", "Cluster",
-    "ClusterConfig", "RepartitionConfig", "ClusterMetrics", "ReplicaReport",
-    "Replica", "Router", "DispatchPolicy", "RoundRobin",
+    "ClusterConfig", "FailureConfig", "RepartitionConfig", "ClusterMetrics",
+    "ReplicaReport", "Replica", "Router", "DispatchPolicy", "RoundRobin",
     "JoinShortestQueue", "LeastSlack", "ResolutionAffinity", "POLICIES",
     "make_policy", "MixTracker", "mix_drift", "partition_resolutions",
     "allocate_replica_counts", "DEFAULT_RES", "PatchAwareLatency",
-    "cluster_workload", "phased_workload", "ramp_workload",
-    "sim_engine_factory", "standalone_latencies",
+    "cluster_workload", "phased_workload", "piecewise_rate_workload",
+    "ramp_workload", "sim_engine_factory", "standalone_latencies",
 ]

@@ -23,6 +23,17 @@ self-monitors: its one-bin-ahead relative error is tracked, and while that
 error is high (or too few bins have been seen) the predictive path stands
 down and only the reactive signals act.
 
+Predictive **scale-down** (``predictive_down``, elastic controller): the
+same reliability-gated forecast also retires capacity *ahead* of a
+ramp-down. When the projected rate — priced with a retirement headroom
+``down_headroom`` larger than the spawn headroom, so the two thresholds
+form a hysteresis band that cannot flap — would leave the fleet
+over-provisioned by a whole replica, and that stays true continuously for
+``down_hold`` seconds, one replica is marked retiring before the reactive
+idle signal (which needs the queues to actually empty) would ever fire.
+The victim drains first, exactly like reactive scale-down: predictive
+retirement never kills in-flight work.
+
 Scale-up spawns a replica that serves traffic only after ``cold_start``
 seconds — the model-load/compile penalty is charged honestly: arrivals
 keep queueing meanwhile. Scale-down marks a victim as *retiring*: it
@@ -128,6 +139,20 @@ class AutoscalerConfig:
     # per-replica sustainable throughput (req/s); None = learn online from
     # the completion rate while the fleet is under pressure
     service_rate: Optional[float] = None
+    # -- predictive scale-down (elastic controller; needs predictive) ------
+    predictive_down: bool = False
+    # retire only while forecast * down_headroom still fits in n-1 replicas;
+    # down_headroom > headroom keeps a hysteresis band between the spawn and
+    # retire thresholds so forecast noise cannot flap the fleet
+    down_headroom: float = 1.4
+    down_hold: float = 5.0           # seconds the over-provision must persist
+
+    def __post_init__(self) -> None:
+        # early retirement is forecast-gated: asking for predictive_down
+        # alone implies the predictive path (otherwise the flag would be
+        # silently inert — the forecaster never even sees arrivals)
+        if self.predictive_down:
+            self.predictive = True
 
 
 class Autoscaler:
@@ -139,6 +164,9 @@ class Autoscaler:
         self.actions: list = []      # (now, +1 | -1) decision log
         self.forecaster = ArrivalForecaster(bin_s=cfg.forecast_bin)
         self.predictive_spawns: List[float] = []   # pre-spawn times
+        self.predictive_retirements: List[float] = []  # early-retire times
+        self._down_since: Optional[float] = None   # over-provision onset
+        self._last_action_prev = -1e18   # for cancel_retirement rollback
         self._mu: Optional[float] = None           # learned req/s/replica
 
     # -- signals -----------------------------------------------------------
@@ -172,6 +200,16 @@ class Autoscaler:
         online estimate learned while the fleet was under pressure."""
         return self.cfg.service_rate if self.cfg.service_rate is not None \
             else self._mu
+
+    def down_service_rate(self) -> Optional[float]:
+        """Capacity estimate for *retirement* decisions: the conservative
+        min of the configured rate and the online-learned one. Spawning on
+        an optimistic estimate costs idle capacity; retiring on one costs
+        an instant overload plus a cold start to undo it — and worse, the
+        pair flaps forever. So the down path only trusts the configured
+        rate as far as observation has not contradicted it."""
+        rates = [r for r in (self.cfg.service_rate, self._mu) if r]
+        return min(rates) if rates else None
 
     def _learn_service_rate(self, now: float, backlog: float,
                             ready: int) -> None:
@@ -222,19 +260,22 @@ class Autoscaler:
         pressured = (backlog > cfg.scale_up_backlog
                      or frontend_depth > cfg.scale_up_frontend * n
                      or (att is not None and att < cfg.slo_target))
+        if pressured:
+            self._down_since = None
         if pressured and n < cfg.max_replicas:
             self._idle_since = None
             self._last_action = now
             self.actions.append((now, +1))
             return +1
 
+        horizon = cfg.forecast_horizon if cfg.forecast_horizon \
+            is not None else cfg.cold_start + cfg.forecast_bin
+
         # predictive pre-spawn: provision for the rate one cold-start out,
         # counting replicas already warming; reliability-gated so a bad
         # forecast degrades to pure reactive scaling
         if cfg.predictive and n < cfg.max_replicas:
             mu = self.service_rate()
-            horizon = cfg.forecast_horizon if cfg.forecast_horizon \
-                is not None else cfg.cold_start + cfg.forecast_bin
             if mu and self.forecaster.reliable(cfg.forecast_min_bins,
                                                cfg.forecast_max_err):
                 lam = self.forecaster.forecast(horizon)
@@ -242,14 +283,57 @@ class Autoscaler:
                               cfg.max_replicas)
                 if desired > n:
                     self._idle_since = None
+                    self._down_since = None
                     self._last_action = now
                     self.actions.append((now, +1))
                     self.predictive_spawns.append(now)
                     return +1
 
+        # predictive early retirement: the forecast (with the larger
+        # retirement headroom) says n-1 replicas will still cover demand at
+        # the horizon — start draining one *before* the queues empty, so
+        # capacity tracks a ramp-down instead of trailing it by the whole
+        # reactive idle window
+        if cfg.predictive and cfg.predictive_down and not pressured \
+                and n > cfg.min_replicas:
+            mu = self.down_service_rate()
+            over = False
+            if mu and self.forecaster.reliable(cfg.forecast_min_bins,
+                                               cfg.forecast_max_err):
+                lam = self.forecaster.forecast(horizon)
+                needed = max(int(math.ceil(lam * cfg.down_headroom / mu)),
+                             cfg.min_replicas)
+                over = needed < n
+            if not over:
+                self._down_since = None
+            else:
+                if self._down_since is None:
+                    self._down_since = now
+                if now - self._down_since >= cfg.down_hold:
+                    self._down_since = None
+                    self._last_action_prev = self._last_action
+                    self._last_action = now
+                    self.actions.append((now, -1))
+                    self.predictive_retirements.append(now)
+                    return -1
+
         if (idle and n > cfg.min_replicas
                 and now - self._idle_since >= cfg.scale_down_hold):
+            self._last_action_prev = self._last_action
             self._last_action = now
             self.actions.append((now, -1))
             return -1
         return 0
+
+    def cancel_retirement(self, now: float) -> None:
+        """The driver found no retirable victim for the -1 just issued at
+        ``now`` (e.g. every candidate is its block's last server): undo the
+        decision log and the consumed cooldown, so phantom retirements are
+        neither reported (``predictive_retirements`` feeds benchmark
+        assertions) nor allowed to throttle the next real action."""
+        if self.actions and self.actions[-1] == (now, -1):
+            self.actions.pop()
+        if self.predictive_retirements \
+                and self.predictive_retirements[-1] == now:
+            self.predictive_retirements.pop()
+        self._last_action = self._last_action_prev

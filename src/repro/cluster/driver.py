@@ -23,6 +23,25 @@ replicas to their new blocks — drain-before-switch (in-flight requests
 finish on the old block) with an honest ``switch_cost`` charged on the sim
 clock before the migrated replica serves again.
 
+The elastic fleet controller extends the same machinery along two axes:
+
+- **Fleet-size-aware repartitioning** (``RepartitionConfig.on_resize``,
+  default on): every autoscaler fleet-size change — spawn, retirement,
+  crash — re-derives the *block structure* for the new replica count
+  (``partition_resolutions`` / ``allocate_replica_counts`` at the new
+  ``k``), not just the replica-to-block assignment, and migrates the
+  surplus replicas drain-before-switch. GCD patch size and cache locality
+  stay optimal as the fleet grows and shrinks; at a stable fleet size the
+  plan is a fixed point and no further migration fires.
+- **Failure injection + recovery** (``FailureConfig``): each replica draws
+  an exponential lifetime at spawn (memoryless, so the fleet sees Poisson
+  crashes on the sim clock). A crash kills the replica without draining;
+  the driver requeues everything it held through the router head (the dead
+  replica is excluded automatically — retired replicas are never dispatch
+  candidates) and, when ``recover`` is set, immediately spawns a
+  cold-started replacement over the dead replica's block so its
+  resolutions never become unroutable.
+
 Engines must be sim-clock (``EngineConfig.clock == "sim"``); for large
 sweeps build them with ``sim_synthetic=True`` (see
 ``repro.cluster.simtools``).
@@ -49,13 +68,35 @@ EngineFactory = Callable[[Sequence[Resolution]], "object"]
 
 @dataclass
 class RepartitionConfig:
-    """Drift-triggered affinity repartitioning (resolution_affinity only)."""
+    """Drift- and resize-triggered affinity repartitioning
+    (resolution_affinity only)."""
     drift_threshold: float = 0.3     # L1(observed mix, built-for mix)
     window: float = 10.0             # arrival-mix histogram window (s)
     min_samples: int = 30            # arrivals before drift is trusted
     cooldown: float = 8.0            # min seconds between repartitions
     switch_cost: float = 1.0         # charged when a replica swaps blocks
     max_concurrent: int = 1          # replicas draining-to-migrate at once
+    # recompute the block structure whenever the dispatchable fleet size
+    # changes (autoscaler spawn/retire, crash) — the elastic controller's
+    # placement half; off reproduces the drift-only PR-2 behavior
+    on_resize: bool = True
+
+
+@dataclass
+class FailureConfig:
+    """Poisson replica-crash injection on the sim clock. Every replica
+    draws an exponential lifetime when it spawns (memoryless, so the fleet
+    failure process is Poisson); the driver detects a due crash at the next
+    event, requeues the dead replica's queued + in-flight requests through
+    the router, and — when ``recover`` — replaces it with a cold-started
+    engine over the same resolution block."""
+    mtbf: float = 30.0               # mean seconds to crash, per replica
+    recover: bool = True             # spawn a replacement on detection
+    # replacement warm-up; None -> autoscaler cold_start (or 2.0 s without
+    # an autoscaler)
+    cold_start: Optional[float] = None
+    max_failures: Optional[int] = None   # stop injecting after this many
+    seed: int = 0
 
 
 @dataclass
@@ -67,6 +108,7 @@ class ClusterConfig:
     # (uniform if None — the paper's workload assumption)
     initial_mix: Optional[Sequence[float]] = None
     repartition: Optional[RepartitionConfig] = None
+    failures: Optional[FailureConfig] = None
     record_timeseries: bool = True
     max_events: int = 2_000_000        # runaway-loop backstop
 
@@ -82,6 +124,13 @@ class Cluster:
         self.autoscaler = Autoscaler(cfg.autoscaler) if cfg.autoscaler else None
         self.replicas: List[Replica] = []
         self._next_rid = 0
+        # failure injection (must exist before the first _spawn below)
+        self._failure_rng = np.random.default_rng(
+            cfg.failures.seed) if cfg.failures else None
+        self._n_failures = 0
+        self._recoveries = 0
+        self._requeue_delays: List[float] = []
+        self.failure_log: List[dict] = []
         if cfg.initial_mix is not None:
             mix0 = np.asarray(cfg.initial_mix, np.float64)
             if len(mix0) != len(self.resolutions) or (mix0 < 0).any() \
@@ -107,7 +156,8 @@ class Cluster:
         for block, c in zip(self._blocks, counts):
             for _ in range(c):
                 self._spawn(block, now=0.0, cold=0.0)
-        # drift-triggered repartitioning state
+        # drift-/resize-triggered repartitioning state
+        self._built_k = cfg.n_replicas   # fleet size the blocks were cut for
         self.mix_tracker: Optional[MixTracker] = None
         self._migration_queue: Deque[Tuple[Replica, List[Resolution]]] = \
             deque()
@@ -128,6 +178,11 @@ class Cluster:
         if eng.cfg.clock != "sim":
             raise ValueError("cluster driver requires sim-clock engines")
         rep = Replica(self._next_rid, eng, spawn_at=now, cold_start=cold)
+        if self._failure_rng is not None:
+            # exponential lifetime drawn at spawn == memoryless per-replica
+            # crash hazard == Poisson fleet failures (replacements included)
+            rep.crash_at = now + self._failure_rng.exponential(
+                self.cfg.failures.mtbf)
         self._next_rid += 1
         self.replicas.append(rep)
         return rep
@@ -153,7 +208,11 @@ class Cluster:
             block = list(self.resolutions)
         self._spawn(block, now=now, cold=cold)
 
-    def _scale_down(self, now: float) -> None:
+    def _scale_down(self, now: float) -> bool:
+        """Mark the cheapest legal victim retiring; False when no replica
+        may retire (so the caller can roll the autoscaler's decision
+        back — a retirement that never happened must not be reported or
+        consume cooldown)."""
         # replicas in (or queued for) a repartition migration already have a
         # block assignment the plan depends on — retiring one would leave
         # its target block unserved
@@ -170,12 +229,85 @@ class Cluster:
             cands = [r for grp in by_block.values() if len(grp) > 1
                      for r in grp]
         if not cands:
-            return
+            return False
         victim = min(cands, key=lambda r: (r.queue_depth, r.backlog(now),
                                            -r.rid))
         victim.retiring = True             # drains, then retires
+        return True
 
-    # ---------------- drift-triggered repartitioning ----------------
+    # ---------------- failure injection + recovery ----------------
+
+    def _maybe_fail(self, now: float) -> bool:
+        """Kill every replica whose scheduled crash is due: requeue the work
+        it held through the router head and, under ``recover``, spawn a
+        cold-started replacement over its block (its migration target if it
+        died mid-migration — the repartition plan counted on that block
+        being served)."""
+        fcfg = self.cfg.failures
+        if fcfg is None:
+            return False
+        progress = False
+        all_orphans: List[Request] = []
+        for rep in list(self.replicas):
+            if rep.retired_at is not None or rep.crash_at is None \
+                    or rep.crash_at > now:
+                continue
+            if fcfg.max_failures is not None \
+                    and self._n_failures >= fcfg.max_failures:
+                rep.crash_at = None
+                continue
+            t = rep.crash_at
+            # a queued-but-unstarted migration also pins this replica's
+            # planned target block — the replacement must honor it, or the
+            # plan's block can lose its only intended server (the fleet
+            # size is unchanged by recovery, so no resize replan would
+            # ever repair the hole)
+            target = rep.migrating_to
+            for i, (qrep, qblock) in enumerate(self._migration_queue):
+                if qrep is rep:
+                    target = qblock
+                    del self._migration_queue[i]
+                    break
+            block = [tuple(r) for r in (target or rep.resolutions)]
+            # a crashed scale-down victim stays down: respawning it would
+            # silently undo a retirement the autoscaler already decided
+            # (and logged); its block is safe — _scale_down never picks a
+            # block's last server
+            was_retiring = rep.retiring
+            orphans = rep.fail(t)
+            self._n_failures += 1
+            all_orphans.extend(orphans)
+            if orphans:
+                self._requeue_delays.extend(t - r.arrival for r in orphans)
+            replaced = False
+            if fcfg.recover and not was_retiring:
+                cold = fcfg.cold_start
+                if cold is None:
+                    cold = self.autoscaler.cfg.cold_start \
+                        if self.autoscaler else 2.0
+                cap = self.autoscaler.cfg.max_replicas \
+                    if self.autoscaler else None
+                if cap is None or len(self._dispatchable()) < cap:
+                    self._spawn(block, now=t, cold=cold)
+                    self._recoveries += 1
+                    replaced = True
+            self.failure_log.append({
+                "t": round(t, 3), "rid": rep.rid,
+                "requeued": len(orphans), "replaced": replaced})
+            progress = True
+        if all_orphans:
+            # one batched requeue so orphans of *different* same-pass
+            # crashes still re-enter in global arrival order
+            self.router.requeue(all_orphans)
+        if progress and self._migration_queue:
+            # a crash may have killed the actively migrating replica; the
+            # queued movers must not wait on a drain that can no longer
+            # finish (nothing else would ever restart them — the replan
+            # gates block while the queue is non-empty)
+            self._start_migrations()
+        return progress
+
+    # ---------------- drift-/resize-triggered repartitioning ----------------
 
     def _maybe_repartition(self, now: float) -> bool:
         """Recompute the affinity partition when the windowed arrival mix
@@ -198,11 +330,52 @@ class Cluster:
         drift = mix_drift(mix, self._built_mix)
         if drift <= rcfg.drift_threshold:
             return False
+        return self._plan_repartition(now, mix, reason="drift", drift=drift)
 
+    def _plan_mix(self, now: float) -> np.ndarray:
+        """Mix to plan a repartition for: the windowed observed mix when the
+        tracker has enough samples to trust, else the mix the current
+        partition was built for."""
+        rcfg = self.cfg.repartition
+        if self.mix_tracker is not None and rcfg is not None:
+            mix = self.mix_tracker.mix(now)
+            if self.mix_tracker.n_samples >= rcfg.min_samples:
+                return mix
+        return self._built_mix
+
+    def _maybe_resize_repartition(self, now: float) -> bool:
+        """Recompute the block structure when the dispatchable fleet size no
+        longer matches the size the current blocks were cut for (autoscaler
+        spawn/retire or crash). At a stable fleet size the plan is a fixed
+        point — ``_built_k`` tracks the planned-for size, so this never
+        ping-pongs migrations without an actual size change."""
+        rcfg = self.cfg.repartition
+        if rcfg is None or not rcfg.on_resize \
+                or self.policy.name != "resolution_affinity":
+            return False
+        if self._migration_queue or \
+                any(r.migrating_to is not None for r in self.replicas):
+            return False                   # previous plan still in flight
+        if now - self._last_repartition < rcfg.cooldown:
+            return False
+        k = len(self._dispatchable())
+        if k == 0 or k == self._built_k:
+            return False
+        return self._plan_repartition(now, self._plan_mix(now),
+                                      reason="resize")
+
+    def _plan_repartition(self, now: float, mix: Sequence[float],
+                          reason: str,
+                          drift: Optional[float] = None) -> bool:
+        """Cut blocks + replica counts for the current dispatchable fleet
+        over ``mix`` and queue drain-before-switch migrations for replicas
+        whose block changed (replicas already on a target block stay put, so
+        loaded replicas keep serving and fresh/cold ones do the moving)."""
         movers = self._dispatchable()
         k = len(movers)
         if k == 0:
             return False
+        mix = np.asarray(mix, np.float64)
         mix_map = self._mix_map(mix)
         blocks = partition_resolutions(self.resolutions, k, mix=mix_map)
         counts = allocate_replica_counts(blocks, k, mix=mix_map)
@@ -222,13 +395,17 @@ class Cluster:
                 moving.append(rep)
         self._blocks = blocks
         self._built_mix = mix
+        self._built_k = k
         self._last_repartition = now
         self._migration_queue = deque(zip(moving, remaining))
-        self.repartition_log.append({
-            "t": round(now, 3), "drift": round(drift, 4),
+        entry = {
+            "t": round(now, 3), "reason": reason,
             "mix": [round(float(m), 4) for m in mix],
             "blocks": [[list(r) for r in b] for b in blocks],
-            "counts": counts, "migrations": len(moving)})
+            "counts": counts, "k": k, "migrations": len(moving)}
+        if drift is not None:
+            entry["drift"] = round(drift, 4)
+        self.repartition_log.append(entry)
         self._start_migrations()
         return True
 
@@ -284,6 +461,9 @@ class Cluster:
                     self.autoscaler.observe_arrival(req.arrival)
                 progress = True
 
+            if self._maybe_fail(now):
+                progress = True
+
             for rep in self.replicas:
                 if rep.retiring and rep.retired_at is None \
                         and not rep.has_work:
@@ -300,10 +480,15 @@ class Cluster:
                     self._scale_up(now)
                     progress = True
                 elif act < 0:
-                    self._scale_down(now)
-                    progress = True
+                    if self._scale_down(now):
+                        progress = True
+                    else:
+                        self.autoscaler.cancel_retirement(now)
 
             if self._maybe_repartition(now):
+                progress = True
+
+            if self._maybe_resize_repartition(now):
                 progress = True
 
             if self.router.dispatch(self._dispatchable(), now):
@@ -343,6 +528,15 @@ class Cluster:
                     nxt.append(max(
                         self.autoscaler._last_action
                         + self.autoscaler.cfg.cooldown, now))
+            # scheduled crashes are sim events too — but only while real
+            # future work exists (a crash never un-sticks a dead queue, so
+            # it must not keep the loop alive past the drop branch)
+            if self.cfg.failures is not None and (
+                    pending or any(r.has_work for r in self.replicas
+                                   if r.retired_at is None)):
+                nxt.extend(r.crash_at for r in self.replicas
+                           if r.retired_at is None
+                           and r.crash_at is not None and r.crash_at > now)
 
             future = [t for t in nxt if t > now]
             if progress and nxt:
@@ -364,10 +558,17 @@ class Cluster:
 
         mts.span = now
         mts.repartitions = list(self.repartition_log)
+        mts.failures = list(self.failure_log)
+        mts.replicas_failed = sum(1 for r in self.replicas
+                                  if r.failed_at is not None)
+        mts.recoveries = self._recoveries
+        mts.requests_requeued = self.router.requeued
+        mts.requeue_delays = list(self._requeue_delays)
         for rep in self.replicas:
             mts.per_replica[rep.rid] = ReplicaReport(
                 metrics=rep.merged_metrics, patch=rep.patch,
                 resolutions=[tuple(r) for r in rep.resolutions],
                 busy_time=rep.busy_time, alive_time=rep.alive_span(now),
-                migrations=rep.migrations)
+                migrations=rep.migrations,
+                failed=rep.failed_at is not None)
         return mts

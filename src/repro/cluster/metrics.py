@@ -25,6 +25,7 @@ class ReplicaReport:
     busy_time: float
     alive_time: float
     migrations: int = 0                # affinity-block switches survived
+    failed: bool = False               # killed by failure injection
 
     @property
     def utilization(self) -> float:
@@ -46,8 +47,17 @@ class ClusterMetrics:
     span: float = 0.0
     # (t, frontend depth, queued-in-replicas, dispatchable replicas)
     queue_ts: List[Tuple[float, int, int, int]] = field(default_factory=list)
-    # drift-triggered repartition events (driver.repartition_log entries)
+    # drift- and resize-triggered repartition events
+    # (driver.repartition_log entries)
     repartitions: List[dict] = field(default_factory=list)
+    # failure injection / recovery (driver.failure_log entries)
+    failures: List[dict] = field(default_factory=list)
+    replicas_failed: int = 0
+    recoveries: int = 0                # replacement replicas spawned
+    requests_requeued: int = 0
+    # seconds each crash-orphaned request had already waited when it was
+    # requeued — the latency the failure added on top of normal queueing
+    requeue_delays: List[float] = field(default_factory=list)
 
     # -- fleet aggregates --------------------------------------------------
     @property
@@ -134,6 +144,18 @@ class ClusterMetrics:
             "cache_hit_rate": round(self.cache_hit_rate, 4),
             "migrations": self.migrations,
             "repartitions": self.repartitions,
+            "failures": {
+                "replicas_failed": self.replicas_failed,
+                "recoveries": self.recoveries,
+                "requests_requeued": self.requests_requeued,
+                "requeue_delay_mean": round(float(
+                    np.mean(self.requeue_delays)), 4)
+                if self.requeue_delays else 0.0,
+                "requeue_delay_p95": round(float(
+                    np.quantile(self.requeue_delays, 0.95)), 4)
+                if self.requeue_delays else 0.0,
+                "events": self.failures,
+            },
             "per_replica": {
                 str(rid): {
                     "patch": rep.patch,
@@ -144,5 +166,6 @@ class ClusterMetrics:
                     "utilization": round(rep.utilization, 4),
                     "cache_hit_rate": round(rep.cache_hit_rate, 4),
                     "migrations": rep.migrations,
+                    "failed": rep.failed,
                 } for rid, rep in sorted(self.per_replica.items())},
         }

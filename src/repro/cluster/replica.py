@@ -15,6 +15,12 @@ the old affinity block, then swaps engines and pays ``switch_cost`` on the
 sim clock before serving again. Metrics accumulated on retired engines are
 folded into ``merged_metrics`` so nothing a replica served is lost across
 migrations.
+
+Failure injection (elastic controller): ``crash_at`` holds the replica's
+scheduled crash instant (drawn by the driver at spawn under a
+``FailureConfig``); ``fail(now)`` kills the replica *without* draining —
+everything it held is orphaned back to the caller for router requeue, with
+denoising progress lost (the latents died with the process).
 """
 from __future__ import annotations
 
@@ -34,6 +40,8 @@ class Replica:
         self.next_free = self.ready_at
         self.retiring = False                 # drains, accepts nothing new
         self.retired_at: Optional[float] = None
+        self.crash_at: Optional[float] = None  # scheduled failure injection
+        self.failed_at: Optional[float] = None
         self.busy_time = 0.0
         self._res_set = {tuple(r) for r in engine.resolutions}
         # repartition migration: target affinity block while draining
@@ -97,6 +105,30 @@ class Replica:
             self.busy_time += ev.dt
             self.next_free = now + ev.dt
         return ev
+
+    # -- failure injection ------------------------------------------------
+    def fail(self, now: float) -> List[Request]:
+        """Crash this replica at ``now``. Unlike retirement there is no
+        drain: the replica dies holding work, and that work is returned to
+        the caller so the driver can requeue it through the router. Progress
+        is lost — orphans restart from step 0 with fresh state (their
+        latents lived in the dead process). The engine's own metrics keep
+        only what it actually finished, so a requeued request is never
+        counted here and again wherever it eventually completes."""
+        self.failed_at = now
+        self.retired_at = now
+        self.retiring = True
+        self.migrating_to = None
+        orphans = self.engine.wait + self.engine.active
+        self.engine.wait.clear()
+        self.engine.active.clear()
+        for r in orphans:
+            r.state = "waiting"
+            r.steps_done = 0
+            r.finish = None
+            r.latent = None
+            r.text = None
+        return orphans
 
     # -- repartition migration --------------------------------------------
     def switch_engine(self, engine: PatchedServeEngine, now: float,

@@ -236,6 +236,7 @@ class Router:
         self.policy = policy
         self.queue: List[Request] = []
         self.dispatched = 0
+        self.requeued = 0
 
     @property
     def depth(self) -> int:
@@ -243,6 +244,15 @@ class Router:
 
     def enqueue(self, req: Request) -> None:
         self.queue.append(req)
+
+    def requeue(self, reqs: Sequence[Request]) -> None:
+        """Put requests orphaned by a replica crash back at the *head* of
+        the frontend queue (they are the oldest work in the system), in
+        arrival order. The next dispatch round re-routes them; the dead
+        replica is excluded automatically because a retired replica is
+        never a policy candidate."""
+        self.queue[:0] = sorted(reqs, key=lambda r: r.arrival)
+        self.requeued += len(reqs)
 
     def dispatch(self, replicas: Sequence[Replica],
                  now: float) -> List[Tuple[Request, Replica]]:

@@ -30,6 +30,14 @@ Resolution = Tuple[int, int]
 #: benchmarks/common.py)
 DEFAULT_RES: List[Resolution] = [(16, 16), (24, 24), (32, 32)]
 
+#: elastic-controller reference scenario for ``piecewise_rate_workload``:
+#: the arrival rate ramps 8 -> 140 qps over 35 s, then back down to 6 by
+#: 65 s. Shared by the benchmark, the example and the tests so the regime
+#: they validate cannot silently drift apart (see the adaptive-cluster
+#: tuning notes: predictive wins need a visible trend, not a step).
+UPDOWN_KNOTS: List[Tuple[float, float]] = [(0.0, 8.0), (35.0, 140.0),
+                                           (65.0, 6.0)]
+
 
 class PatchAwareLatency:
     """Adapter giving one engine's composition features to the patch-aware
@@ -170,6 +178,57 @@ def phased_workload(phases: Sequence[Tuple[float, float,
     return out
 
 
+def piecewise_rate_workload(knots: Sequence[Tuple[float, float]],
+                            resolutions: Sequence[Resolution] = None,
+                            slo_scale: float = 5.0, steps: int = 10,
+                            scale: float = 1.0, seed: int = 0,
+                            mix: Optional[Sequence[float]] = None
+                            ) -> List[Request]:
+    """Non-homogeneous Poisson arrivals whose rate follows the piecewise-
+    linear curve through ``knots`` = [(t, qps), ...] (thinning
+    construction). This is the general form behind ``ramp_workload``; an
+    up-then-down knot sequence is the elastic-controller scenario — the
+    predictive autoscaler should pre-spawn into the rising edge and retire
+    ahead of the falling one."""
+    # stable sort on time only: duplicate-time knots express step changes
+    # and must keep their caller-given order, not be reordered by qps
+    knots = sorted(((float(t), float(q)) for t, q in knots),
+                   key=lambda k: k[0])
+    if len(knots) < 2:
+        raise ValueError("need at least two (t, qps) knots")
+    res = [tuple(r) for r in (resolutions or DEFAULT_RES)]
+    sa = standalone_latencies(res, steps=steps, scale=scale)
+    rng = np.random.default_rng(seed)
+    qmax = max(max(q for _, q in knots), 1e-9)
+    duration = knots[-1][0]
+
+    def rate(t: float) -> float:
+        for (t0, q0), (t1, q1) in zip(knots, knots[1:]):
+            if t <= t1:
+                if t1 <= t0:
+                    return q1
+                return q0 + (q1 - q0) * (t - t0) / (t1 - t0)
+        return knots[-1][1]
+
+    p = np.asarray(mix if mix is not None else [1 / len(res)] * len(res),
+                   np.float64)
+    p = p / p.sum()
+    out: List[Request] = []
+    t, rid = knots[0][0], 0
+    while True:
+        t += rng.exponential(1.0 / qmax)
+        if t > duration:
+            break
+        if rng.uniform() > rate(t) / qmax:
+            continue                        # thinned-out candidate arrival
+        r = tuple(res[rng.choice(len(res), p=p)])
+        out.append(Request(rid=rid, resolution=r, arrival=t,
+                           slo=t + slo_scale * sa[r], total_steps=steps,
+                           prompt=f"prompt-{rid}"))
+        rid += 1
+    return out
+
+
 def ramp_workload(qps0: float, qps1: float, duration: float,
                   resolutions: Sequence[Resolution] = None,
                   slo_scale: float = 5.0, steps: int = 10,
@@ -179,25 +238,7 @@ def ramp_workload(qps0: float, qps1: float, duration: float,
     ``qps0`` to ``qps1`` over ``duration`` (thinning construction) — the
     arrival trend a predictive autoscaler can see coming, unlike a step
     change."""
-    res = [tuple(r) for r in (resolutions or DEFAULT_RES)]
-    sa = standalone_latencies(res, steps=steps, scale=scale)
-    rng = np.random.default_rng(seed)
-    qmax = max(qps0, qps1, 1e-9)
-    p = np.asarray(mix if mix is not None else [1 / len(res)] * len(res),
-                   np.float64)
-    p = p / p.sum()
-    out: List[Request] = []
-    t, rid = 0.0, 0
-    while True:
-        t += rng.exponential(1.0 / qmax)
-        if t > duration:
-            break
-        rate = qps0 + (qps1 - qps0) * (t / duration)
-        if rng.uniform() > rate / qmax:
-            continue                        # thinned-out candidate arrival
-        r = tuple(res[rng.choice(len(res), p=p)])
-        out.append(Request(rid=rid, resolution=r, arrival=t,
-                           slo=t + slo_scale * sa[r], total_steps=steps,
-                           prompt=f"prompt-{rid}"))
-        rid += 1
-    return out
+    return piecewise_rate_workload([(0.0, qps0), (duration, qps1)],
+                                   resolutions=resolutions,
+                                   slo_scale=slo_scale, steps=steps,
+                                   scale=scale, seed=seed, mix=mix)

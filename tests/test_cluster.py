@@ -1,18 +1,23 @@
 """Cluster serving — deterministic sim-clock tests: steppable-engine
 equivalence, dispatch-policy ordering, affinity partitioning, autoscaler
-convergence, cold start, unroutable-work handling, and the workload-
-adaptive layer (drift detection, drain-before-switch repartitioning,
-predictive autoscaling, cache-aware latency surrogate)."""
+convergence, cold start, unroutable-work handling, the workload-adaptive
+layer (drift detection, drain-before-switch repartitioning, predictive
+autoscaling, cache-aware latency surrogate), and the elastic fleet
+controller (predictive scale-down, fleet-size-aware repartitioning,
+replica failure injection + recovery)."""
+import json
+
 import numpy as np
 import pytest
 
 from repro.cluster import (AutoscalerConfig, Cluster, ClusterConfig,
-                           MixTracker, Replica, RepartitionConfig,
-                           allocate_replica_counts, mix_drift,
-                           partition_resolutions, phased_workload,
+                           FailureConfig, MixTracker, Replica,
+                           RepartitionConfig, allocate_replica_counts,
+                           mix_drift, partition_resolutions,
+                           phased_workload, piecewise_rate_workload,
                            ramp_workload, sim_engine_factory)
-from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
-                                    cluster_workload)
+from repro.cluster.simtools import (DEFAULT_RES, UPDOWN_KNOTS,
+                                    PatchAwareLatency, cluster_workload)
 from repro.core.csp import gcd_patch_size
 from repro.core.latency_model import (CacheHitModel, fit_cache_hit_model,
                                       patch_aware_step_latency,
@@ -515,3 +520,356 @@ def test_cluster_reports_cache_hit_rates():
     assert 0.0 < mr.cache_hit_rate < ma.cache_hit_rate <= 1.0
     assert all(rep.cache_hit_rate > 0 for rep in ma.per_replica.values())
     assert "cache_hit_rate" in ma.summary()
+
+
+# ---------------- predictive scale-down (elastic controller) --------------
+# UPDOWN_KNOTS (simtools): 8 -> 140 qps over 35 s, back down to 6 by 65 s —
+# the falling edge a predictive retirement should move ahead of
+
+
+def _updown_cluster(predictive_down, seed=3, policy="join_shortest_queue"):
+    cfg = AutoscalerConfig(min_replicas=2, max_replicas=8, cold_start=5.0,
+                           cooldown=2.0, predictive=True,
+                           predictive_down=predictive_down,
+                           service_rate=24.0)
+    cl = Cluster(sim_engine_factory(DEFAULT_RES), DEFAULT_RES,
+                 ClusterConfig(n_replicas=2, policy=policy,
+                               autoscaler=cfg, record_timeseries=True))
+    wl = piecewise_rate_workload(UPDOWN_KNOTS, seed=seed)
+    return cl.run(wl), cl, wl
+
+
+def test_predictive_down_retires_ahead_of_rampdown():
+    held, cl_h, _ = _updown_cluster(False)
+    early, cl_e, _ = _updown_cluster(True)
+    # the elastic path actually retired ahead of the falling edge ...
+    assert cl_e.autoscaler.predictive_retirements
+    assert all(t > 35.0 for t in cl_e.autoscaler.predictive_retirements)
+    # ... before the reactive idle signal would have (the held run never
+    # scaled down inside the horizon at all)
+    held_downs = [t for t, a in cl_h.autoscaler.actions if a < 0]
+    first_early = min(cl_e.autoscaler.predictive_retirements)
+    assert not held_downs or first_early < min(held_downs)
+    # capacity tracked the ramp-down: strictly smaller final fleet
+    assert early.replica_count_stats()["final"] < \
+        held.replica_count_stats()["final"]
+    # and early retirement did not cost SLO (drain-before-retire)
+    assert early.slo_satisfaction >= held.slo_satisfaction - 0.005
+
+
+def test_predictive_retirement_never_kills_inflight():
+    m, cl, wl = _updown_cluster(True)
+    assert cl.autoscaler.predictive_retirements
+    # every retired replica drained before it died: its engine is empty and
+    # nothing it held was lost
+    retired = [r for r in cl.replicas if r.retired_at is not None]
+    assert retired
+    for rep in retired:
+        assert not rep.engine.has_work
+        assert rep.failed_at is None          # retired, not crashed
+    assert m.completed + m.dropped == len(wl)
+    assert all(r.state in ("done", "dropped") for r in wl)
+
+
+def test_predictive_down_holds_steady_under_constant_load():
+    """The hysteresis band (down_headroom > headroom) must not flap the
+    fleet when the arrival rate is flat."""
+    cfg = AutoscalerConfig(min_replicas=1, max_replicas=6, cold_start=2.0,
+                           cooldown=2.0, predictive=True,
+                           predictive_down=True, service_rate=24.0)
+    cl = Cluster(sim_engine_factory(DEFAULT_RES), DEFAULT_RES,
+                 ClusterConfig(n_replicas=1, policy="join_shortest_queue",
+                               autoscaler=cfg, record_timeseries=True))
+    m = cl.run(cluster_workload(qps=32.0, duration=60.0, seed=2, mix=None))
+    counts = [n for t, _, _, n in m.queue_ts if t > m.span * 2 / 3]
+    assert counts and min(counts) == max(counts)   # settled, no oscillation
+    assert m.slo_satisfaction > 0.9
+
+
+# ---------------- fleet-size-aware repartitioning -------------------------
+
+def test_resize_repartition_fires_on_scale_up():
+    """Autoscaler growth must re-cut the block structure for the new fleet
+    size, not just bolt replicas onto the old blocks."""
+    cfg = AutoscalerConfig(min_replicas=2, max_replicas=8, cold_start=5.0,
+                           cooldown=2.0, predictive=True,
+                           predictive_down=True, service_rate=24.0)
+    cl = Cluster(sim_engine_factory(DEFAULT_RES), DEFAULT_RES,
+                 ClusterConfig(n_replicas=2, policy="resolution_affinity",
+                               autoscaler=cfg,
+                               repartition=RepartitionConfig(
+                                   cooldown=3.0, switch_cost=0.5),
+                               record_timeseries=False))
+    wl = piecewise_rate_workload(UPDOWN_KNOTS, seed=3)
+    m = cl.run(wl)
+    resizes = [e for e in m.repartitions if e["reason"] == "resize"]
+    assert resizes
+    # growth re-cut the 2-replica two-block structure into the per-
+    # resolution blocks the larger fleet affords (bigger GCD patches)
+    assert max(e["k"] for e in resizes) > 2
+    assert any(len(e["blocks"]) == len(DEFAULT_RES) for e in resizes)
+    assert m.migrations >= 1
+    assert m.completed + m.dropped == len(wl)
+    assert all(r.state in ("done", "dropped") for r in wl)
+
+
+def test_resize_repartition_converges_at_stable_fleet_size():
+    """Resize replanning is a fixed point: with no fleet-size change it
+    must never fire again (no migration ping-pong)."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=4, policy="resolution_affinity",
+                               repartition=RepartitionConfig(cooldown=0.0),
+                               record_timeseries=False))
+    # stable fleet: planned-for size matches -> no-op, repeatedly
+    assert not cl._maybe_resize_repartition(1.0)
+    assert not cl._maybe_resize_repartition(2.0)
+    assert not cl.repartition_log
+    # a size change (one replica begins retiring) fires exactly one replan
+    cl.replicas[0].retiring = True
+    assert cl._maybe_resize_repartition(3.0)
+    assert [e["reason"] for e in cl.repartition_log] == ["resize"]
+    assert cl.repartition_log[-1]["k"] == 3
+    # drain the queued migrations so the plan is no longer in flight, then
+    # verify stability at the new size
+    cl._migration_queue.clear()
+    for rep in cl.replicas:
+        rep.migrating_to = None
+    assert not cl._maybe_resize_repartition(4.0)
+    assert len(cl.repartition_log) == 1
+
+
+def test_resize_replan_waits_for_inflight_migrations():
+    factory = sim_engine_factory(DEFAULT_RES)
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=4, policy="resolution_affinity",
+                               repartition=RepartitionConfig(cooldown=0.0),
+                               record_timeseries=False))
+    cl.replicas[0].retiring = True            # size change pending ...
+    cl.replicas[1].migrating_to = [(16, 16)]  # ... but a move is in flight
+    assert not cl._maybe_resize_repartition(5.0)
+    cl.replicas[1].migrating_to = None
+    assert cl._maybe_resize_repartition(5.0)
+
+
+# ---------------- failure injection + recovery ----------------------------
+
+def _crash_cluster(recover, seed=5, qps=56.0, duration=40.0):
+    cl = Cluster(sim_engine_factory(DEFAULT_RES), DEFAULT_RES,
+                 ClusterConfig(n_replicas=4, policy="join_shortest_queue",
+                               failures=FailureConfig(mtbf=25.0,
+                                                      recover=recover,
+                                                      seed=seed),
+                               record_timeseries=True))
+    wl = cluster_workload(qps=qps, duration=duration, seed=1)
+    return cl.run(wl), cl, wl
+
+
+def test_crash_requeues_orphans_and_recovers():
+    m, cl, wl = _crash_cluster(recover=True)
+    assert m.replicas_failed > 0
+    assert m.recoveries == m.replicas_failed   # every crash was replaced
+    assert m.requests_requeued > 0
+    assert m.requeue_delays and all(d >= 0 for d in m.requeue_delays)
+    # crashed replicas really died holding nothing (orphans were pulled out)
+    for rep in cl.replicas:
+        if rep.failed_at is not None:
+            assert not rep.engine.has_work
+            assert rep.retired_at == rep.failed_at
+    # conservation through the crash-requeue path
+    assert m.completed + m.dropped == len(wl)
+    assert all(r.state in ("done", "dropped") for r in wl)
+
+
+def test_crash_requeued_requests_not_double_counted():
+    """A request that dies with its replica and is requeued must appear in
+    fleet metrics exactly once — wherever it finally completed."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=2, policy="join_shortest_queue",
+                               failures=FailureConfig(mtbf=1e9, recover=True,
+                                                      cold_start=1.0),
+                               record_timeseries=False))
+    victim = cl.replicas[0]
+    victim.crash_at = 1.5            # deterministic mid-run crash
+    # saturating burst so the victim is guaranteed to hold work at t=1.5
+    wl = cluster_workload(qps=120.0, duration=3.0, seed=0)
+    m = cl.run(wl)
+    assert victim.failed_at == 1.5
+    assert m.replicas_failed == 1 and m.requests_requeued > 0
+    # exactly-once accounting: fleet totals match the workload, and every
+    # completion recorded exactly one latency sample
+    assert m.completed + m.dropped == len(wl)
+    assert len(m.latencies) == m.completed
+    assert sum(r.metrics.completed + r.metrics.dropped
+               for r in m.per_replica.values()) \
+        + m.router_dropped == len(wl)
+    # requeued requests restarted from scratch — the victim's own counters
+    # hold only what it truly finished before dying
+    assert victim.merged_metrics.completed + victim.merged_metrics.dropped \
+        < len(wl)
+
+
+def test_recovery_replacement_keeps_block_served():
+    """Under resolution_affinity, recovery must respawn over the dead
+    replica's block so its resolutions never become unroutable; without
+    recovery the block dies with it."""
+    def run(recover):
+        factory = sim_engine_factory(DEFAULT_RES)
+        cl = Cluster(factory, DEFAULT_RES,
+                     ClusterConfig(n_replicas=3,
+                                   policy="resolution_affinity",
+                                   failures=FailureConfig(
+                                       mtbf=1e9, recover=recover,
+                                       cold_start=1.0),
+                                   record_timeseries=False))
+        victim = next(r for r in cl.replicas if r.supports((24, 24)))
+        victim.crash_at = 2.0
+        wl = cluster_workload(qps=30.0, duration=10.0, seed=4)
+        return cl.run(wl), cl, wl
+
+    dead, cl_d, wl_d = run(recover=False)
+    alive, cl_a, wl_a = run(recover=True)
+    # without recovery every (24, 24) arrival after the crash is stranded
+    # and eventually dropped by the router
+    assert dead.router_dropped > 0
+    assert dead.completed + dead.dropped == len(wl_d)
+    # with recovery a replacement covers the block: nothing is unroutable
+    assert alive.router_dropped == 0
+    assert alive.recoveries == 1
+    replacement = cl_a.replicas[-1]
+    assert replacement.supports((24, 24))
+    assert alive.slo_satisfaction > dead.slo_satisfaction
+
+
+def test_crash_of_queued_mover_replacement_inherits_target_block():
+    """A replica can crash while its repartition migration is still queued
+    (not yet started). The replacement must be spawned over the *planned
+    target* block — recovery keeps the fleet size unchanged, so no resize
+    replan would ever repair a block the plan lost."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=3, policy="resolution_affinity",
+                               repartition=RepartitionConfig(),
+                               failures=FailureConfig(mtbf=1e9,
+                                                      recover=True,
+                                                      cold_start=0.5),
+                               record_timeseries=False))
+    mover = cl.replicas[0]
+    target = [(24, 24)] if tuple(mover.resolutions[0]) != (24, 24) \
+        else [(32, 32)]
+    cl._migration_queue.append((mover, list(target)))
+    mover.crash_at = 1.0
+    assert cl._maybe_fail(2.0)
+    # the dead mover's queue entry is gone and its replacement covers the
+    # block the plan was counting on, not the block it died holding
+    assert all(qrep is not mover for qrep, _ in cl._migration_queue)
+    replacement = cl.replicas[-1]
+    assert [tuple(r) for r in replacement.resolutions] == \
+        [tuple(r) for r in target]
+
+
+def test_predictive_down_implies_predictive():
+    """predictive_down without predictive would be silently inert (the
+    forecaster never even sees arrivals); the config promotes it."""
+    cfg = AutoscalerConfig(predictive_down=True)
+    assert cfg.predictive
+    assert not AutoscalerConfig().predictive
+
+
+def test_crashed_retiring_victim_stays_down():
+    """A scale-down victim that crashes while draining must not be
+    respawned — recovery would silently undo a retirement the autoscaler
+    already decided and logged."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=3, policy="join_shortest_queue",
+                               failures=FailureConfig(mtbf=1e9,
+                                                      recover=True,
+                                                      cold_start=0.5),
+                               record_timeseries=False))
+    victim = cl.replicas[0]
+    victim.retiring = True               # draining toward retirement
+    victim.crash_at = 1.0
+    assert cl._maybe_fail(2.0)
+    assert len(cl.replicas) == 3         # no replacement spawned
+    assert cl._recoveries == 0
+    assert cl.failure_log[-1]["replaced"] is False
+
+
+def test_crash_of_active_migrator_restarts_queued_migrations():
+    """If the actively migrating replica crashes, the queued movers must be
+    started immediately — nothing else ever would (the replan gates stay
+    blocked while the queue is non-empty)."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=3, policy="resolution_affinity",
+                               repartition=RepartitionConfig(),
+                               failures=FailureConfig(mtbf=1e9,
+                                                      recover=True,
+                                                      cold_start=0.5),
+                               record_timeseries=False))
+    active, queued = cl.replicas[0], cl.replicas[1]
+    active.migrating_to = [(16, 16)]
+    cl._migration_queue.append((queued, [(24, 24)]))
+    active.crash_at = 1.0
+    assert cl._maybe_fail(2.0)
+    # the queued mover was promoted to actively migrating
+    assert queued.migrating_to == [(24, 24)]
+    assert not cl._migration_queue
+
+
+def test_piecewise_rate_workload_supports_step_knots():
+    """Duplicate-time knots express a step change; sorting must not
+    reorder them by qps (which would reverse a downward cliff)."""
+    wl = piecewise_rate_workload([(0.0, 140.0), (35.0, 140.0),
+                                  (35.0, 6.0), (65.0, 6.0)], seed=0)
+    before = sum(1 for r in wl if r.arrival < 35.0)
+    after = sum(1 for r in wl if r.arrival >= 35.0)
+    # ~140*35 arrivals before the cliff, ~6*30 after
+    assert before > 10 * after
+    assert after > 0
+
+
+def test_phantom_retirement_is_rolled_back():
+    """When every scale-down candidate is its block's last server, the
+    autoscaler's -1 must be undone: not logged as a retirement (the
+    benchmark asserts on predictive_retirements) and not burning
+    cooldown."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=3, policy="resolution_affinity",
+                               autoscaler=AutoscalerConfig(
+                                   min_replicas=1, max_replicas=4),
+                               record_timeseries=False))
+    asc = cl.autoscaler
+    # one server per block -> no legal victim
+    assert not cl._scale_down(5.0)
+    # simulate the -1 decide() just issued, then the driver's rollback
+    prev = asc._last_action
+    asc._last_action_prev = prev
+    asc._last_action = 5.0
+    asc.actions.append((5.0, -1))
+    asc.predictive_retirements.append(5.0)
+    asc.cancel_retirement(5.0)
+    assert asc.actions == [] and asc.predictive_retirements == []
+    assert asc._last_action == prev
+
+
+def test_crash_recovery_beats_no_recovery_on_slo():
+    dead, _, _ = _crash_cluster(recover=False)
+    alive, _, _ = _crash_cluster(recover=True)
+    assert dead.replicas_failed > 0
+    assert alive.slo_satisfaction > dead.slo_satisfaction
+
+
+def test_failure_metrics_in_summary_are_json_ready():
+    m, _, _ = _crash_cluster(recover=True, duration=20.0)
+    s = m.summary()
+    f = s["failures"]
+    assert f["replicas_failed"] == m.replicas_failed
+    assert f["recoveries"] == m.recoveries
+    assert f["requests_requeued"] == m.requests_requeued
+    assert f["requeue_delay_mean"] >= 0.0
+    assert len(f["events"]) == m.replicas_failed
+    json.dumps(s)                    # artifact-ready
