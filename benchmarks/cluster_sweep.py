@@ -30,6 +30,18 @@ rate workload under Poisson replica crashes, with vs. without recovery
 (crash-requeue + cold-started replacement) — recovery must win fleet SLO
 satisfaction. Both wins are asserted; CI's bench-smoke job runs them on
 every PR.
+
+``--faults`` adds the fault-tolerance axis (shared scenarios
+``simtools.CRASH_FAULTS`` / ``ZONE_FAULTS``): (1) long-denoise requests
+under frequent Poisson crashes, restart-from-zero vs. partial-progress
+checkpointing (``CheckpointConfig``: snapshots every k steps, write cost
+charged on the sim clock, crash orphans resume from the last snapshot) —
+checkpointing must win fleet SLO satisfaction; (2) recurrent correlated
+zone outages on a near-capacity fleet, zone-blind dispatch
+(``join_shortest_queue`` + round-robin zone placement) vs. the
+fault-domain-aware ``zone_spread`` policy (zone-balanced placement that
+avoids down zones, least-loaded-zone dispatch) — zone_spread must win
+fleet SLO satisfaction. Both wins are asserted in CI.
 """
 from __future__ import annotations
 
@@ -41,10 +53,10 @@ from dataclasses import replace
 from pathlib import Path
 
 from benchmarks.common import make_cluster
-from repro.cluster import (AutoscalerConfig, FailureConfig,
-                           RepartitionConfig)
-from repro.cluster.simtools import (UPDOWN_KNOTS, cluster_workload,
-                                    phased_workload,
+from repro.cluster import (AutoscalerConfig, CheckpointConfig,
+                           FailureConfig, RepartitionConfig)
+from repro.cluster.simtools import (CRASH_FAULTS, UPDOWN_KNOTS, ZONE_FAULTS,
+                                    cluster_workload, phased_workload,
                                     piecewise_rate_workload, ramp_workload)
 
 POLICIES = ("round_robin", "join_shortest_queue", "least_slack",
@@ -190,6 +202,68 @@ def failure_recovery_trace(seed, qps=56.0, duration=40.0):
     return out
 
 
+def checkpoint_recovery_trace(seed):
+    """Long-denoise fleet under frequent Poisson crashes: crash orphans
+    restart from denoise step 0 vs. resume from their last partial-progress
+    checkpoint (snapshot write cost charged on the sim clock). The regime
+    (``simtools.CRASH_FAULTS``) keeps the fleet under capacity so SLO
+    misses are crash-caused — exactly the redone work checkpointing
+    removes."""
+    sc = CRASH_FAULTS
+    out = {**sc}
+    for tag, ckpt in (("restart", None), ("checkpointed", CheckpointConfig())):
+        cl = make_cluster(n_replicas=sc["n_replicas"],
+                          policy="join_shortest_queue", steps=sc["steps"],
+                          failures=FailureConfig(mtbf=sc["mtbf"],
+                                                 recover=True,
+                                                 cold_start=sc["cold_start"],
+                                                 seed=seed),
+                          checkpoint=ckpt, record_timeseries=False)
+        m = cl.run(cluster_workload(qps=sc["qps"], duration=sc["duration"],
+                                    steps=sc["steps"],
+                                    slo_scale=sc["slo_scale"], seed=seed))
+        s = m.summary()
+        out[tag] = s
+        c = s["checkpoint"]
+        print(f"ckpt {tag:12s} slo={s['slo_satisfaction']:.3f} "
+              f"failed={s['failures']['replicas_failed']} "
+              f"requeued={s['failures']['requests_requeued']} "
+              f"steps-resumed={c['steps_resumed']} "
+              f"write-overhead={c['overhead_s']:.2f}s")
+    return out
+
+
+def zone_outage_trace(seed):
+    """Near-capacity fleet over 3 fault domains with recurrent correlated
+    zone outages (``simtools.ZONE_FAULTS``): zone-blind dispatch
+    (join_shortest_queue, round-robin zone placement — replacements can
+    land in a still-down zone and stall until it recovers) vs. the
+    fault-domain-aware zone_spread policy (placement balanced across live
+    zones, dispatch prefers the least-loaded zone)."""
+    sc = ZONE_FAULTS
+    out = {**sc}
+    for tag, pol in (("zone_blind", "join_shortest_queue"),
+                     ("zone_spread", "zone_spread")):
+        cl = make_cluster(n_replicas=sc["n_replicas"], policy=pol,
+                          failures=FailureConfig(
+                              mtbf=None, recover=True,
+                              cold_start=sc["cold_start"],
+                              zones=sc["zones"],
+                              zone_mtbf=sc["zone_mtbf"],
+                              zone_downtime=sc["zone_downtime"], seed=seed),
+                          record_timeseries=False)
+        m = cl.run(cluster_workload(qps=sc["qps"], duration=sc["duration"],
+                                    seed=seed))
+        s = m.summary()
+        out[tag] = s
+        f = s["failures"]
+        print(f"zone {tag:12s} slo={s['slo_satisfaction']:.3f} "
+              f"outages={len(f['zone_outages'])} "
+              f"killed={f['replicas_failed']} "
+              f"availability={f['zone_availability']}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -202,6 +276,11 @@ def main() -> None:
                          "arrival wave (predictive retirement + resize "
                          "repartitioning vs frozen baseline) and Poisson "
                          "replica crashes (recovery vs none)")
+    ap.add_argument("--faults", action="store_true",
+                    help="add fault-tolerance comparisons: checkpointed "
+                         "crash recovery vs restart-from-zero, and "
+                         "zone_spread vs zone-blind dispatch under "
+                         "correlated zone outages")
     ap.add_argument("--out", default="benchmarks/cluster_results.json")
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--seed", type=int, default=1)
@@ -231,6 +310,11 @@ def main() -> None:
         elastic = {"updown": elastic_updown_trace(seed=args.seed + 2),
                    "crash": failure_recovery_trace(seed=args.seed + 4)}
 
+    faults = None
+    if args.faults:
+        faults = {"checkpoint": checkpoint_recovery_trace(seed=args.seed + 6),
+                  "zones": zone_outage_trace(seed=args.seed + 6)}
+
     # headline: SLO-aware / resolution-aware routing must beat round-robin
     # somewhere in the sweep
     wins = []
@@ -258,6 +342,8 @@ def main() -> None:
         out["adaptive"]["repartition_wins_qps"] = adaptive_wins
     if elastic is not None:
         out["elastic"] = elastic
+    if faults is not None:
+        out["faults"] = faults
     Path(args.out).write_text(json.dumps(out, indent=1))
     print(f"# wrote {args.out} ({len(results)} sweep points, "
           f"{len(wins)} routing wins vs round_robin)", file=sys.stderr)
@@ -297,6 +383,25 @@ def main() -> None:
             raise SystemExit(
                 "failure recovery lost to no-recovery on the crash "
                 "workload — recovery regression?")
+    if faults is not None:
+        ck, rs = faults["checkpoint"]["checkpointed"], \
+            faults["checkpoint"]["restart"]
+        if ck["checkpoint"]["steps_resumed"] <= 0:
+            raise SystemExit("checkpointed run resumed no denoise steps — "
+                             "checkpoint-restore regression?")
+        if ck["slo_satisfaction"] <= rs["slo_satisfaction"]:
+            raise SystemExit(
+                "checkpointed crash recovery lost to restart-from-zero — "
+                "checkpointing regression (or write cost swamping the "
+                "redone-work savings)?")
+        zs, zb = faults["zones"]["zone_spread"], faults["zones"]["zone_blind"]
+        if not zs["failures"]["zone_outages"]:
+            raise SystemExit("zone scenario injected no outages — "
+                             "zone-failure regression?")
+        if zs["slo_satisfaction"] <= zb["slo_satisfaction"]:
+            raise SystemExit(
+                "zone_spread dispatch lost to zone-blind dispatch under "
+                "zone outages — fault-domain-awareness regression?")
 
 
 if __name__ == "__main__":

@@ -2,10 +2,9 @@
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.latency_model import analytic_step_latency
@@ -103,14 +102,16 @@ def workload(eng, qps, duration=40.0, slo_scale=5.0, steps=10, seed=0,
 def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                  steps=10, scale=1.0, record_timeseries=True,
                  initial_mix=None, repartition=None, cache=None,
-                 failures=None):
+                 failures=None, checkpoint=None):
     """Multi-replica sim cluster over the benchmark resolution ladder.
     Engines are synthetic sim (no tensors) with the patch-aware latency
     surrogate; pair with ``repro.cluster.simtools.cluster_workload`` so
     SLOs use the same standalone normalizers. ``cache=True`` (or a
     ``CacheHitModel``) makes the surrogate cache-aware; ``initial_mix`` +
     ``repartition`` drive the workload-adaptive affinity path; ``failures``
-    (a ``FailureConfig``) injects Poisson replica crashes."""
+    (a ``FailureConfig``) injects Poisson replica crashes and correlated
+    zone outages; ``checkpoint`` (a ``CheckpointConfig``) lets crash
+    orphans resume from their last progress snapshot."""
     from repro.cluster import Cluster, ClusterConfig, sim_engine_factory
     from repro.core.latency_model import CacheHitModel
     if cache is True:
@@ -123,4 +124,5 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                                  initial_mix=initial_mix,
                                  repartition=repartition,
                                  failures=failures,
+                                 checkpoint=checkpoint,
                                  record_timeseries=record_timeseries))

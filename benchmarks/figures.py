@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (LABELS, RES, make_requests, real_engine,
-                               sim_engine, tiny_model, timed_step, workload)
+from benchmarks.common import (RES, make_requests, real_engine, sim_engine,
+    tiny_model, timed_step, workload)
 
 Row = Tuple[str, float, str]
 
@@ -285,7 +285,6 @@ def _psnr_ssim(a: np.ndarray, b: np.ndarray):
 
 def table2_quality(fast=True) -> List[Row]:
     from repro.core.patching import merge, split
-    from repro.models import diffusion as dm
     from repro.models.sampler import sampler_step
     rows = []
     rng = np.random.default_rng(0)

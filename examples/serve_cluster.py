@@ -1,10 +1,13 @@
 """Cluster serving demo: one Poisson fleet workload through every dispatch
 policy on the sim clock, an autoscaled run from a single replica, the
 workload-adaptive layer — drift-triggered repartitioning on a mix flip and
-predictive (forecast-driven) autoscaling on an arrival ramp — and the
-elastic fleet controller: predictive retirement + fleet-size-aware
-repartitioning on an up/down arrival wave, and crash-requeue + cold-started
-replacement under Poisson replica failures.
+predictive (forecast-driven) autoscaling on an arrival ramp — the elastic
+fleet controller: predictive retirement + fleet-size-aware repartitioning
+on an up/down arrival wave, and crash-requeue + cold-started replacement
+under Poisson replica failures — and the fault-tolerance layer:
+partial-progress checkpointing (crash orphans resume mid-denoise instead
+of restarting) and correlated zone outages served zone-blind vs. with the
+fault-domain-aware zone_spread policy.
 
 Shows the cluster-level levers on top of the single-engine paper
 reproduction: SLO-aware routing (least_slack), resolution-partitioned
@@ -17,11 +20,12 @@ Run: PYTHONPATH=src python examples/serve_cluster.py
 import time
 from dataclasses import replace
 
-from repro.cluster import (AutoscalerConfig, Cluster, ClusterConfig,
-                           FailureConfig, RepartitionConfig,
+from repro.cluster import (AutoscalerConfig, CheckpointConfig, Cluster,
+                           ClusterConfig, FailureConfig, RepartitionConfig,
                            sim_engine_factory)
-from repro.cluster.simtools import (DEFAULT_RES, UPDOWN_KNOTS,
-                                    cluster_workload, phased_workload,
+from repro.cluster.simtools import (CRASH_FAULTS, DEFAULT_RES, UPDOWN_KNOTS,
+                                    ZONE_FAULTS, cluster_workload,
+                                    phased_workload,
                                     piecewise_rate_workload, ramp_workload)
 from repro.core.latency_model import CacheHitModel
 
@@ -128,3 +132,50 @@ for tag, recover in (("no recovery", False),
           f"crashed={m.replicas_failed} respawned={m.recoveries} "
           f"requeued={m.requests_requeued} "
           f"requeue-delay-mean={delay:.3f}s")
+
+# ---- checkpointing: crash orphans resume mid-denoise ---------------------
+sc = CRASH_FAULTS
+print(f"\npartial-progress checkpointing ({sc['steps']}-step requests, "
+      f"mtbf={sc['mtbf']}s/replica): crash orphans restart from step 0 vs "
+      "resume from the last snapshot:")
+ckpt_factory = sim_engine_factory(DEFAULT_RES, steps=sc["steps"])
+for tag, ckpt in (("restart from zero", None),
+                  ("checkpointed resume", CheckpointConfig())):
+    cl = Cluster(ckpt_factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=sc["n_replicas"],
+                               policy="join_shortest_queue",
+                               failures=FailureConfig(
+                                   mtbf=sc["mtbf"], recover=True,
+                                   cold_start=sc["cold_start"],
+                                   seed=SEED + 6),
+                               checkpoint=ckpt))
+    m = cl.run(cluster_workload(qps=sc["qps"], duration=sc["duration"],
+                                steps=sc["steps"],
+                                slo_scale=sc["slo_scale"], seed=SEED + 6))
+    print(f"{tag:20s} slo={m.slo_satisfaction:.3f} "
+          f"crashed={m.replicas_failed} requeued={m.requests_requeued} "
+          f"steps-resumed={m.steps_resumed} "
+          f"snapshot-overhead={m.checkpoint_time:.2f}s")
+
+# ---- correlated zone outages: blind vs fault-domain-aware dispatch -------
+sc = ZONE_FAULTS
+print(f"\ncorrelated zone outages ({sc['zones']} zones, "
+      f"mtbf={sc['zone_mtbf']}s/zone, downtime={sc['zone_downtime']}s) at "
+      f"{sc['qps']} qps — zone-blind vs zone_spread dispatch:")
+for tag, pol in (("zone-blind (jsq)", "join_shortest_queue"),
+                 ("zone_spread", "zone_spread")):
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=sc["n_replicas"], policy=pol,
+                               failures=FailureConfig(
+                                   mtbf=None, recover=True,
+                                   cold_start=sc["cold_start"],
+                                   zones=sc["zones"],
+                                   zone_mtbf=sc["zone_mtbf"],
+                                   zone_downtime=sc["zone_downtime"],
+                                   seed=SEED + 6)))
+    m = cl.run(cluster_workload(qps=sc["qps"], duration=sc["duration"],
+                                seed=SEED + 6))
+    avail = {z: f"{a:.2f}" for z, a in sorted(m.zone_availability.items())}
+    print(f"{tag:18s} slo={m.slo_satisfaction:.3f} "
+          f"outages={len(m.zone_outages)} killed={m.replicas_failed} "
+          f"zone-availability={avail}")

@@ -7,7 +7,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS

@@ -1,6 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the fast deterministic suite (slow-marked e2e tests are
-# excluded via pytest.ini). Usage: scripts/tier1.sh [extra pytest args]
+# excluded via pytest.ini). Extra pytest args pass straight through, so CI
+# and local runs share this one entrypoint instead of duplicating the
+# command in workflow files:
+#   scripts/tier1.sh --junit-xml=report.xml    # CI matrix job
+#   scripts/tier1.sh -m slow                   # nightly e2e suite (the
+#                                              # trailing -m wins over the
+#                                              # pytest.ini "not slow")
+#   scripts/tier1.sh -k cluster                # local focus run
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

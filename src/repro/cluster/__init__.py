@@ -39,10 +39,12 @@ from repro.cluster.autoscaler import (ArrivalForecaster, Autoscaler,
 from repro.cluster.driver import (Cluster, ClusterConfig, FailureConfig,
                                   RepartitionConfig)
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
-from repro.cluster.replica import Replica
+from repro.cluster.replica import CheckpointConfig, Replica
 from repro.cluster.router import (POLICIES, DispatchPolicy,
                                   JoinShortestQueue, LeastSlack, MixTracker,
-                                  ResolutionAffinity, RoundRobin, Router,
+                                  ResolutionAffinity,
+                                  ResolutionAffinitySpread, RoundRobin,
+                                  Router, ZoneSpread,
                                   allocate_replica_counts, make_policy,
                                   mix_drift, partition_resolutions)
 from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
@@ -52,10 +54,12 @@ from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
                                     standalone_latencies)
 
 __all__ = [
-    "ArrivalForecaster", "Autoscaler", "AutoscalerConfig", "Cluster",
-    "ClusterConfig", "FailureConfig", "RepartitionConfig", "ClusterMetrics",
-    "ReplicaReport", "Replica", "Router", "DispatchPolicy", "RoundRobin",
-    "JoinShortestQueue", "LeastSlack", "ResolutionAffinity", "POLICIES",
+    "ArrivalForecaster", "Autoscaler", "AutoscalerConfig",
+    "CheckpointConfig", "Cluster", "ClusterConfig", "FailureConfig",
+    "RepartitionConfig", "ClusterMetrics", "ReplicaReport", "Replica",
+    "Router", "DispatchPolicy", "RoundRobin", "JoinShortestQueue",
+    "LeastSlack", "ResolutionAffinity", "ResolutionAffinitySpread",
+    "ZoneSpread", "POLICIES",
     "make_policy", "MixTracker", "mix_drift", "partition_resolutions",
     "allocate_replica_counts", "DEFAULT_RES", "PatchAwareLatency",
     "cluster_workload", "phased_workload", "piecewise_rate_workload",

@@ -18,10 +18,13 @@ arrival-rate forecaster (Holt double exponential smoothing — EWMA level +
 linear trend over fixed time bins) projects the arrival rate one cold-start
 ahead. When the forecast says demand will exceed what the current fleet
 (warming replicas included) can sustain, a replica is spawned *before* the
-backlog materializes, so cold start lands before the wave. The forecaster
-self-monitors: its one-bin-ahead relative error is tracked, and while that
-error is high (or too few bins have been seen) the predictive path stands
-down and only the reactive signals act.
+backlog materializes, so cold start lands before the wave. Replicas that
+cannot possibly be serving by the forecast horizon — e.g. a crash
+replacement stalled behind a zone outage — are not counted as horizon
+capacity, so the fleet provisions around them instead of waiting out the
+stall. The forecaster self-monitors: its one-bin-ahead relative error is
+tracked, and while that error is high (or too few bins have been seen)
+the predictive path stands down and only the reactive signals act.
 
 Predictive **scale-down** (``predictive_down``, elastic controller): the
 same reliability-gated forecast also retires capacity *ahead* of a
@@ -281,7 +284,14 @@ class Autoscaler:
                 lam = self.forecaster.forecast(horizon)
                 desired = min(int(math.ceil(lam * cfg.headroom / mu)),
                               cfg.max_replicas)
-                if desired > n:
+                # a replica that cannot be up by the horizon — e.g. a crash
+                # replacement stalled behind a zone outage — is not
+                # capacity at the horizon; plan with the ones that will be
+                # (a normally-warming spawn is always counted: the cutoff
+                # never undercuts one cold start)
+                cutoff = now + max(horizon, cfg.cold_start)
+                n_h = sum(1 for r in pool if r.ready_at <= cutoff)
+                if desired > n_h:
                     self._idle_since = None
                     self._down_since = None
                     self._last_action = now

@@ -8,11 +8,12 @@ configured policy, (5) ticks every ready, free replica that has work (one
 non-preemptible denoising step each, exactly the single-engine iteration),
 then advances to the next arrival / step-completion / warm-up instant.
 
-Replica construction is policy-aware: under ``resolution_affinity`` the
-fleet's resolution ladder is partitioned (``partition_resolutions``) and
-each replica's engine is built over one block only — so its GCD patch is
-larger and its patch cache sees fewer distinct shapes. All other policies
-build uniform replicas over the full ladder.
+Replica construction is policy-aware: under the affinity policies
+(``resolution_affinity`` and its zone-spread variant) the fleet's
+resolution ladder is partitioned (``partition_resolutions``) and each
+replica's engine is built over one block only — so its GCD patch is larger
+and its patch cache sees fewer distinct shapes. All other policies build
+uniform replicas over the full ladder.
 
 With a ``RepartitionConfig`` the affinity partition is no longer frozen at
 construction: the driver keeps a windowed resolution-mix histogram
@@ -42,6 +43,30 @@ The elastic fleet controller extends the same machinery along two axes:
   cold-started replacement over the dead replica's block so its
   resolutions never become unroutable.
 
+The fault-tolerance layer on top (this module + ``replica.py``):
+
+- **Partial-progress checkpointing** (``ClusterConfig.checkpoint``):
+  replicas snapshot per-request denoise progress every ``every_k_steps``
+  (write cost charged on the sim clock); on crash, orphans are requeued
+  with ``steps_done`` restored to the last checkpoint instead of 0, so the
+  fleet redoes only the steps since the snapshot. Exactly-once accounting
+  is untouched — a request still completes on exactly one replica — and
+  every latency/slack estimate already prices ``remaining_steps`` only, so
+  a resumed request is priced for the remainder, not the full denoise.
+- **Correlated zone failures** (``FailureConfig.zones`` +
+  ``zone_mtbf``): replicas are assigned to ``zones`` fault domains
+  round-robin at spawn; each zone draws recurrent outage times
+  (Poisson, mean ``zone_mtbf``). An outage kills every replica in the
+  zone at the same instant and leaves the zone down for
+  ``zone_downtime`` seconds; a replacement blindly placed into a down
+  zone cannot boot until the zone recovers (its cold start only begins
+  then) — which is precisely what fault-domain-aware placement avoids.
+- **Zone-aware placement** (``zone_spread`` /
+  ``resolution_affinity_spread`` policies): spawns — initial, autoscaler,
+  and crash replacements — go to the live zone with the fewest replicas of
+  the same block, so no resolution's capacity is concentrated in one fault
+  domain and recovery lands in surviving zones.
+
 Engines must be sim-clock (``EngineConfig.clock == "sim"``); for large
 sweeps build them with ``sim_synthetic=True`` (see
 ``repro.cluster.simtools``).
@@ -57,8 +82,9 @@ import numpy as np
 from repro.core.requests import Request
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
-from repro.cluster.replica import Replica
-from repro.cluster.router import (MixTracker, Router,
+from repro.cluster.replica import CheckpointConfig, Replica
+from repro.cluster.router import (AFFINITY_POLICIES, ZONE_AWARE_POLICIES,
+                                  MixTracker, Router,
                                   allocate_replica_counts, make_policy,
                                   mix_drift, partition_resolutions)
 
@@ -69,7 +95,7 @@ EngineFactory = Callable[[Sequence[Resolution]], "object"]
 @dataclass
 class RepartitionConfig:
     """Drift- and resize-triggered affinity repartitioning
-    (resolution_affinity only)."""
+    (resolution_affinity / resolution_affinity_spread only)."""
     drift_threshold: float = 0.3     # L1(observed mix, built-for mix)
     window: float = 10.0             # arrival-mix histogram window (s)
     min_samples: int = 30            # arrivals before drift is trusted
@@ -84,18 +110,33 @@ class RepartitionConfig:
 
 @dataclass
 class FailureConfig:
-    """Poisson replica-crash injection on the sim clock. Every replica
-    draws an exponential lifetime when it spawns (memoryless, so the fleet
-    failure process is Poisson); the driver detects a due crash at the next
-    event, requeues the dead replica's queued + in-flight requests through
-    the router, and — when ``recover`` — replaces it with a cold-started
-    engine over the same resolution block."""
-    mtbf: float = 30.0               # mean seconds to crash, per replica
+    """Failure injection on the sim clock: independent Poisson replica
+    crashes (``mtbf``) and, with ``zones`` > 1 and ``zone_mtbf`` set,
+    correlated fault-domain outages that kill every replica in a zone at
+    the same instant and keep the zone down for ``zone_downtime`` seconds.
+    Every replica draws an exponential lifetime when it spawns (memoryless,
+    so the fleet failure process is Poisson); the driver detects a due
+    crash at the next event, requeues the dead replica's queued + in-flight
+    requests through the router, and — when ``recover`` — replaces it with
+    a cold-started engine over the same resolution block. Replicas are
+    assigned to zones round-robin at spawn unless a zone-aware policy asks
+    the driver for balanced placement across *live* zones."""
+    mtbf: Optional[float] = 30.0     # mean seconds to crash, per replica
+    #                                  (None: no independent crashes)
     recover: bool = True             # spawn a replacement on detection
     # replacement warm-up; None -> autoscaler cold_start (or 2.0 s without
     # an autoscaler)
     cold_start: Optional[float] = None
-    max_failures: Optional[int] = None   # stop injecting after this many
+    # stop injecting *independent* crashes after this many (zone kills have
+    # their own budget below and still fire — an outage wipes its zone even
+    # when the Poisson crash budget is spent)
+    max_failures: Optional[int] = None
+    # -- correlated fault-domain outages --------------------------------
+    zones: int = 1                   # fault domains; replicas round-robin
+    zone_mtbf: Optional[float] = None    # mean seconds between outages,
+    #                                      per zone (None: no outages)
+    zone_downtime: float = 6.0       # seconds a zone stays down per outage
+    max_zone_outages: Optional[int] = None   # stop injecting after this many
     seed: int = 0
 
 
@@ -109,6 +150,9 @@ class ClusterConfig:
     initial_mix: Optional[Sequence[float]] = None
     repartition: Optional[RepartitionConfig] = None
     failures: Optional[FailureConfig] = None
+    # partial-progress checkpointing of in-flight requests (None: crash
+    # orphans restart from denoise step 0)
+    checkpoint: Optional[CheckpointConfig] = None
     record_timeseries: bool = True
     max_events: int = 2_000_000        # runaway-loop backstop
 
@@ -120,17 +164,42 @@ class Cluster:
         self.resolutions = sorted({tuple(r) for r in resolutions})
         self.cfg = cfg
         self.policy = make_policy(cfg.policy)
+        self._affinity = self.policy.name in AFFINITY_POLICIES
+        self._zone_aware = self.policy.name in ZONE_AWARE_POLICIES
         self.router = Router(self.policy)
         self.autoscaler = Autoscaler(cfg.autoscaler) if cfg.autoscaler else None
         self.replicas: List[Replica] = []
         self._next_rid = 0
         # failure injection (must exist before the first _spawn below)
+        fcfg = cfg.failures
+        if fcfg is not None:
+            if fcfg.zones < 1:
+                raise ValueError(f"zones must be >= 1, got {fcfg.zones}")
+            if fcfg.zone_mtbf is not None and fcfg.zones < 2:
+                raise ValueError(
+                    "zone outages need zones >= 2 (a 1-zone outage is just "
+                    "a fleet wipe; set mtbf for independent crashes)")
         self._failure_rng = np.random.default_rng(
-            cfg.failures.seed) if cfg.failures else None
-        self._n_failures = 0
+            fcfg.seed) if fcfg else None
+        self._n_crashes = 0          # independent crashes (max_failures cap)
         self._recoveries = 0
         self._requeue_delays: List[float] = []
+        self._steps_resumed = 0          # checkpointed steps not redone
         self.failure_log: List[dict] = []
+        # fault domains: round-robin counter (blind placement), per-zone
+        # down-until horizon, and the recurrent outage schedule
+        self._zone_counter = 0
+        self._zone_down_until: Dict[int, float] = {}
+        self._zone_outage_at: Dict[int, float] = {}
+        self._n_zone_outages = 0
+        self.zone_outage_log: List[dict] = []
+        if fcfg is not None and fcfg.zone_mtbf is not None:
+            # separate stream so per-replica crash draws stay bit-identical
+            # with and without the zone-outage process enabled
+            self._zone_rng = np.random.default_rng(fcfg.seed + 1)
+            for z in range(fcfg.zones):
+                self._zone_outage_at[z] = float(
+                    self._zone_rng.exponential(fcfg.zone_mtbf))
         if cfg.initial_mix is not None:
             mix0 = np.asarray(cfg.initial_mix, np.float64)
             if len(mix0) != len(self.resolutions) or (mix0 < 0).any() \
@@ -145,7 +214,7 @@ class Cluster:
         mix0 = mix0 / mix0.sum()
         self._built_mix = mix0
         mix_map = self._mix_map(mix0) if cfg.initial_mix is not None else None
-        if self.policy.name == "resolution_affinity":
+        if self._affinity:
             self._blocks = partition_resolutions(self.resolutions,
                                                  cfg.n_replicas, mix=mix_map)
             counts = allocate_replica_counts(self._blocks, cfg.n_replicas,
@@ -163,7 +232,7 @@ class Cluster:
             deque()
         self._last_repartition = -1e18
         self.repartition_log: List[dict] = []
-        if cfg.repartition and self.policy.name == "resolution_affinity":
+        if cfg.repartition and self._affinity:
             self.mix_tracker = MixTracker(self.resolutions,
                                           window=cfg.repartition.window)
 
@@ -172,17 +241,52 @@ class Cluster:
 
     # ---------------- fleet mutation ----------------
 
+    def _zone_down(self, zone: int, now: float) -> bool:
+        return self._zone_down_until.get(zone, -1e18) > now
+
+    def _assign_zone(self, block: Sequence[Resolution], now: float) -> int:
+        """Fault domain for a new replica. Blind (default): round-robin over
+        all zones, down or not — the realistic no-anti-affinity baseline.
+        Zone-aware policies: the live zone holding the fewest replicas of
+        the same block (then fewest overall), so each resolution block is
+        spread across surviving fault domains."""
+        fcfg = self.cfg.failures
+        zones = fcfg.zones if fcfg is not None else 1
+        if zones <= 1:
+            return 0
+        if not self._zone_aware:
+            z = self._zone_counter % zones
+            self._zone_counter += 1
+            return z
+        live = [z for z in range(zones) if not self._zone_down(z, now)]
+        cand = live or list(range(zones))
+        want = {tuple(r) for r in block}
+        in_block: Dict[int, int] = {z: 0 for z in cand}
+        total: Dict[int, int] = {z: 0 for z in cand}
+        for r in self._dispatchable():
+            if r.zone in total:
+                total[r.zone] += 1
+                if {tuple(x) for x in r.resolutions} == want:
+                    in_block[r.zone] += 1
+        return min(cand, key=lambda z: (in_block[z], total[z], z))
+
     def _spawn(self, resolutions: Sequence[Resolution], now: float,
                cold: float) -> Replica:
         eng = self.make_engine(list(resolutions))
         if eng.cfg.clock != "sim":
             raise ValueError("cluster driver requires sim-clock engines")
-        rep = Replica(self._next_rid, eng, spawn_at=now, cold_start=cold)
-        if self._failure_rng is not None:
+        zone = self._assign_zone(resolutions, now)
+        if self._zone_down(zone, now):
+            # blindly placed into a dead zone: the instance cannot boot
+            # until the zone recovers, so cold start only begins then
+            cold += self._zone_down_until[zone] - now
+        rep = Replica(self._next_rid, eng, spawn_at=now, cold_start=cold,
+                      zone=zone, checkpoint=self.cfg.checkpoint)
+        fcfg = self.cfg.failures
+        if self._failure_rng is not None and fcfg.mtbf is not None:
             # exponential lifetime drawn at spawn == memoryless per-replica
             # crash hazard == Poisson fleet failures (replacements included)
-            rep.crash_at = now + self._failure_rng.exponential(
-                self.cfg.failures.mtbf)
+            rep.crash_at = now + self._failure_rng.exponential(fcfg.mtbf)
         self._next_rid += 1
         self.replicas.append(rep)
         return rep
@@ -193,7 +297,7 @@ class Cluster:
 
     def _scale_up(self, now: float) -> None:
         cold = self.autoscaler.cfg.cold_start if self.autoscaler else 0.0
-        if self.policy.name == "resolution_affinity":
+        if self._affinity:
             # join the partition block with the worst backlog per server
             # (uncovered blocks first)
             def pressure(block):
@@ -219,7 +323,7 @@ class Cluster:
         queued = {id(rep) for rep, _ in self._migration_queue}
         cands = [r for r in self._dispatchable()
                  if r.migrating_to is None and id(r) not in queued]
-        if self.policy.name == "resolution_affinity":
+        if self._affinity:
             # never retire a block's last server: its resolutions would
             # become unroutable
             by_block = {}
@@ -237,26 +341,74 @@ class Cluster:
 
     # ---------------- failure injection + recovery ----------------
 
+    def _maybe_zone_outage(self, now: float) -> None:
+        """Fire every zone outage whose scheduled instant is due: mark the
+        zone down for ``zone_downtime`` seconds, schedule its next outage,
+        and force a crash (at the outage instant) on every replica it
+        hosts — the correlated kill ``_maybe_fail`` then processes in one
+        batched requeue pass."""
+        fcfg = self.cfg.failures
+        if fcfg is None or fcfg.zone_mtbf is None:
+            return
+        for z, t in sorted(self._zone_outage_at.items()):
+            if t > now:
+                continue
+            if fcfg.max_zone_outages is not None \
+                    and self._n_zone_outages >= fcfg.max_zone_outages:
+                del self._zone_outage_at[z]
+                continue
+            self._n_zone_outages += 1
+            self._zone_down_until[z] = t + fcfg.zone_downtime
+            # next outage only after the zone is back up — a down zone
+            # cannot fail again, and non-overlapping intervals keep the
+            # availability accounting exact
+            self._zone_outage_at[z] = t + fcfg.zone_downtime + float(
+                self._zone_rng.exponential(fcfg.zone_mtbf))
+            killed = 0
+            for rep in self.replicas:
+                if rep.retired_at is None and rep.zone == z:
+                    rep.crash_at = t if rep.crash_at is None \
+                        else min(rep.crash_at, t)
+                    rep.zone_killed_at = t
+                    killed += 1
+            self.zone_outage_log.append({
+                "t": round(t, 3), "zone": z, "killed": killed,
+                "down_until": round(t + fcfg.zone_downtime, 3)})
+
     def _maybe_fail(self, now: float) -> bool:
-        """Kill every replica whose scheduled crash is due: requeue the work
-        it held through the router head and, under ``recover``, spawn a
+        """Kill every replica whose scheduled crash is due — independent
+        Poisson crashes and correlated zone kills alike: requeue the work it
+        held through the router head (progress restored from the last
+        checkpoint when checkpointing is on) and, under ``recover``, spawn a
         cold-started replacement over its block (its migration target if it
         died mid-migration — the repartition plan counted on that block
         being served)."""
         fcfg = self.cfg.failures
         if fcfg is None:
             return False
+        self._maybe_zone_outage(now)
         progress = False
         all_orphans: List[Request] = []
         for rep in list(self.replicas):
             if rep.retired_at is not None or rep.crash_at is None \
                     or rep.crash_at > now:
                 continue
-            if fcfg.max_failures is not None \
-                    and self._n_failures >= fcfg.max_failures:
-                rep.crash_at = None
-                continue
             t = rep.crash_at
+            # which process kills it: the correlated wipe owns the kill
+            # whenever its instant is the one due (an earlier independent
+            # crash_at in the same pass stays an independent crash)
+            zone_kill = rep.zone_killed_at is not None \
+                and rep.zone_killed_at <= t
+            if not zone_kill and fcfg.max_failures is not None \
+                    and self._n_crashes >= fcfg.max_failures:
+                # the capped independent crash is cancelled — but if this
+                # replica's zone has been wiped, the outage still kills it
+                # (the cap only budgets the Poisson process)
+                if rep.zone_killed_at is None:
+                    rep.crash_at = None
+                    continue
+                t = rep.zone_killed_at
+                zone_kill = True
             # a queued-but-unstarted migration also pins this replica's
             # planned target block — the replacement must honor it, or the
             # plan's block can lose its only intended server (the fleet
@@ -275,8 +427,13 @@ class Cluster:
             # block's last server
             was_retiring = rep.retiring
             orphans = rep.fail(t)
-            self._n_failures += 1
+            if not zone_kill:
+                # zone kills have their own budget (max_zone_outages);
+                # only independent crashes consume the max_failures cap
+                self._n_crashes += 1
             all_orphans.extend(orphans)
+            resumed = sum(r.steps_done for r in orphans)
+            self._steps_resumed += resumed
             if orphans:
                 self._requeue_delays.extend(t - r.arrival for r in orphans)
             replaced = False
@@ -292,8 +449,10 @@ class Cluster:
                     self._recoveries += 1
                     replaced = True
             self.failure_log.append({
-                "t": round(t, 3), "rid": rep.rid,
-                "requeued": len(orphans), "replaced": replaced})
+                "t": round(t, 3), "rid": rep.rid, "zone": rep.zone,
+                "cause": "zone" if zone_kill else "crash",
+                "requeued": len(orphans), "steps_resumed": resumed,
+                "replaced": replaced})
             progress = True
         if all_orphans:
             # one batched requeue so orphans of *different* same-pass
@@ -350,8 +509,7 @@ class Cluster:
         point — ``_built_k`` tracks the planned-for size, so this never
         ping-pongs migrations without an actual size change."""
         rcfg = self.cfg.repartition
-        if rcfg is None or not rcfg.on_resize \
-                or self.policy.name != "resolution_affinity":
+        if rcfg is None or not rcfg.on_resize or not self._affinity:
             return False
         if self._migration_queue or \
                 any(r.migrating_to is not None for r in self.replicas):
@@ -442,7 +600,8 @@ class Cluster:
         """Serve one workload to completion; single-use per Cluster."""
         pending = sorted(workload, key=lambda r: r.arrival)
         mts = ClusterMetrics()
-        now = pending[0].arrival if pending else 0.0
+        start = pending[0].arrival if pending else 0.0
+        now = start
         events = 0
 
         while pending or self.router.queue \
@@ -528,15 +687,18 @@ class Cluster:
                     nxt.append(max(
                         self.autoscaler._last_action
                         + self.autoscaler.cfg.cooldown, now))
-            # scheduled crashes are sim events too — but only while real
-            # future work exists (a crash never un-sticks a dead queue, so
-            # it must not keep the loop alive past the drop branch)
+            # scheduled crashes and zone outages are sim events too — but
+            # only while real future work exists (a crash never un-sticks a
+            # dead queue, so it must not keep the loop alive past the drop
+            # branch)
             if self.cfg.failures is not None and (
                     pending or any(r.has_work for r in self.replicas
                                    if r.retired_at is None)):
                 nxt.extend(r.crash_at for r in self.replicas
                            if r.retired_at is None
                            and r.crash_at is not None and r.crash_at > now)
+                nxt.extend(t for t in self._zone_outage_at.values()
+                           if t > now)
 
             future = [t for t in nxt if t > now]
             if progress and nxt:
@@ -564,11 +726,32 @@ class Cluster:
         mts.recoveries = self._recoveries
         mts.requests_requeued = self.router.requeued
         mts.requeue_delays = list(self._requeue_delays)
+        mts.steps_resumed = self._steps_resumed
+        mts.checkpoint_writes = sum(r.checkpoint_writes
+                                    for r in self.replicas)
+        mts.checkpoint_time = sum(r.checkpoint_time for r in self.replicas)
+        mts.zone_outages = list(self.zone_outage_log)
+        mts.zone_availability = self._zone_availability(start, now)
         for rep in self.replicas:
             mts.per_replica[rep.rid] = ReplicaReport(
                 metrics=rep.merged_metrics, patch=rep.patch,
                 resolutions=[tuple(r) for r in rep.resolutions],
                 busy_time=rep.busy_time, alive_time=rep.alive_span(now),
                 migrations=rep.migrations,
-                failed=rep.failed_at is not None)
+                failed=rep.failed_at is not None, zone=rep.zone)
         return mts
+
+    def _zone_availability(self, start: float, end: float) -> Dict[int, float]:
+        """Fraction of the run each fault domain was up, from the outage
+        log (empty when no zone process is configured)."""
+        fcfg = self.cfg.failures
+        if fcfg is None or fcfg.zone_mtbf is None or end <= start:
+            return {}
+        down = {z: 0.0 for z in range(fcfg.zones)}
+        for e in self.zone_outage_log:
+            t0 = max(e["t"], start)
+            t1 = min(e["down_until"], end)
+            if t1 > t0:
+                down[e["zone"]] += t1 - t0
+        span = end - start
+        return {z: round(1.0 - d / span, 4) for z, d in down.items()}

@@ -26,6 +26,7 @@ class ReplicaReport:
     alive_time: float
     migrations: int = 0                # affinity-block switches survived
     failed: bool = False               # killed by failure injection
+    zone: int = 0                      # fault domain (driver-assigned)
 
     @property
     def utilization(self) -> float:
@@ -58,6 +59,16 @@ class ClusterMetrics:
     # seconds each crash-orphaned request had already waited when it was
     # requeued — the latency the failure added on top of normal queueing
     requeue_delays: List[float] = field(default_factory=list)
+    # partial-progress checkpointing: snapshots written, sim seconds spent
+    # writing them, and denoise steps crash orphans did NOT have to redo
+    # because they resumed from a checkpoint
+    checkpoint_writes: int = 0
+    checkpoint_time: float = 0.0
+    steps_resumed: int = 0
+    # correlated fault-domain failures (driver.zone_outage_log entries) and
+    # per-zone fraction of the run the zone was up
+    zone_outages: List[dict] = field(default_factory=list)
+    zone_availability: Dict[int, float] = field(default_factory=dict)
 
     # -- fleet aggregates --------------------------------------------------
     @property
@@ -154,7 +165,15 @@ class ClusterMetrics:
                 "requeue_delay_p95": round(float(
                     np.quantile(self.requeue_delays, 0.95)), 4)
                 if self.requeue_delays else 0.0,
+                "zone_outages": self.zone_outages,
+                "zone_availability": {str(z): a for z, a in
+                                      sorted(self.zone_availability.items())},
                 "events": self.failures,
+            },
+            "checkpoint": {
+                "writes": self.checkpoint_writes,
+                "overhead_s": round(self.checkpoint_time, 4),
+                "steps_resumed": self.steps_resumed,
             },
             "per_replica": {
                 str(rid): {
@@ -167,5 +186,6 @@ class ClusterMetrics:
                     "cache_hit_rate": round(rep.cache_hit_rate, 4),
                     "migrations": rep.migrations,
                     "failed": rep.failed,
+                    "zone": rep.zone,
                 } for rid, rep in sorted(self.per_replica.items())},
         }

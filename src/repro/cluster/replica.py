@@ -19,35 +19,80 @@ migrations.
 Failure injection (elastic controller): ``crash_at`` holds the replica's
 scheduled crash instant (drawn by the driver at spawn under a
 ``FailureConfig``); ``fail(now)`` kills the replica *without* draining —
-everything it held is orphaned back to the caller for router requeue, with
-denoising progress lost (the latents died with the process).
+everything it held is orphaned back to the caller for router requeue.
+
+Partial-progress checkpointing (``CheckpointConfig``): the replica
+periodically snapshots each in-flight request's denoise progress to durable
+storage — conceptually the latent plus its step index, written off the
+critical path but *charged* on the sim clock (``write_cost`` extends the
+step's busy horizon). On crash the snapshots survive the process: ``fail``
+restores every orphan's ``steps_done`` to its last checkpoint instead of 0,
+so the requeued request pays only the steps since the snapshot again. The
+replica's ``zone`` is its fault domain (assigned by the driver at spawn);
+a correlated zone outage kills every replica sharing it at once.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.requests import Request
 from repro.core.serving import Metrics, PatchedServeEngine, TickEvents
 
 
+@dataclass
+class CheckpointConfig:
+    """Partial-progress checkpointing of in-flight requests.
+
+    Every ``every_k_steps`` denoise steps a request's latent + step index is
+    snapshotted to durable storage; each snapshot costs ``write_cost``
+    seconds on the sim clock (charged to the replica's busy horizon, so
+    checkpointing honestly slows the replica that does it — the
+    checkpoint-vs-restart benchmark only wins when the redone-work saved
+    outweighs this tax). On a crash the driver requeues orphans with
+    ``steps_done`` restored to the last snapshot instead of 0."""
+    every_k_steps: int = 2
+    write_cost: float = 1e-4         # async snapshot stall, per request
+
+    def __post_init__(self) -> None:
+        if self.every_k_steps < 1:
+            raise ValueError("every_k_steps must be >= 1")
+        if self.write_cost < 0:
+            raise ValueError("write_cost must be >= 0")
+
+
 class Replica:
     def __init__(self, rid: int, engine: PatchedServeEngine,
-                 spawn_at: float = 0.0, cold_start: float = 0.0):
+                 spawn_at: float = 0.0, cold_start: float = 0.0,
+                 zone: int = 0,
+                 checkpoint: Optional[CheckpointConfig] = None):
         self.rid = rid
         self.engine = engine
         self.spawn_at = spawn_at
         self.ready_at = spawn_at + cold_start
         self.next_free = self.ready_at
+        self.zone = zone                      # fault domain (driver-assigned)
         self.retiring = False                 # drains, accepts nothing new
         self.retired_at: Optional[float] = None
         self.crash_at: Optional[float] = None  # scheduled failure injection
         self.failed_at: Optional[float] = None
+        self.zone_killed_at: Optional[float] = None  # correlated-outage kill
         self.busy_time = 0.0
         self._res_set = {tuple(r) for r in engine.resolutions}
         # repartition migration: target affinity block while draining
         self.migrating_to: Optional[List[Tuple[int, int]]] = None
         self.migrations = 0
         self._metrics_hist: List[Metrics] = []
+        # partial-progress checkpointing: rid -> (steps_done, latent) at the
+        # last snapshot. The dict models durable storage — it outlives
+        # fail() on purpose, and it holds the latent itself (None in
+        # synthetic sims, the actual array on tensor paths) so a resumed
+        # request really continues from the snapshotted state instead of
+        # skipping denoise steps on fresh noise.
+        self.ckpt_cfg = checkpoint
+        self._ckpt: Dict[int, tuple] = {}
+        self.checkpoint_writes = 0            # per-request snapshots written
+        self.checkpoint_time = 0.0            # sim seconds spent writing
 
     # -- identity / coverage ----------------------------------------------
     @property
@@ -97,24 +142,63 @@ class Replica:
             raise ValueError(
                 f"replica {self.rid} serves {sorted(self._res_set)}, "
                 f"got {req.resolution}")
+        if self.ckpt_cfg is not None:
+            # a requeued request arrives with its restored progress, which
+            # is itself durable (it came from a checkpoint) — seed the store
+            # so a second crash never restores below it
+            self._ckpt[req.rid] = (req.steps_done, req.latent)
         self.engine.submit(req)
 
     def tick(self, now: float) -> TickEvents:
         ev = self.engine.tick(now)
+        if self.ckpt_cfg is not None:
+            # GC finished/dropped snapshots on *every* tick — the engine
+            # can drop hopeless waiting requests on a tick that never steps
+            for r in ev.completed:
+                self._ckpt.pop(r.rid, None)
+            for r in ev.dropped:
+                self._ckpt.pop(r.rid, None)
         if ev.stepped:
-            self.busy_time += ev.dt
-            self.next_free = now + ev.dt
+            dt = ev.dt
+            if self.ckpt_cfg is not None:
+                dt += self._write_checkpoints()
+            self.busy_time += dt
+            self.next_free = now + dt
         return ev
+
+    def _write_checkpoints(self) -> float:
+        """Snapshot every active request whose progress since its last
+        checkpoint reached ``every_k_steps``. Returns the sim-clock cost of
+        this tick's writes (``write_cost`` per snapshotted request; 0.0
+        when nothing was due)."""
+        cfg = self.ckpt_cfg
+        wrote = 0
+        for r in self.engine.active:
+            last = self._ckpt.get(r.rid, (0, None))[0]
+            if r.steps_done - last >= cfg.every_k_steps:
+                # the latent reference IS the snapshot: step outputs are
+                # fresh arrays, so the stored one keeps snapshot-time state
+                self._ckpt[r.rid] = (r.steps_done, r.latent)
+                wrote += 1
+        if not wrote:
+            return 0.0
+        cost = wrote * cfg.write_cost
+        self.checkpoint_writes += wrote
+        self.checkpoint_time += cost
+        return cost
 
     # -- failure injection ------------------------------------------------
     def fail(self, now: float) -> List[Request]:
         """Crash this replica at ``now``. Unlike retirement there is no
         drain: the replica dies holding work, and that work is returned to
-        the caller so the driver can requeue it through the router. Progress
-        is lost — orphans restart from step 0 with fresh state (their
-        latents lived in the dead process). The engine's own metrics keep
-        only what it actually finished, so a requeued request is never
-        counted here and again wherever it eventually completes."""
+        the caller so the driver can requeue it through the router. Without
+        checkpointing, progress is lost — orphans restart from step 0 (their
+        latents lived in the dead process). With a ``CheckpointConfig`` each
+        orphan resumes from its last durable snapshot: ``steps_done`` is
+        restored to the checkpointed value, never beyond the progress it
+        actually had at crash time. The engine's own metrics keep only what
+        it actually finished, so a requeued request is never counted here
+        and again wherever it eventually completes."""
         self.failed_at = now
         self.retired_at = now
         self.retiring = True
@@ -124,9 +208,20 @@ class Replica:
         self.engine.active.clear()
         for r in orphans:
             r.state = "waiting"
-            r.steps_done = 0
+            if self.ckpt_cfg is not None:
+                steps, latent = self._ckpt.get(r.rid, (0, None))
+                if steps <= r.steps_done:
+                    # restore progress AND the snapshotted latent together,
+                    # so a tensor-path resume continues from real state
+                    r.steps_done = steps
+                    r.latent = latent
+                else:       # monotone guard: never restore past true state
+                    r.steps_done = 0
+                    r.latent = None
+            else:
+                r.steps_done = 0
+                r.latent = None
             r.finish = None
-            r.latent = None
             r.text = None
         return orphans
 
@@ -176,4 +271,4 @@ class Replica:
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"Replica(rid={self.rid}, res={self.resolutions}, "
                 f"patch={self.patch}, q={self.queue_depth}, "
-                f"retiring={self.retiring})")
+                f"zone={self.zone}, retiring={self.retiring})")

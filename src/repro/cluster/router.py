@@ -15,6 +15,18 @@ resolution-aware placement — see PAPERS.md):
                            patches -> less halo/stitch overhead and better
                            patch-cache locality); within the replicas of a
                            partition block, fall back to shortest-queue.
+- ``zone_spread``        — fault-domain-aware: send to the zone currently
+                           holding the least outstanding work (then
+                           shortest-queue inside it), so a correlated zone
+                           outage orphans the smallest possible slice of
+                           in-flight work. The driver also places this
+                           policy's replicas (and crash replacements)
+                           zone-balanced, avoiding zones that are down.
+- ``resolution_affinity_spread`` — affinity partitioning *plus* the zone
+                           spreading above: each resolution block's
+                           replicas land in distinct zones where possible,
+                           so one outage cannot take a whole resolution's
+                           capacity off the air.
 
 A policy returns ``None`` when no ready replica can take the request (e.g.
 every covering replica is still cold-starting); the request then stays in
@@ -214,8 +226,51 @@ class ResolutionAffinity(JoinShortestQueue):
     name = "resolution_affinity"
 
 
+class ZoneSpread(DispatchPolicy):
+    """Fault-domain-aware dispatch: candidates are ranked by how much
+    outstanding work their *zone* already holds (queued + active across
+    every live replica in it, candidate or not), then shortest-queue within
+    the zone. Spreading outstanding work across fault domains bounds what a
+    single correlated zone outage can orphan; the driver pairs this with
+    zone-balanced placement so capacity itself is spread too."""
+    name = "zone_spread"
+
+    def select(self, req, replicas, now):
+        cands = self._candidates(req, replicas, now)
+        if not cands:
+            return None
+        zone_load: Dict[int, int] = {}
+        for r in replicas:
+            if r.retired_at is None:
+                zone_load[r.zone] = zone_load.get(r.zone, 0) + r.queue_depth
+        return min(cands, key=lambda r: (zone_load.get(r.zone, 0),
+                                         r.queue_depth, r.backlog(now),
+                                         r.rid))
+
+
+class ResolutionAffinitySpread(ZoneSpread):
+    """Affinity partitioning with fault-domain spreading: ``supports``
+    restricts candidates to the request's resolution block (the driver
+    builds replicas over partition blocks exactly as for
+    ``resolution_affinity``) and dispatch inside the block prefers the
+    least-loaded zone. The driver additionally places each block's replicas
+    across distinct zones, so an outage degrades every resolution a little
+    instead of silencing one entirely."""
+    name = "resolution_affinity_spread"
+
+
 POLICIES = {p.name: p for p in
-            (RoundRobin, JoinShortestQueue, LeastSlack, ResolutionAffinity)}
+            (RoundRobin, JoinShortestQueue, LeastSlack, ResolutionAffinity,
+             ZoneSpread, ResolutionAffinitySpread)}
+
+#: policies whose replicas the driver builds over partitioned resolution
+#: blocks (one engine per block -> larger GCD patch)
+AFFINITY_POLICIES = frozenset({"resolution_affinity",
+                               "resolution_affinity_spread"})
+
+#: policies for which the driver places replicas zone-balanced and steers
+#: crash replacements away from zones that are currently down
+ZONE_AWARE_POLICIES = frozenset({"zone_spread", "resolution_affinity_spread"})
 
 
 def make_policy(name: str) -> DispatchPolicy:

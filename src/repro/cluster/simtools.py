@@ -38,6 +38,22 @@ DEFAULT_RES: List[Resolution] = [(16, 16), (24, 24), (32, 32)]
 UPDOWN_KNOTS: List[Tuple[float, float]] = [(0.0, 8.0), (35.0, 140.0),
                                            (65.0, 6.0)]
 
+#: fault-tolerance reference scenarios, shared by the ``--faults`` sweep,
+#: the example and the tests so the regimes they validate cannot silently
+#: drift apart. ``CRASH_FAULTS``: long-denoise requests on a fleet with
+#: headroom, under frequent independent crashes — SLO misses are
+#: crash-caused (redone denoise work), exactly what checkpointed resume
+#: removes; at saturation the win drowns in load shedding instead.
+#: ``ZONE_FAULTS``: a near-capacity fleet spread over 3 fault domains with
+#: recurrent correlated outages — the regime where zone-blind placement
+#: parks replacements in still-down zones and concentrates exposure.
+CRASH_FAULTS = {"qps": 24.0, "duration": 40.0, "n_replicas": 4,
+                "mtbf": 6.0, "cold_start": 1.0, "steps": 30,
+                "slo_scale": 4.0}
+ZONE_FAULTS = {"qps": 104.0, "duration": 40.0, "n_replicas": 6,
+               "zones": 3, "zone_mtbf": 25.0, "zone_downtime": 12.0,
+               "cold_start": 1.0}
+
 
 class PatchAwareLatency:
     """Adapter giving one engine's composition features to the patch-aware

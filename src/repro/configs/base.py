@@ -6,7 +6,7 @@ no allocation). Tests build reduced same-family configs via ``reduced()``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

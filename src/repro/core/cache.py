@@ -20,7 +20,7 @@ actual compute so the drift test bounds the *cumulative* error (the paper's
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax

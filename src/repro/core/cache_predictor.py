@@ -14,7 +14,6 @@ reuse decision:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ resolutions, and total patch count. Trained on ~200 measured combinations
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

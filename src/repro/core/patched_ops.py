@@ -21,7 +21,6 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.csp import CSP
 from repro.core.patching import group_images, ungroup_images

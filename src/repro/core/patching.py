@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.csp import CSP, build_csp, gcd_patch_size
+from repro.core.csp import CSP, build_csp
 
 
 def image_to_patches(img: jax.Array, p: int) -> jax.Array:

@@ -2,7 +2,7 @@
 resolution mix, SLO = scale x standalone latency per resolution)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np

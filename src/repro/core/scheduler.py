@@ -20,10 +20,9 @@ arrival order but keeps batching.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
 
-import numpy as np
 
 from repro.core.requests import Request
 

@@ -15,7 +15,7 @@ the same recompile-bounding move the diffusion engine makes for patches.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -82,7 +82,6 @@ def packed_prefill(cfg, params, batch: PackedBatch):
     """One forward over the packed batch; returns per-request last-token
     logits (R, vocab). Uses the dense-mask attention path (packed prefill
     lengths are bucketed; masks are segment-local)."""
-    from repro.models import lm
     from repro.models import attention as attn_mod
     from repro.models.layers import apply_norm, apply_mlp
 

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -233,12 +233,17 @@ class PatchedServeEngine:
         self._uid_base[req.rid] = req.rid * (1 << 20)
         if self.cfg.clock == "sim" and self.cfg.sim_synthetic:
             return
-        h, w = req.resolution
-        req.latent = jnp.asarray(
-            self.rng.normal(size=(h, w, self.mcfg.latent_channels)),
-            jnp.float32)
-        req.text = vae_mod.encode_prompt(req.prompt, self.mcfg.n_text,
-                                         self.mcfg.d_text)
+        if req.latent is None:
+            # fresh request; a checkpoint-resumed one arrives with its
+            # snapshotted latent and must NOT be re-noised — it continues
+            # mid-denoise from the restored state
+            h, w = req.resolution
+            req.latent = jnp.asarray(
+                self.rng.normal(size=(h, w, self.mcfg.latent_channels)),
+                jnp.float32)
+        if req.text is None:
+            req.text = vae_mod.encode_prompt(req.prompt, self.mcfg.n_text,
+                                             self.mcfg.d_text)
 
     def _postprocess(self, req: Request) -> None:
         if self.cfg.clock == "sim" and self.cfg.sim_synthetic:

@@ -3,9 +3,7 @@
 """
 from __future__ import annotations
 
-import dataclasses
-from pathlib import Path
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -12,7 +12,6 @@ dry-run exercises it separately (tests spawn a 4-device subprocess).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -9,7 +9,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.groupnorm_stitch import groupnorm_stitch
 from repro.kernels.patch_attention import patch_attention

@@ -8,7 +8,6 @@ the launcher sets it here around tracing. When unset, models use their local
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
 
 _MESH = None
 

@@ -177,12 +177,12 @@ def model_flops(cfg, shape) -> float:
             return total
         return int(np.prod(tree.shape)) if pred(path, tree) else 0
 
-    total = leaves_under(params_abs, lambda p, l: True)
+    total = leaves_under(params_abs, lambda p, leaf: True)
     embed = leaves_under(params_abs,
-                         lambda p, l: p[-1] in ("embed", "lm_head", "pos_embed"))
+                         lambda p, leaf: p[-1] in ("embed", "lm_head", "pos_embed"))
     expert = leaves_under(
         params_abs,
-        lambda p, l: "ffn" in p and l.ndim == 4
+        lambda p, leaf: "ffn" in p and leaf.ndim == 4
         and p[-1] in ("w_gate", "w_up", "w_down"))
     n_eff = total - embed - expert
     if cfg.n_experts:

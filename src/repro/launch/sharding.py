@@ -16,7 +16,6 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -88,7 +87,8 @@ def opt_shardings(cfg, mesh: Mesh, opt_abs, specs) -> Any:
     AdamW moments mirror params exactly; Adafactor's factored moments drop
     the reduced dim from the param spec (v_row: last dim, v_col: 2nd-to-last).
     """
-    is_leaf = lambda x: hasattr(x, "shape") and not isinstance(x, dict)
+    def is_leaf(x):
+        return hasattr(x, "shape") and not isinstance(x, dict)
 
     def mk(shape, axes):
         return NamedSharding(mesh, spec_for(cfg, mesh, shape, axes))

@@ -24,15 +24,13 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.csp import CSP, build_csp
+from repro.core.csp import CSP
 from repro.core import patched_ops
-from repro.core.patching import group_images, ungroup_images
 from repro.models.layers import ParamBuilder
 
 
@@ -131,29 +129,29 @@ def init_diffusion(cfg: DiffusionConfig, key: jax.Array):
 
     # unet
     _conv_init(b, "stem", 3, 3, C0, W)
-    chans = [W * (2 ** l) for l in range(cfg.levels)]
-    for l in range(cfg.levels):
-        cin = chans[l]
+    chans = [W * (2 ** lvl) for lvl in range(cfg.levels)]
+    for lvl in range(cfg.levels):
+        cin = chans[lvl]
         for i in range(cfg.blocks_per_level):
-            _res_block_init(b, f"down{l}_res{i}", cin, cin, cfg.t_dim)
-            if l in cfg.attn_levels:
-                _attn_block_init(b, f"down{l}_attn{i}", cin, cfg.d_text)
-        if l + 1 < cfg.levels:
-            _conv_init(b, f"down{l}_ds", 3, 3, cin, chans[l + 1])
+            _res_block_init(b, f"down{lvl}_res{i}", cin, cin, cfg.t_dim)
+            if lvl in cfg.attn_levels:
+                _attn_block_init(b, f"down{lvl}_attn{i}", cin, cfg.d_text)
+        if lvl + 1 < cfg.levels:
+            _conv_init(b, f"down{lvl}_ds", 3, 3, cin, chans[lvl + 1])
     cm = chans[-1]
     _res_block_init(b, "mid_res1", cm, cm, cfg.t_dim)
     _attn_block_init(b, "mid_attn", cm, cfg.d_text)
     _res_block_init(b, "mid_res2", cm, cm, cfg.t_dim)
-    for l in reversed(range(cfg.levels)):
-        cin = chans[l]
-        if l + 1 < cfg.levels:
-            _conv_init(b, f"up{l}_us", 3, 3, chans[l + 1], cin)
+    for lvl in reversed(range(cfg.levels)):
+        cin = chans[lvl]
+        if lvl + 1 < cfg.levels:
+            _conv_init(b, f"up{lvl}_us", 3, 3, chans[lvl + 1], cin)
         for i in range(cfg.blocks_per_level):
             # concat skip -> 2*cin input
-            _res_block_init(b, f"up{l}_res{i}", 2 * cin if i == 0 else cin,
+            _res_block_init(b, f"up{lvl}_res{i}", 2 * cin if i == 0 else cin,
                             cin, cfg.t_dim)
-            if l in cfg.attn_levels:
-                _attn_block_init(b, f"up{l}_attn{i}", cin, cfg.d_text)
+            if lvl in cfg.attn_levels:
+                _attn_block_init(b, f"up{lvl}_attn{i}", cin, cfg.d_text)
     _gn_init(b, "out_norm", W)
     _conv_init(b, "out_conv", 3, 3, W, C0)
     return b.params
@@ -289,23 +287,23 @@ def block_plan(cfg: DiffusionConfig) -> List[Tuple[str, str, int]]:
         plan += [("tok_out", "pixel", 0)]
         return plan
     plan = [("stem", "context", 0)]
-    for l in range(cfg.levels):
+    for lvl in range(cfg.levels):
         for i in range(cfg.blocks_per_level):
-            plan.append((f"down{l}_res{i}", "context", l))
-            if l in cfg.attn_levels:
-                plan.append((f"down{l}_attn{i}", "context", l))
-        if l + 1 < cfg.levels:
-            plan.append((f"down{l}_ds", "context", l))
+            plan.append((f"down{lvl}_res{i}", "context", lvl))
+            if lvl in cfg.attn_levels:
+                plan.append((f"down{lvl}_attn{i}", "context", lvl))
+        if lvl + 1 < cfg.levels:
+            plan.append((f"down{lvl}_ds", "context", lvl))
     plan += [("mid_res1", "context", cfg.levels - 1),
              ("mid_attn", "context", cfg.levels - 1),
              ("mid_res2", "context", cfg.levels - 1)]
-    for l in reversed(range(cfg.levels)):
-        if l + 1 < cfg.levels:
-            plan.append((f"up{l}_us", "context", l))
+    for lvl in reversed(range(cfg.levels)):
+        if lvl + 1 < cfg.levels:
+            plan.append((f"up{lvl}_us", "context", lvl))
         for i in range(cfg.blocks_per_level):
-            plan.append((f"up{l}_res{i}", "context", l))
-            if l in cfg.attn_levels:
-                plan.append((f"up{l}_attn{i}", "context", l))
+            plan.append((f"up{lvl}_res{i}", "context", lvl))
+            if lvl in cfg.attn_levels:
+                plan.append((f"up{lvl}_attn{i}", "context", lvl))
     plan += [("out", "context", 0)]
     return plan
 
@@ -352,23 +350,23 @@ def denoise_patched(cfg: DiffusionConfig, params, csp: CSP, patches: jax.Array,
             lambda xx: patched_ops.patched_conv(csp, xx, params["stem"]["w"],
                                                 params["stem"]["b"]), patches)
     skips = []
-    level_csp = [csp_at_level(csp, l) for l in range(cfg.levels)]
-    for l in range(cfg.levels):
-        cl = level_csp[l]
+    level_csp = [csp_at_level(csp, lvl) for lvl in range(cfg.levels)]
+    for lvl in range(cfg.levels):
+        cl = level_csp[lvl]
         for i in range(cfg.blocks_per_level):
-            x = run(f"down{l}_res{i}", "context",
-                    lambda xx, l=l, i=i: _res_block(
-                        cfg, level_csp[l], params[f"down{l}_res{i}"], xx, temb_p), x)
-            if l in cfg.attn_levels:
-                x = run(f"down{l}_attn{i}", "context",
-                        lambda xx, l=l, i=i: _attn_block(
-                            cfg, level_csp[l], params[f"down{l}_attn{i}"], xx,
+            x = run(f"down{lvl}_res{i}", "context",
+                    lambda xx, lvl=lvl, i=i: _res_block(
+                        cfg, level_csp[lvl], params[f"down{lvl}_res{i}"], xx, temb_p), x)
+            if lvl in cfg.attn_levels:
+                x = run(f"down{lvl}_attn{i}", "context",
+                        lambda xx, lvl=lvl, i=i: _attn_block(
+                            cfg, level_csp[lvl], params[f"down{lvl}_attn{i}"], xx,
                             text), x)
         skips.append(x)
-        if l + 1 < cfg.levels:
-            x = run(f"down{l}_ds", "context",
-                    lambda xx, l=l: _downsample(level_csp[l],
-                                                params[f"down{l}_ds"], xx), x)
+        if lvl + 1 < cfg.levels:
+            x = run(f"down{lvl}_ds", "context",
+                    lambda xx, lvl=lvl: _downsample(level_csp[lvl],
+                                                params[f"down{lvl}_ds"], xx), x)
     lm = cfg.levels - 1
     x = run("mid_res1", "context",
             lambda xx: _res_block(cfg, level_csp[lm], params["mid_res1"], xx,
@@ -379,21 +377,21 @@ def denoise_patched(cfg: DiffusionConfig, params, csp: CSP, patches: jax.Array,
     x = run("mid_res2", "context",
             lambda xx: _res_block(cfg, level_csp[lm], params["mid_res2"], xx,
                                   temb_p), x)
-    for l in reversed(range(cfg.levels)):
-        if l + 1 < cfg.levels:
-            x = run(f"up{l}_us", "context",
-                    lambda xx, l=l: _upsample(level_csp[l],
-                                              params[f"up{l}_us"], xx), x)
+    for lvl in reversed(range(cfg.levels)):
+        if lvl + 1 < cfg.levels:
+            x = run(f"up{lvl}_us", "context",
+                    lambda xx, lvl=lvl: _upsample(level_csp[lvl],
+                                              params[f"up{lvl}_us"], xx), x)
         for i in range(cfg.blocks_per_level):
             if i == 0:
-                x = jnp.concatenate([x, skips[l]], axis=-1)
-            x = run(f"up{l}_res{i}", "context",
-                    lambda xx, l=l, i=i: _res_block(
-                        cfg, level_csp[l], params[f"up{l}_res{i}"], xx, temb_p), x)
-            if l in cfg.attn_levels:
-                x = run(f"up{l}_attn{i}", "context",
-                        lambda xx, l=l, i=i: _attn_block(
-                            cfg, level_csp[l], params[f"up{l}_attn{i}"], xx,
+                x = jnp.concatenate([x, skips[lvl]], axis=-1)
+            x = run(f"up{lvl}_res{i}", "context",
+                    lambda xx, lvl=lvl, i=i: _res_block(
+                        cfg, level_csp[lvl], params[f"up{lvl}_res{i}"], xx, temb_p), x)
+            if lvl in cfg.attn_levels:
+                x = run(f"up{lvl}_attn{i}", "context",
+                        lambda xx, lvl=lvl, i=i: _attn_block(
+                            cfg, level_csp[lvl], params[f"up{lvl}_attn{i}"], xx,
                             text), x)
 
     def out_fn(xx):

@@ -15,7 +15,7 @@ sliding-window masking, and ragged Sk (padding masked out).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +74,7 @@ def _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k, scale):
         qpos = iq * block_q + jnp.arange(block_q) + q_offset
 
         def kv_step(carry, kj):
-            m, l, acc = carry
+            m, ell, acc = carry
             kblk, vblk, jk = kj
             kpos = jk * block_k + jnp.arange(block_k)
             s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk)
@@ -83,19 +83,19 @@ def _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k, scale):
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l = corr * l + jnp.sum(p, axis=-1)
+            ell = corr * ell + jnp.sum(p, axis=-1)
             acc = corr[..., None] * acc + jnp.einsum("bkgqs,bskv->bkgqv", p, vblk)
-            return (m_new, l, acc), None
+            return (m_new, ell, acc), None
 
         m0 = jnp.full((B, KV, G, block_q), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
         a0 = jnp.zeros((B, KV, G, block_q, Dv), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, ell, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0), (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
                                     jnp.arange(nk)))
-        l = jnp.maximum(l, 1e-30)
-        o = acc / l[..., None]                          # (B,KV,G,bq,Dv)
-        lse = m + jnp.log(l)
+        ell = jnp.maximum(ell, 1e-30)
+        o = acc / ell[..., None]                          # (B,KV,G,bq,Dv)
+        lse = m + jnp.log(ell)
         return None, (o, lse)
 
     _, (ob, lseb) = jax.lax.scan(q_step, None,

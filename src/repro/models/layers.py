@@ -7,11 +7,10 @@ names* per dimension; ``repro.launch.sharding`` maps logical axes to mesh axes.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 Params = Dict[str, Any]

@@ -9,7 +9,6 @@ One code path builds all ten assigned architectures from ``ModelConfig``:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -5,8 +5,6 @@ all per-step coefficients are per-request vectors broadcast per patch.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

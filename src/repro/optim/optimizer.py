@@ -20,7 +20,8 @@ def global_norm(tree) -> jax.Array:
 
 def adamw_init(params, dtype: str = "float32") -> Dict[str, Any]:
     dt = jnp.dtype(dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
     return {
         "m": jax.tree_util.tree_map(zeros, params),
         "v": jax.tree_util.tree_map(zeros, params),

@@ -8,13 +8,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.cache import PatchCache, bucket_size, masked_block_apply
+from repro.core.cache_predictor import ThresholdPredictor
+
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:
     st = None
-
-from repro.core.cache import PatchCache, bucket_size, masked_block_apply
-from repro.core.cache_predictor import ThresholdPredictor
 
 
 def test_sync_sets():

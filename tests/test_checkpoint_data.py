@@ -1,5 +1,4 @@
 """Checkpointing (atomic, async, GC, resume) + data pipeline determinism."""
-import time
 from pathlib import Path
 
 import jax.numpy as jnp

@@ -4,12 +4,12 @@ always runs."""
 import numpy as np
 import pytest
 
+from repro.core.csp import NEIGHBOR_OFFSETS, build_csp, gcd_patch_size
+
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:
     st = None
-
-from repro.core.csp import NEIGHBOR_OFFSETS, build_csp, gcd_patch_size
 
 RES_POOL = [(16, 16), (24, 24), (32, 32), (16, 32), (48, 16)]
 SMOKE_CASES = [

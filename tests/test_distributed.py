@@ -1,6 +1,5 @@
 """Multi-device behaviours validated in a subprocess with forced host devices
 (the main test process must keep the default single-device backend)."""
-import json
 import subprocess
 import sys
 import textwrap

@@ -5,12 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.patching import (group_images, merge, split, ungroup_images)
+
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:
     st = None
-
-from repro.core.patching import (group_images, merge, split, ungroup_images)
 
 RES_POOL = [(16, 16), (24, 24), (32, 32)]
 

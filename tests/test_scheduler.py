@@ -1,6 +1,4 @@
 """Algorithm 1 properties: schedulability, hopeless-drop, mode switch, FCFS."""
-import numpy as np
-import pytest
 
 from repro.core.requests import Request
 from repro.core.scheduler import Scheduler, SchedulerConfig

@@ -7,14 +7,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs import ARCHS
+from repro.core.seqpack import pack, packed_prefill, unpack_by_request
+from repro.models import lm
+
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:
     st = None
-
-from repro.configs import ARCHS
-from repro.core.seqpack import pack, packed_prefill, unpack_by_request
-from repro.models import lm
 
 
 def _check_pack_invariants(lens):

@@ -1,11 +1,10 @@
 """End-to-end serving: real-clock tiny run, sim-clock scheduler properties,
 quality preservation under patched execution + caching off."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.latency_model import analytic_step_latency, make_features
+from repro.core.latency_model import analytic_step_latency
 from repro.core.requests import poisson_workload
 from repro.core.scheduler import SchedulerConfig
 from repro.core.serving import EngineConfig, PatchedServeEngine

@@ -6,7 +6,6 @@
 2. The paper-faithful per-patch GroupNorm mode reproduces the paper's
    approximation gap (PSNR finite for UNet, inf for DiT).
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
