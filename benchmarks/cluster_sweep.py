@@ -42,6 +42,15 @@ zone outages on a near-capacity fleet, zone-blind dispatch
 fault-domain-aware ``zone_spread`` policy (zone-balanced placement that
 avoids down zones, least-loaded-zone dispatch) — zone_spread must win
 fleet SLO satisfaction. Both wins are asserted in CI.
+
+``--cachetier`` adds the fleet patch-cache-tier axis (shared scenario
+``simtools.CACHE_TIER``): repeat-heavy hybrid-resolution traffic whose
+dominant resolution flips between phases, every run priced under the same
+per-replica L1 warmth dynamics. The PR-4 dispatch policies run without a
+fleet L2 (``capacity_bytes=0``); the headline run adds the shared tier and
+``cache_affinity`` (warmth-directed) dispatch and must beat the best
+no-tier policy on fleet SLO satisfaction — asserted, with tier-only /
+dispatch-only / small-capacity ablations reported alongside.
 """
 from __future__ import annotations
 
@@ -55,7 +64,9 @@ from pathlib import Path
 from benchmarks.common import make_cluster
 from repro.cluster import (AutoscalerConfig, CheckpointConfig,
                            FailureConfig, RepartitionConfig)
-from repro.cluster.simtools import (CRASH_FAULTS, UPDOWN_KNOTS, ZONE_FAULTS,
+from repro.cluster.simtools import (CACHE_TIER, CRASH_FAULTS, UPDOWN_KNOTS,
+                                    ZONE_FAULTS, cachetier_config,
+                                    cachetier_mean_mix, cachetier_workload,
                                     cluster_workload, phased_workload,
                                     piecewise_rate_workload, ramp_workload)
 
@@ -264,6 +275,62 @@ def zone_outage_trace(seed):
     return out
 
 
+def cachetier_trace(seed):
+    """Fleet patch-cache tier on the shared repeat-heavy hybrid-resolution
+    scenario (``simtools.CACHE_TIER``): phases concentrate arrivals on one
+    end of the resolution ladder and the dominant end flips, so no frozen
+    affinity allocation covers every phase while a uniform fleet under
+    warmth-directed dispatch retargets each flip. Every run prices the
+    same L1 warmth dynamics; the baselines (the PR-4 policies) get no
+    fleet L2 (``capacity_bytes=0``), the headline run gets the tier +
+    ``cache_affinity`` dispatch. Ablations: ``cache_affinity`` without the
+    tier (dispatch-only), ``join_shortest_queue`` with the tier
+    (tier-only, thrashes), and the tier at one-third capacity (eviction
+    churn). The headline — tier + cache_affinity beats the best no-tier
+    PR-4 policy — is asserted in ``main``."""
+    sc = CACHE_TIER
+    mean_mix = cachetier_mean_mix()
+    runs = (
+        ("round_robin", "round_robin", 0, None),
+        ("join_shortest_queue", "join_shortest_queue", 0, None),
+        ("least_slack", "least_slack", 0, None),
+        # provisioned at the scenario's arrival-weighted mean mix — the
+        # best static allocation the frozen partition could be given (on
+        # this regime it coincides with the uniform-mix default, so one
+        # run covers both)
+        ("resolution_affinity", "resolution_affinity", 0, mean_mix),
+        ("cache_affinity(no tier)", "cache_affinity", 0, None),
+        ("join_shortest_queue+tier", "join_shortest_queue", None, None),
+        ("cache_affinity+tier(small)", "cache_affinity",
+         cachetier_config().capacity_bytes // 3, None),
+        ("cache_affinity+tier", "cache_affinity", None, None),
+    )
+    out = {"scenario": {k: (list(map(list, v)) if k == "phases" else v)
+                        for k, v in sc.items()},
+           "mean_mix": list(mean_mix), "runs": {}}
+    for tag, pol, cap, mix0 in runs:
+        cl = make_cluster(n_replicas=sc["n_replicas"], policy=pol,
+                          steps=sc["steps"], cache=True, initial_mix=mix0,
+                          cache_tier=cachetier_config(cap),
+                          record_timeseries=False)
+        m = cl.run(cachetier_workload(seed=seed))
+        s = m.summary()
+        out["runs"][tag] = s
+        ct = s["cache_tier"]
+        print(f"tier {tag:28s} slo={s['slo_satisfaction']:.3f} "
+              f"goodput={s['goodput']:7.2f} "
+              f"l1={ct['l1_hit_rate']:.3f} l2={ct['l2_hit_rate']:.3f} "
+              f"bytes={ct['tier']['bytes_peak']} "
+              f"evict={ct['tier']['evictions']}")
+    return out
+
+
+#: ``cachetier_trace`` runs counted as no-tier PR-4 baselines by the
+#: headline assert (cache_affinity and the tier runs are this PR's)
+CACHETIER_BASELINES = ("round_robin", "join_shortest_queue", "least_slack",
+                       "resolution_affinity")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -281,6 +348,11 @@ def main() -> None:
                          "crash recovery vs restart-from-zero, and "
                          "zone_spread vs zone-blind dispatch under "
                          "correlated zone outages")
+    ap.add_argument("--cachetier", action="store_true",
+                    help="add the fleet patch-cache-tier comparison: "
+                         "tier + cache_affinity dispatch vs every no-tier "
+                         "PR-4 policy on the repeat-heavy hybrid-"
+                         "resolution scenario (win asserted)")
     ap.add_argument("--out", default="benchmarks/cluster_results.json")
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--seed", type=int, default=1)
@@ -315,6 +387,10 @@ def main() -> None:
         faults = {"checkpoint": checkpoint_recovery_trace(seed=args.seed + 6),
                   "zones": zone_outage_trace(seed=args.seed + 6)}
 
+    cachetier = None
+    if args.cachetier:
+        cachetier = cachetier_trace(seed=args.seed + 6)
+
     # headline: SLO-aware / resolution-aware routing must beat round-robin
     # somewhere in the sweep
     wins = []
@@ -344,6 +420,8 @@ def main() -> None:
         out["elastic"] = elastic
     if faults is not None:
         out["faults"] = faults
+    if cachetier is not None:
+        out["cachetier"] = cachetier
     Path(args.out).write_text(json.dumps(out, indent=1))
     print(f"# wrote {args.out} ({len(results)} sweep points, "
           f"{len(wins)} routing wins vs round_robin)", file=sys.stderr)
@@ -402,6 +480,35 @@ def main() -> None:
             raise SystemExit(
                 "zone_spread dispatch lost to zone-blind dispatch under "
                 "zone outages — fault-domain-awareness regression?")
+    if cachetier is not None:
+        head = cachetier["runs"]["cache_affinity+tier"]
+        best_tag = max(CACHETIER_BASELINES,
+                       key=lambda t: cachetier["runs"][t]
+                       ["slo_satisfaction"])
+        best = cachetier["runs"][best_tag]
+        if head["cache_tier"]["l2_hit_rate"] <= 0:
+            raise SystemExit("cache tier served no L2 hits — tier "
+                             "protocol regression?")
+        if head["cache_tier"]["tier"]["writes"] <= 0:
+            raise SystemExit("nothing was ever published to the cache "
+                             "tier — publish-path regression?")
+        # the tier's own contribution: fetches convert cold keys to warm
+        # instantly, so the tier run must hold a clearly warmer L1 than
+        # the dispatch-only ablation (SLO margins between the two are
+        # noise-level on a fixed fleet, but this gap is structural — it
+        # collapses if the fetch path stops warming keys)
+        abl = cachetier["runs"]["cache_affinity(no tier)"]
+        if head["cache_tier"]["l1_hit_rate"] \
+                <= abl["cache_tier"]["l1_hit_rate"]:
+            raise SystemExit(
+                "the tier run's L1 is no warmer than the no-tier "
+                "cache_affinity ablation's — fetch-path regression?")
+        if head["slo_satisfaction"] <= best["slo_satisfaction"]:
+            raise SystemExit(
+                f"tier + cache_affinity ({head['slo_satisfaction']:.3f}) "
+                f"lost to the best no-tier policy ({best_tag}, "
+                f"{best['slo_satisfaction']:.3f}) on the repeat-heavy "
+                "hybrid-resolution scenario — cache-tier regression?")
 
 
 if __name__ == "__main__":

@@ -4,10 +4,12 @@ workload-adaptive layer — drift-triggered repartitioning on a mix flip and
 predictive (forecast-driven) autoscaling on an arrival ramp — the elastic
 fleet controller: predictive retirement + fleet-size-aware repartitioning
 on an up/down arrival wave, and crash-requeue + cold-started replacement
-under Poisson replica failures — and the fault-tolerance layer:
+under Poisson replica failures — the fault-tolerance layer:
 partial-progress checkpointing (crash orphans resume mid-denoise instead
 of restarting) and correlated zone outages served zone-blind vs. with the
-fault-domain-aware zone_spread policy.
+fault-domain-aware zone_spread policy — and the fleet patch-cache tier:
+per-replica L1 warmth with a shared L2 store and warmth-directed
+``cache_affinity`` dispatch on a repeat-heavy hybrid-resolution workload.
 
 Shows the cluster-level levers on top of the single-engine paper
 reproduction: SLO-aware routing (least_slack), resolution-partitioned
@@ -22,10 +24,11 @@ from dataclasses import replace
 
 from repro.cluster import (AutoscalerConfig, CheckpointConfig, Cluster,
                            ClusterConfig, FailureConfig, RepartitionConfig,
-                           sim_engine_factory)
-from repro.cluster.simtools import (CRASH_FAULTS, DEFAULT_RES, UPDOWN_KNOTS,
-                                    ZONE_FAULTS, cluster_workload,
-                                    phased_workload,
+                           cachetier_config, cachetier_mean_mix,
+                           cachetier_workload, sim_engine_factory)
+from repro.cluster.simtools import (CACHE_TIER, CRASH_FAULTS, DEFAULT_RES,
+                                    UPDOWN_KNOTS, ZONE_FAULTS,
+                                    cluster_workload, phased_workload,
                                     piecewise_rate_workload, ramp_workload)
 from repro.core.latency_model import CacheHitModel
 
@@ -179,3 +182,28 @@ for tag, pol in (("zone-blind (jsq)", "join_shortest_queue"),
     print(f"{tag:18s} slo={m.slo_satisfaction:.3f} "
           f"outages={len(m.zone_outages)} killed={m.replicas_failed} "
           f"zone-availability={avail}")
+
+# ---- fleet patch-cache tier: L1 warmth + shared L2 + warmth dispatch -----
+sc = CACHE_TIER
+print(f"\nfleet patch-cache tier on the repeat-heavy hybrid workload "
+      f"(dominant resolution flips each {sc['phases'][0][0]:.0f}s phase); "
+      "every run prices the same per-replica L1 warmth dynamics:")
+tier_factory = sim_engine_factory(DEFAULT_RES, steps=sc["steps"],
+                                  cache=CacheHitModel())
+for tag, pol, cap, mix0 in (
+        ("least_slack (no tier)", "least_slack", 0, None),
+        ("resolution_affinity (no tier)", "resolution_affinity", 0,
+         cachetier_mean_mix()),
+        ("cache_affinity (no tier)", "cache_affinity", 0, None),
+        ("cache_affinity + tier", "cache_affinity", None, None)):
+    cl = Cluster(tier_factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=sc["n_replicas"], policy=pol,
+                               initial_mix=mix0,
+                               cache_tier=cachetier_config(cap)))
+    m = cl.run(cachetier_workload(seed=SEED + 6))
+    ct = m.summary()["cache_tier"]
+    print(f"{tag:30s} slo={m.slo_satisfaction:.3f} "
+          f"goodput={m.goodput:6.1f} l1-hit={ct['l1_hit_rate']:.3f} "
+          f"l2-hit={ct['l2_hit_rate']:.3f} "
+          f"tier-bytes={ct['tier']['bytes_peak']} "
+          f"evictions={ct['tier']['evictions']}")

@@ -1,0 +1,75 @@
+"""Calibrate ``CacheHitModel`` against the real tensor path.
+
+Runs the tiny CPU diffusion engine (``benchmarks.common.real_engine``,
+patch cache + threshold reuse predictor ON) over batch compositions that
+span the surrogate's two features — resolution concentration (pure
+single-resolution batches vs. even mixes) and step fraction (samples are
+recorded per denoise step, early through late) — and fits the logistic
+hit-rate model on the recorded ``Metrics.cache_samples`` triples.
+
+The fitted coefficients are checked in as ``CacheHitModel``'s documented
+defaults (``repro/core/latency_model.py``), and the raw samples land in
+``benchmarks/data/cache_calibration.json`` so
+``tests/test_cachetier.py::test_cache_hit_model_defaults_match_calibration``
+can re-fit deterministically without re-running the tensor path.
+
+Run:  PYTHONPATH=src python scripts/calibrate_cache_hit_model.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import make_requests, real_engine  # noqa: E402
+from repro.core.latency_model import fit_cache_hit_model  # noqa: E402
+
+#: per-resolution request counts (L, M, H): pure batches pin concentration
+#: at 1.0, pairs sit in between, even mixes at the low end
+COMBOS = [
+    (3, 0, 0), (0, 3, 0), (0, 0, 3),
+    (2, 2, 0), (0, 2, 2), (2, 0, 2),
+    (1, 1, 1), (2, 2, 2), (4, 1, 1), (1, 1, 4),
+]
+STEPS = 10
+
+
+def collect_samples():
+    samples = []
+    for counts in COMBOS:
+        eng = real_engine(use_cache=True)
+        for r in make_requests(counts, steps=STEPS):
+            eng.submit(r)
+        eng.drain(0.0)
+        samples.extend(eng.metrics.cache_samples)
+        print(f"counts={counts}: {len(eng.metrics.cache_samples)} samples, "
+              f"mean hit {sum(s[2] for s in eng.metrics.cache_samples) / max(len(eng.metrics.cache_samples), 1):.3f}")
+    return samples
+
+
+def main() -> None:
+    samples = collect_samples()
+    fit = fit_cache_hit_model(samples)
+    out = {
+        "meta": {"combos": [list(c) for c in COMBOS], "steps": STEPS,
+                 "engine": "benchmarks.common.real_engine(use_cache=True)",
+                 "n_samples": len(samples)},
+        "fit": {"b0": fit.b0, "b_conc": fit.b_conc, "b_step": fit.b_step},
+        "samples": [[round(a, 6), round(b, 6), round(c, 6)]
+                    for a, b, c in samples],
+    }
+    path = Path(__file__).resolve().parent.parent / "benchmarks" / "data" \
+        / "cache_calibration.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=1))
+    print(f"\nfit: b0={fit.b0:.4f} b_conc={fit.b_conc:.4f} "
+          f"b_step={fit.b_step:.4f}  ({len(samples)} samples) -> {path}")
+    print("check these into CacheHitModel's defaults "
+          "(src/repro/core/latency_model.py)")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,11 +36,14 @@ Quick start::
 """
 from repro.cluster.autoscaler import (ArrivalForecaster, Autoscaler,
                                       AutoscalerConfig)
+from repro.cluster.cachetier import (CacheTier, CacheTierConfig, TierClient,
+                                     latent_bytes)
 from repro.cluster.driver import (Cluster, ClusterConfig, FailureConfig,
                                   RepartitionConfig)
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
 from repro.cluster.replica import CheckpointConfig, Replica
-from repro.cluster.router import (POLICIES, DispatchPolicy,
+from repro.cluster.router import (POLICIES, CacheAffinity,
+                                  CacheAffinitySpread, DispatchPolicy,
                                   JoinShortestQueue, LeastSlack, MixTracker,
                                   ResolutionAffinity,
                                   ResolutionAffinitySpread, RoundRobin,
@@ -48,20 +51,24 @@ from repro.cluster.router import (POLICIES, DispatchPolicy,
                                   allocate_replica_counts, make_policy,
                                   mix_drift, partition_resolutions)
 from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
-                                    cluster_workload, phased_workload,
+                                    cachetier_config, cachetier_mean_mix,
+                                    cachetier_workload, cluster_workload,
+                                    phased_workload,
                                     piecewise_rate_workload, ramp_workload,
                                     sim_engine_factory,
                                     standalone_latencies)
 
 __all__ = [
     "ArrivalForecaster", "Autoscaler", "AutoscalerConfig",
+    "CacheTier", "CacheTierConfig", "TierClient", "latent_bytes",
     "CheckpointConfig", "Cluster", "ClusterConfig", "FailureConfig",
     "RepartitionConfig", "ClusterMetrics", "ReplicaReport", "Replica",
     "Router", "DispatchPolicy", "RoundRobin", "JoinShortestQueue",
     "LeastSlack", "ResolutionAffinity", "ResolutionAffinitySpread",
-    "ZoneSpread", "POLICIES",
+    "ZoneSpread", "CacheAffinity", "CacheAffinitySpread", "POLICIES",
     "make_policy", "MixTracker", "mix_drift", "partition_resolutions",
     "allocate_replica_counts", "DEFAULT_RES", "PatchAwareLatency",
+    "cachetier_config", "cachetier_mean_mix", "cachetier_workload",
     "cluster_workload", "phased_workload", "piecewise_rate_workload",
     "ramp_workload", "sim_engine_factory", "standalone_latencies",
 ]

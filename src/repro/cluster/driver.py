@@ -67,6 +67,17 @@ The fault-tolerance layer on top (this module + ``replica.py``):
   the same block, so no resolution's capacity is concentrated in one fault
   domain and recovery lands in surviving zones.
 
+The fleet patch-cache tier (``ClusterConfig.cache_tier``, this module +
+``cachetier.py`` + ``replica.py``): replicas model a bounded L1 of warm
+(resolution, patch, step-band) keys and share a byte-capacity L2 store.
+Cold keys fetch a sibling's committed warm entries (``fetch_cost`` on the
+step's busy horizon) or self-warm over ``warmup_steps`` and publish back
+(``write_cost``, two-phase — the driver settles due commits each event
+*after* the crash pass, so an in-flight write orphaned by a crash is
+aborted, never half-committed). The ``cache_affinity`` dispatch policy
+routes each request to the replica warmest for its resolution.
+``summary()["cache_tier"]`` reports L1/L2 hit rates, bytes, evictions.
+
 Engines must be sim-clock (``EngineConfig.clock == "sim"``); for large
 sweeps build them with ``sim_synthetic=True`` (see
 ``repro.cluster.simtools``).
@@ -81,6 +92,8 @@ import numpy as np
 
 from repro.core.requests import Request
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.cachetier import (CacheTier, CacheTierConfig, TierClient,
+                                     aggregate_client_stats)
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
 from repro.cluster.replica import CheckpointConfig, Replica
 from repro.cluster.router import (AFFINITY_POLICIES, ZONE_AWARE_POLICIES,
@@ -153,6 +166,11 @@ class ClusterConfig:
     # partial-progress checkpointing of in-flight requests (None: crash
     # orphans restart from denoise step 0)
     checkpoint: Optional[CheckpointConfig] = None
+    # fleet patch-cache tier (cachetier.py): per-replica L1 warmth dynamics
+    # + a shared L2 store replicas fetch from / publish to. None keeps the
+    # PR-2 always-warm cache surrogate behavior; capacity_bytes=0 models
+    # L1 warmth with NO fleet tier (the honest no-tier baseline).
+    cache_tier: Optional[CacheTierConfig] = None
     record_timeseries: bool = True
     max_events: int = 2_000_000        # runaway-loop backstop
 
@@ -181,6 +199,10 @@ class Cluster:
                     "a fleet wipe; set mtbf for independent crashes)")
         self._failure_rng = np.random.default_rng(
             fcfg.seed) if fcfg else None
+        # fleet patch-cache tier (must exist before the first _spawn below
+        # so initial replicas get their TierClients)
+        self.cache_tier = CacheTier(cfg.cache_tier) \
+            if cfg.cache_tier is not None else None
         self._n_crashes = 0          # independent crashes (max_failures cap)
         self._recoveries = 0
         self._requeue_delays: List[float] = []
@@ -246,15 +268,30 @@ class Cluster:
 
     def _assign_zone(self, block: Sequence[Resolution], now: float) -> int:
         """Fault domain for a new replica. Blind (default): round-robin over
-        all zones, down or not — the realistic no-anti-affinity baseline.
-        Zone-aware policies: the live zone holding the fewest replicas of
-        the same block (then fewest overall), so each resolution block is
-        spread across surviving fault domains."""
+        all zones, down or not — the realistic no-anti-affinity baseline —
+        EXCEPT when the fleet has drifted lopsided (crash/replacement churn
+        can concentrate a blind fleet): then even a zone-unaware spawn path
+        self-corrects into the least-occupied live zone. The trigger
+        compares the fullest zone against the emptiest *live* zone, so a
+        zone that is merely down (its replicas dead) never trips it — a
+        blind fleet keeps paying the down-zone respawn stall that
+        zone-aware placement avoids. Zone-aware policies: the live zone
+        holding the fewest replicas of the same block (then fewest
+        overall), so each resolution block is spread across surviving
+        fault domains."""
         fcfg = self.cfg.failures
         zones = fcfg.zones if fcfg is not None else 1
         if zones <= 1:
             return 0
         if not self._zone_aware:
+            occ = {z: 0 for z in range(zones)}
+            for r in self._dispatchable():
+                occ[r.zone] += 1
+            live = [z for z in range(zones) if not self._zone_down(z, now)]
+            if live and max(occ.values()) - min(occ[z] for z in live) >= 2:
+                # drifted lopsided: place where live occupancy is lowest
+                # (round-robin drift is at most 1, so a gap of 2+ is real)
+                return min(live, key=lambda z: (occ[z], z))
             z = self._zone_counter % zones
             self._zone_counter += 1
             return z
@@ -282,6 +319,8 @@ class Cluster:
             cold += self._zone_down_until[zone] - now
         rep = Replica(self._next_rid, eng, spawn_at=now, cold_start=cold,
                       zone=zone, checkpoint=self.cfg.checkpoint)
+        if self.cache_tier is not None:
+            rep.attach_tier(TierClient(self.cache_tier, rep.rid))
         fcfg = self.cfg.failures
         if self._failure_rng is not None and fcfg.mtbf is not None:
             # exponential lifetime drawn at spawn == memoryless per-replica
@@ -623,6 +662,12 @@ class Cluster:
             if self._maybe_fail(now):
                 progress = True
 
+            if self.cache_tier is not None:
+                # commit due in-flight L2 writes — after the crash pass, so
+                # a write whose owner crashed before its commit instant has
+                # already been aborted and can never half-commit
+                self.cache_tier.settle(now)
+
             for rep in self.replicas:
                 if rep.retiring and rep.retired_at is None \
                         and not rep.has_work:
@@ -732,6 +777,14 @@ class Cluster:
         mts.checkpoint_time = sum(r.checkpoint_time for r in self.replicas)
         mts.zone_outages = list(self.zone_outage_log)
         mts.zone_availability = self._zone_availability(start, now)
+        if self.cache_tier is not None:
+            # graceful shutdown: every staged write belongs to a live
+            # replica whose busy window completes (crashed owners were
+            # aborted at kill time), so drain them all before reporting
+            self.cache_tier.settle(float("inf"))
+            mts.cache_tier = {
+                **aggregate_client_stats([r.tier for r in self.replicas]),
+                "tier": self.cache_tier.summary()}
         for rep in self.replicas:
             mts.per_replica[rep.rid] = ReplicaReport(
                 metrics=rep.merged_metrics, patch=rep.patch,

@@ -69,6 +69,11 @@ class ClusterMetrics:
     # per-zone fraction of the run the zone was up
     zone_outages: List[dict] = field(default_factory=list)
     zone_availability: Dict[int, float] = field(default_factory=dict)
+    # fleet patch-cache tier: folded TierClient stats (l1/l2 hit rates,
+    # fetch/write clock time) + the CacheTier store summary (bytes,
+    # entries, evictions, aborted in-flight writes). Empty dict when no
+    # tier is configured.
+    cache_tier: dict = field(default_factory=dict)
 
     # -- fleet aggregates --------------------------------------------------
     @property
@@ -175,6 +180,7 @@ class ClusterMetrics:
                 "overhead_s": round(self.checkpoint_time, 4),
                 "steps_resumed": self.steps_resumed,
             },
+            "cache_tier": self.cache_tier,
             "per_replica": {
                 str(rid): {
                     "patch": rep.patch,

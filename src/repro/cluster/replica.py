@@ -50,15 +50,34 @@ class CheckpointConfig:
     checkpointing honestly slows the replica that does it — the
     checkpoint-vs-restart benchmark only wins when the redone-work saved
     outweighs this tax). On a crash the driver requeues orphans with
-    ``steps_done`` restored to the last snapshot instead of 0."""
+    ``steps_done`` restored to the last snapshot instead of 0.
+
+    With ``cost_per_byte`` > 0 the snapshot cost is latent-size-aware: a
+    request's snapshot additionally costs ``cost_per_byte`` x the bytes of
+    its latent (H x W x ``channels`` x ``itemsize``), so High-resolution
+    snapshots are priced honestly instead of flat. The default (0.0)
+    preserves the original flat-``write_cost`` behavior exactly."""
     every_k_steps: int = 2
     write_cost: float = 1e-4         # async snapshot stall, per request
+    cost_per_byte: float = 0.0       # extra stall per latent byte snapshot
+    channels: int = 4                # latent channels for byte accounting
+    itemsize: int = 4                # float32
 
     def __post_init__(self) -> None:
         if self.every_k_steps < 1:
             raise ValueError("every_k_steps must be >= 1")
         if self.write_cost < 0:
             raise ValueError("write_cost must be >= 0")
+        if self.cost_per_byte < 0:
+            raise ValueError("cost_per_byte must be >= 0")
+
+    def snapshot_cost(self, resolution: Tuple[int, int]) -> float:
+        """Sim-clock stall for one request's snapshot at ``resolution``."""
+        if self.cost_per_byte <= 0.0:
+            return self.write_cost
+        from repro.cluster.cachetier import latent_bytes
+        return self.write_cost + self.cost_per_byte * latent_bytes(
+            resolution, self.channels, self.itemsize)
 
 
 class Replica:
@@ -93,6 +112,9 @@ class Replica:
         self._ckpt: Dict[int, tuple] = {}
         self.checkpoint_writes = 0            # per-request snapshots written
         self.checkpoint_time = 0.0            # sim seconds spent writing
+        # fleet patch-cache tier: per-replica L1 warmth + L2 protocol
+        # (attached by the driver when ClusterConfig.cache_tier is set)
+        self.tier = None
 
     # -- identity / coverage ----------------------------------------------
     @property
@@ -107,6 +129,27 @@ class Replica:
 
     def supports(self, resolution: Tuple[int, int]) -> bool:
         return tuple(resolution) in self._res_set
+
+    # -- fleet patch-cache tier -------------------------------------------
+    def attach_tier(self, client) -> None:
+        """Wire a ``cachetier.TierClient`` into this replica: the client
+        models the engine's L1 working set, and the engine's cache-aware
+        latency surrogate (if any) gates its reuse discount by the
+        client's warmth."""
+        self.tier = client
+        client.patch = self.patch
+        self._attach_tier_to_engine()
+
+    def _attach_tier_to_engine(self) -> None:
+        lm = getattr(self.engine, "latency_model", None)
+        if self.tier is not None and hasattr(lm, "attach_tier"):
+            lm.attach_tier(self.tier)
+
+    def cache_warmth(self, resolution: Tuple[int, int]) -> float:
+        """Mean L1 warmth for ``resolution`` in [0, 1] — the
+        ``cache_affinity`` dispatch signal (0.0 without a tier, which
+        makes that policy degrade to join-shortest-queue)."""
+        return self.tier.warmth(resolution) if self.tier is not None else 0.0
 
     # -- dispatchability ---------------------------------------------------
     def ready(self, now: float) -> bool:
@@ -162,6 +205,13 @@ class Replica:
             dt = ev.dt
             if self.ckpt_cfg is not None:
                 dt += self._write_checkpoints()
+            if self.tier is not None:
+                # tier protocol for the batch that just stepped: L2 fetches
+                # for cold keys and publishes for freshly self-warmed ones,
+                # both charged to this step's busy horizon (in-flight
+                # publishes commit only at the end of it)
+                stepped = self.engine.active + ev.completed
+                dt += self.tier.on_step(stepped, now, now + dt)
             self.busy_time += dt
             self.next_free = now + dt
         return ev
@@ -172,7 +222,7 @@ class Replica:
         this tick's writes (``write_cost`` per snapshotted request; 0.0
         when nothing was due)."""
         cfg = self.ckpt_cfg
-        wrote = 0
+        wrote, cost = 0, 0.0
         for r in self.engine.active:
             last = self._ckpt.get(r.rid, (0, None))[0]
             if r.steps_done - last >= cfg.every_k_steps:
@@ -180,9 +230,11 @@ class Replica:
                 # fresh arrays, so the stored one keeps snapshot-time state
                 self._ckpt[r.rid] = (r.steps_done, r.latent)
                 wrote += 1
+                # flat write_cost by default; with cost_per_byte set the
+                # snapshot is priced by its latent's H x W x C bytes
+                cost += cfg.snapshot_cost(r.resolution)
         if not wrote:
             return 0.0
-        cost = wrote * cfg.write_cost
         self.checkpoint_writes += wrote
         self.checkpoint_time += cost
         return cost
@@ -203,6 +255,11 @@ class Replica:
         self.retired_at = now
         self.retiring = True
         self.migrating_to = None
+        if self.tier is not None:
+            # L1 working set dies with the process; in-flight L2 writes
+            # that had not committed by the crash instant are aborted so
+            # the fleet store never holds a half-written entry
+            self.tier.on_crash(now)
         orphans = self.engine.wait + self.engine.active
         self.engine.wait.clear()
         self.engine.active.clear()
@@ -243,6 +300,12 @@ class Replica:
         self.next_free = max(self.next_free, self.ready_at)
         self.migrating_to = None
         self.migrations += 1
+        if self.tier is not None:
+            # the local patch cache restarts cold over the new block's
+            # patch size; committed tier entries (and writes already in
+            # flight) stand — the replica is alive and the data was real
+            self.tier.on_switch(self.patch)
+            self._attach_tier_to_engine()
 
     @property
     def merged_metrics(self) -> Metrics:

@@ -27,6 +27,15 @@ resolution-aware placement — see PAPERS.md):
                            replicas land in distinct zones where possible,
                            so one outage cannot take a whole resolution's
                            capacity off the air.
+- ``cache_affinity``     — patch-cache-tier-aware: among replicas whose
+                           queue depth is within a small bound of the
+                           shortest, prefer the one whose L1 patch cache
+                           is warmest for the request's resolution
+                           (``repro.cluster.cachetier``); with no tier
+                           state it degrades to join-shortest-queue.
+- ``cache_affinity_spread`` — warmth first, then least-loaded zone, then
+                           shortest-queue; placement is zone-balanced
+                           like ``zone_spread``.
 
 A policy returns ``None`` when no ready replica can take the request (e.g.
 every covering replica is still cold-starting); the request then stays in
@@ -248,6 +257,56 @@ class ZoneSpread(DispatchPolicy):
                                          r.rid))
 
 
+class CacheAffinity(DispatchPolicy):
+    """Cache-warmth-directed dispatch for fleets running the shared patch
+    cache tier (``repro.cluster.cachetier``): among candidates whose queue
+    depth is within ``max_imbalance`` of the shortest, send the request to
+    the replica whose L1 patch cache is warmest for its resolution — warm
+    replicas serve it at the full reuse discount while cold ones would pay
+    a fleet-tier fetch or a from-scratch warmup. The imbalance bound keeps
+    locality from herding a burst onto one warm replica; without tier state
+    (or when every candidate is equally cold) warmth ties and the policy
+    degrades to join-shortest-queue exactly."""
+    name = "cache_affinity"
+    max_imbalance = 2                   # queue-depth slack traded for warmth
+
+    def _pool(self, cands: Sequence[Replica]) -> List[Replica]:
+        dmin = min(r.queue_depth for r in cands)
+        return [r for r in cands
+                if r.queue_depth <= dmin + self.max_imbalance]
+
+    def select(self, req, replicas, now):
+        cands = self._candidates(req, replicas, now)
+        if not cands:
+            return None
+        return max(self._pool(cands),
+                   key=lambda r: (r.cache_warmth(req.resolution),
+                                  -r.queue_depth, -r.backlog(now), -r.rid))
+
+
+class CacheAffinitySpread(CacheAffinity):
+    """Cache-warmth dispatch composed with fault-domain spreading: warmth
+    still leads (it is the tier's whole point), but ties — a burst of a
+    resolution nobody is warm for yet, or several equally-warm replicas —
+    break toward the zone holding the least outstanding work, then
+    shortest-queue. The driver places this policy's spawns and crash
+    replacements zone-balanced like ``zone_spread``."""
+    name = "cache_affinity_spread"
+
+    def select(self, req, replicas, now):
+        cands = self._candidates(req, replicas, now)
+        if not cands:
+            return None
+        zone_load: Dict[int, int] = {}
+        for r in replicas:
+            if r.retired_at is None:
+                zone_load[r.zone] = zone_load.get(r.zone, 0) + r.queue_depth
+        return max(self._pool(cands),
+                   key=lambda r: (r.cache_warmth(req.resolution),
+                                  -zone_load.get(r.zone, 0),
+                                  -r.queue_depth, -r.backlog(now), -r.rid))
+
+
 class ResolutionAffinitySpread(ZoneSpread):
     """Affinity partitioning with fault-domain spreading: ``supports``
     restricts candidates to the request's resolution block (the driver
@@ -261,16 +320,21 @@ class ResolutionAffinitySpread(ZoneSpread):
 
 POLICIES = {p.name: p for p in
             (RoundRobin, JoinShortestQueue, LeastSlack, ResolutionAffinity,
-             ZoneSpread, ResolutionAffinitySpread)}
+             ZoneSpread, ResolutionAffinitySpread, CacheAffinity,
+             CacheAffinitySpread)}
 
 #: policies whose replicas the driver builds over partitioned resolution
-#: blocks (one engine per block -> larger GCD patch)
+#: blocks (one engine per block -> larger GCD patch). cache_affinity is
+#: deliberately NOT here: its replicas stay uniform (full ladder, full
+#: flexibility) and specialization emerges from warmth-directed dispatch
+#: instead of a frozen partition.
 AFFINITY_POLICIES = frozenset({"resolution_affinity",
                                "resolution_affinity_spread"})
 
 #: policies for which the driver places replicas zone-balanced and steers
 #: crash replacements away from zones that are currently down
-ZONE_AWARE_POLICIES = frozenset({"zone_spread", "resolution_affinity_spread"})
+ZONE_AWARE_POLICIES = frozenset({"zone_spread", "resolution_affinity_spread",
+                                 "cache_affinity_spread"})
 
 
 def make_policy(name: str) -> DispatchPolicy:

@@ -54,6 +54,56 @@ ZONE_FAULTS = {"qps": 104.0, "duration": 40.0, "n_replicas": 6,
                "zones": 3, "zone_mtbf": 25.0, "zone_downtime": 12.0,
                "cold_start": 1.0}
 
+#: fleet patch-cache-tier reference scenario, shared by the ``--cachetier``
+#: sweep, the example and the tests. Repeat-heavy hybrid-resolution
+#: traffic: each phase concentrates almost all arrivals on one end of the
+#: ladder (requests repeat the same resolution over and over — warm patch
+#: content pays), and the dominant end flips between phases with
+#: phase-specific rates (a cheap-resolution burst is much denser than the
+#: High-resolution phase it alternates with). No static block allocation
+#: covers both phases — a Low-provisioned partition drowns in the High
+#: phase and vice versa — while warmth-directed dispatch
+#: (``cache_affinity``) retargets the whole uniform fleet each phase,
+#: cold recruits warming instantly from the fleet tier instead of from
+#: scratch.
+CACHE_TIER = {"phases": [(15.0, 160.0, (0.9, 0.05, 0.05)),
+                         (15.0, 75.0, (0.075, 0.075, 0.85)),
+                         (15.0, 160.0, (0.9, 0.05, 0.05))],
+              "n_replicas": 4, "steps": 12, "slo_scale": 5.0}
+
+
+def cachetier_workload(seed: int = 0) -> List[Request]:
+    """The shared repeat-heavy hybrid-resolution workload (regenerate per
+    run — Request objects mutate while served)."""
+    sc = CACHE_TIER
+    return phased_workload(list(sc["phases"]), steps=sc["steps"],
+                           slo_scale=sc["slo_scale"], seed=seed)
+
+
+def cachetier_mean_mix() -> Tuple[float, ...]:
+    """Arrival-weighted mean resolution mix of the reference scenario —
+    the best *static* provisioning a frozen affinity partition could be
+    given (used as the strongest no-tier baseline)."""
+    sc = CACHE_TIER
+    tot = sum(d * q for d, q, _ in sc["phases"])
+    return tuple(sum(d * q * m[i] for d, q, m in sc["phases"]) / tot
+                 for i in range(len(sc["phases"][0][2])))
+
+
+def cachetier_config(capacity_bytes: Optional[int] = None):
+    """The shared ``CacheTierConfig`` for the reference scenario.
+    ``capacity_bytes=0`` is the no-tier baseline: identical L1 warmth
+    dynamics, no fleet L2 to fetch from. ``l1_entries=4`` holds exactly
+    one resolution's step bands — a warmth-focused replica is stable, one
+    juggling the whole ladder thrashes; ``warmup_steps=8`` (two thirds of
+    the scenario's 12-step denoise) makes from-scratch warmup genuinely
+    slow, which is what a fleet-tier fetch short-circuits."""
+    from repro.cluster.cachetier import CacheTierConfig
+    kw = {} if capacity_bytes is None else \
+        {"capacity_bytes": capacity_bytes}
+    return CacheTierConfig(fetch_cost=2e-3, write_cost=1e-3,
+                           l1_entries=4, warmup_steps=8, **kw)
+
 
 class PatchAwareLatency:
     """Adapter giving one engine's composition features to the patch-aware
@@ -63,7 +113,17 @@ class PatchAwareLatency:
     each step's predicted latency is discounted by the modeled patch-cache
     hit rate, which grows with the replica's resolution-set concentration
     and the batch's step fraction — so affinity placement is rewarded for
-    cache locality, not just for its larger GCD patch."""
+    cache locality, not just for its larger GCD patch.
+
+    With a fleet cache tier additionally attached (``attach_tier`` — done
+    by the cluster driver when ``ClusterConfig.cache_tier`` is set) the
+    discount is *warmth-gated*: the plain model's hit rate only applies to
+    the fraction of the batch's patch keys this replica's L1 is actually
+    warm for, and the cold remainder is partially recovered through the
+    fleet L2 store at a fetch-latency discount
+    (``CacheHitModel.two_level_hit_rate``). A replica that has never
+    served a resolution is honestly cold for it until it fetches a
+    sibling's warm entries or warms itself up."""
 
     def __init__(self, resolutions: Sequence[Resolution], patch: int,
                  scale: float = 1.0, cache: Optional[CacheHitModel] = None):
@@ -71,15 +131,26 @@ class PatchAwareLatency:
         self.patch = patch
         self.scale = scale
         self.cache = cache
+        self.tier = None                # TierClient once attach_tier runs
+        self._last_hit = 0.0            # effective rate of the last predict
         self.patches_per_res = [(h // patch) * (w // patch)
                                 for h, w in self.resolutions]
+
+    def attach_tier(self, client) -> None:
+        """Gate the cache discount by the replica's L1/L2 warmth
+        (``repro.cluster.cachetier.TierClient``)."""
+        self.tier = client
 
     def modeled_hit_rate(self, concentration: float,
                          step_frac: float) -> float:
         """Hit probability for one step — read back by the engine tick for
         fleet hit-rate metrics. The engine only calls this when ``cache``
         is set (a surrogate advertises cache-awareness by exposing a truthy
-        ``cache`` alongside this method)."""
+        ``cache`` alongside this method). With a tier attached this is the
+        two-level effective rate of the batch the engine just priced via
+        ``predict_batch`` (the engine calls the two back to back)."""
+        if self.tier is not None:
+            return self._last_hit
         return self.cache.hit_rate(concentration, step_frac)
 
     def _latency(self, counts: Sequence[float], hit: float) -> float:
@@ -98,7 +169,12 @@ class PatchAwareLatency:
         conc = resolution_concentration(counts, self.patches_per_res)
         frac = float(np.mean([r.steps_done / max(r.total_steps, 1)
                               for r in reqs]))
-        return self._latency(counts, self.modeled_hit_rate(conc, frac))
+        if self.tier is None:
+            return self._latency(counts, self.cache.hit_rate(conc, frac))
+        l1, l2 = self.tier.warm_fractions(reqs)
+        self._last_hit = self.cache.two_level_hit_rate(
+            conc, frac, l1, l2, l2_discount=self.tier.cfg.l2_discount)
+        return self._latency(counts, self._last_hit)
 
 
 def standalone_latencies(resolutions: Sequence[Resolution] = None,

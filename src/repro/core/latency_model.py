@@ -170,17 +170,39 @@ class CacheHitModel:
     the two locality drivers the tensor path exhibits (``core/cache.py``:
     fewer distinct shapes -> fewer Expired/New transitions; later denoising
     steps -> smaller input deltas -> more reuse under the threshold
-    predictor). Default coefficients are loosely calibrated against
-    ``PatchCache.stats`` from tiny real-engine runs; refit with
-    ``fit_cache_hit_model`` against ``Metrics.cache_samples``."""
-    b0: float = -3.0      # intercept (hit rate floor)
-    b_conc: float = 2.2   # >= 0: monotone in concentration
-    b_step: float = 2.8   # >= 0: monotone in step fraction
+    predictor). Default coefficients are the least-squares logit fit to
+    100 ``Metrics.cache_samples`` recorded on the tiny CPU tensor path
+    (``scripts/calibrate_cache_hit_model.py``; raw samples checked in at
+    ``benchmarks/data/cache_calibration.json``, pinned by
+    ``tests/test_cachetier.py``): reuse is driven hard by step fraction —
+    late denoise steps have small input deltas, so the threshold predictor
+    fires — with a smaller but real concentration effect. Refit with
+    ``fit_cache_hit_model`` against fresh ``Metrics.cache_samples`` when
+    the predictor, tau, or models change."""
+    b0: float = -6.07     # intercept (hit rate floor)
+    b_conc: float = 1.76  # >= 0: monotone in concentration
+    b_step: float = 9.32  # >= 0: monotone in step fraction
 
     def hit_rate(self, concentration: float, step_frac: float) -> float:
         z = (self.b0 + self.b_conc * min(max(concentration, 0.0), 1.0)
              + self.b_step * min(max(step_frac, 0.0), 1.0))
         return float(1.0 / (1.0 + np.exp(-z)))
+
+    def two_level_hit_rate(self, concentration: float, step_frac: float,
+                           l1_frac: float, l2_frac: float,
+                           l2_discount: float = 0.7) -> float:
+        """Two-level effective hit probability for the fleet cache tier
+        (``repro.cluster.cachetier``). ``hit_rate`` assumes the replica's
+        local (L1) patch cache is warm for the whole batch; here only
+        ``l1_frac`` of the batch's patch keys are locally warm, and of the
+        cold remainder ``l2_frac`` can be recovered from the fleet (L2)
+        tier — discounted by ``l2_discount`` because a remote hit pays
+        fetch latency on the step's critical path (the fetch itself is
+        additionally charged on the sim clock by the tier client)."""
+        p = self.hit_rate(concentration, step_frac)
+        l1 = min(max(l1_frac, 0.0), 1.0)
+        l2 = min(max(l2_frac, 0.0), 1.0)
+        return p * (l1 + (1.0 - l1) * l2 * min(max(l2_discount, 0.0), 1.0))
 
 
 def fit_cache_hit_model(samples: Sequence[Tuple[float, float, float]]

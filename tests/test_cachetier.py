@@ -1,0 +1,581 @@
+"""Fleet patch-cache tier — store invariants (capacity, eviction order,
+two-phase commit, crash-abort exactly-once), per-replica L1 warmth
+dynamics, fetch/write cost charging on the sim clock, the two-level hit
+model, warmth-directed (``cache_affinity``) dispatch, the latent-size-aware
+checkpoint cost and blind-fleet zone rebalancing satellites, the checked-in
+``CacheHitModel`` calibration, and the benchmark's asserted headline win.
+
+Property-based coverage needs ``hypothesis`` (optional, see
+requirements-dev.txt); without it those cases report as skipped and the
+deterministic tests still run.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.cluster import (CacheTier, CacheTierConfig, CheckpointConfig,
+                           Cluster, ClusterConfig, FailureConfig, Replica,
+                           TierClient, cachetier_config, cachetier_mean_mix,
+                           cachetier_workload, latent_bytes, make_policy,
+                           sim_engine_factory)
+from repro.cluster.cachetier import _L1State
+from repro.cluster.simtools import CACHE_TIER, DEFAULT_RES, cluster_workload
+from repro.core.latency_model import CacheHitModel, fit_cache_hit_model
+from repro.core.requests import Request
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
+LOW, MED, HIGH = DEFAULT_RES
+
+
+def _key(res, patch=8, band=0):
+    return (tuple(res), patch, band)
+
+
+def _req(rid, res, steps=4, arrival=0.0):
+    return Request(rid=rid, resolution=tuple(res), arrival=arrival,
+                   slo=1e9, total_steps=steps)
+
+
+def _tier(capacity=1 << 20, eviction="lru", **kw):
+    return CacheTier(CacheTierConfig(capacity_bytes=capacity,
+                                     eviction=eviction, **kw))
+
+
+# ---------------- byte accounting + config ----------------
+
+def test_latent_bytes_accounting():
+    assert latent_bytes((16, 16), channels=4, itemsize=4) == 16 * 16 * 4 * 4
+    assert latent_bytes((32, 32), channels=4, itemsize=4, stores=2) \
+        == 2 * 32 * 32 * 4 * 4
+    cfg = CacheTierConfig()
+    # a tier entry keeps cached inputs AND outputs (like core PatchCache)
+    assert cfg.entry_bytes((24, 24)) == 2 * 24 * 24 * 4 * 4
+    assert cfg.entry_bytes(HIGH) == 4 * cfg.entry_bytes(LOW)
+
+
+def test_cache_tier_config_validation():
+    with pytest.raises(ValueError, match="eviction"):
+        CacheTierConfig(eviction="mru")
+    with pytest.raises(ValueError, match="fetch_cost"):
+        CacheTierConfig(fetch_cost=-1.0)
+    with pytest.raises(ValueError, match="step_bands"):
+        CacheTierConfig(step_bands=0)
+    with pytest.raises(ValueError, match="warmup_steps"):
+        CacheTierConfig(warmup_steps=0)
+    with pytest.raises(ValueError, match="l2_discount"):
+        CacheTierConfig(l2_discount=0.0)
+    with pytest.raises(ValueError, match="size_aware_window"):
+        CacheTierConfig(eviction="size_aware", size_aware_window=0)
+
+
+# ---------------- store: two-phase commit + eviction ----------------
+
+def test_write_invisible_until_commit():
+    t = _tier()
+    t.begin_write(_key(LOW), 100, commit_at=2.0, owner=0)
+    t.settle(1.0)
+    assert not t.contains(_key(LOW)) and t.bytes_stored == 0
+    t.settle(2.0)
+    assert t.contains(_key(LOW)) and t.bytes_stored == 100
+    assert t.stats["writes"] == 1
+
+
+def test_duplicate_commit_refreshes_without_double_count():
+    t = _tier()
+    t.begin_write(_key(LOW), 100, commit_at=1.0, owner=0)
+    t.begin_write(_key(LOW), 100, commit_at=1.5, owner=1)
+    t.settle(2.0)
+    assert t.bytes_stored == 100 and t.n_entries == 1
+    assert t.stats["writes"] == 1 and t.stats["refreshes"] == 1
+
+
+def test_lru_eviction_order():
+    t = _tier(capacity=300)
+    for i, key in enumerate((_key(LOW, band=0), _key(LOW, band=1),
+                             _key(LOW, band=2))):
+        t.begin_write(key, 100, commit_at=float(i), owner=0)
+    t.settle(10.0)
+    assert t.n_entries == 3
+    t.lookup(_key(LOW, band=0), 11.0)          # touch oldest -> now newest
+    t.begin_write(_key(LOW, band=3), 100, commit_at=12.0, owner=0)
+    t.settle(12.0)
+    # band=1 was least recently used -> evicted; touched band=0 survives
+    assert not t.contains(_key(LOW, band=1))
+    assert t.contains(_key(LOW, band=0)) and t.contains(_key(LOW, band=3))
+    assert t.stats["evictions"] == 1 and t.stats["bytes_evicted"] == 100
+    assert t.bytes_stored == 300
+
+
+def test_size_aware_evicts_large_cold_entry_first():
+    t = _tier(capacity=3000, eviction="size_aware")
+    t.begin_write(_key(HIGH), 2000, commit_at=0.0, owner=0)   # large, cold
+    t.begin_write(_key(LOW, band=1), 100, commit_at=1.0, owner=0)
+    t.begin_write(_key(LOW, band=2), 100, commit_at=2.0, owner=0)
+    t.settle(3.0)
+    t.begin_write(_key(MED), 1500, commit_at=4.0, owner=0)    # overflows
+    t.settle(4.0)
+    # lru would evict the HIGH entry anyway here; the point is the small
+    # old entries survive while the big one goes in ONE eviction
+    assert not t.contains(_key(HIGH))
+    assert t.contains(_key(LOW, band=1)) and t.contains(_key(LOW, band=2))
+    assert t.stats["evictions"] == 1
+    assert t.bytes_stored <= 3000
+
+
+def test_disabled_tier_never_stores_or_charges_writes():
+    t = _tier(capacity=0)
+    t.begin_write(_key(LOW), 100, commit_at=0.0, owner=0)
+    t.settle(1.0)
+    assert t.n_entries == 0 and not t.lookup(_key(LOW), 1.0)
+    # and the client never pays write costs into a disabled tier
+    c = TierClient(t, rid=0, patch=8)
+    reqs = [_req(0, LOW, steps=40)]
+    now = 0.0
+    for _ in range(20):
+        reqs[0].steps_done += 1
+        c.on_step(reqs, now, now + 0.01)
+        now += 0.01
+    assert c.stats["publishes"] == 0 and c.stats["write_time"] == 0.0
+
+
+@pytest.mark.skipif(st is None, reason="hypothesis not installed")
+def test_capacity_never_exceeded_property():
+    pytest.importorskip("hypothesis")
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 7),      # key index
+                              st.sampled_from([50, 100, 400, 900]),
+                              st.integers(0, 5),      # commit delay
+                              st.booleans()),         # abort before commit?
+                    min_size=1, max_size=40),
+           st.sampled_from(["lru", "size_aware"]))
+    def run(ops, eviction):
+        t = _tier(capacity=1000, eviction=eviction)
+        now = 0.0
+        for i, (k, nbytes, delay, abort) in enumerate(ops):
+            now += 1.0
+            t.begin_write(_key(LOW, band=k), nbytes, commit_at=now + delay,
+                          owner=i)
+            if abort:
+                t.abort_owner(i, now)
+            t.settle(now)
+            assert t.bytes_stored <= 1000
+            assert t.bytes_stored == sum(t._entries.values())
+            assert t.bytes_stored <= t.bytes_peak
+        t.settle(now + 10.0)
+        assert t.bytes_stored <= 1000
+        assert t.stats["writes"] + t.stats["refreshes"] \
+            + t.stats["writes_aborted"] == len(ops)
+
+    run()
+
+
+def test_capacity_never_exceeded_smoke():
+    """Deterministic fallback for the property above."""
+    for eviction in ("lru", "size_aware"):
+        t = _tier(capacity=1000, eviction=eviction)
+        for i in range(30):
+            t.begin_write(_key(LOW, band=i % 7), 100 + 100 * (i % 4),
+                          commit_at=float(i), owner=i)
+            t.settle(float(i))
+            assert t.bytes_stored <= 1000
+            assert t.bytes_stored == sum(t._entries.values())
+
+
+# ---------------- crash during an in-flight L2 write ----------------
+
+def test_crash_during_l2_write_is_exactly_once():
+    """A write in flight when its owner crashes never commits — and a
+    later publish of the same key commits exactly once, bytes counted
+    once."""
+    tier = _tier()
+    cfg = CacheTierConfig(warmup_steps=2, step_bands=1)
+    c0 = TierClient(tier, rid=0, cfg=cfg, patch=8)
+    req = _req(0, LOW, steps=8)
+    # two steps self-warm the key -> publish staged, commits at 5.0
+    req.steps_done = 1
+    c0.on_step([req], 1.0, 4.999)
+    req.steps_done = 2
+    extra = c0.on_step([req], 2.0, 5.0 - cfg.write_cost)
+    assert extra == pytest.approx(cfg.write_cost)
+    assert tier.n_pending == 1
+    c0.on_crash(4.0)                       # crash BEFORE the commit instant
+    tier.settle(10.0)
+    assert tier.n_entries == 0 and tier.bytes_stored == 0
+    assert tier.stats["writes_aborted"] == 1 and tier.stats["writes"] == 0
+    # a surviving replica re-publishes: exactly one commit
+    c1 = TierClient(tier, rid=1, cfg=cfg, patch=8)
+    req2 = _req(1, LOW, steps=8)
+    for step, now in ((1, 10.0), (2, 11.0)):
+        req2.steps_done = step
+        c1.on_step([req2], now, now + 0.5)
+    tier.settle(20.0)
+    assert tier.n_entries == 1
+    assert tier.bytes_stored == cfg.entry_bytes(LOW)
+    assert tier.stats["writes"] == 1
+
+
+def test_publish_commits_at_full_busy_end_including_fetch_costs():
+    """A publish staged in a step that also fetched commits only at the
+    step's FINAL busy end (engine dt + fetch + write costs) — a crash at
+    any instant the writer is still busy aborts it."""
+    tier = _tier()
+    cfg = CacheTierConfig(warmup_steps=1, step_bands=1, fetch_cost=0.5,
+                          write_cost=0.25)
+    # seed the tier so the LOW key is fetchable
+    tier.begin_write(_key(LOW), 100, commit_at=0.0, owner=9)
+    tier.settle(0.0)
+    c = TierClient(tier, rid=0, cfg=cfg, patch=8)
+    low, med = _req(0, LOW, steps=8), _req(1, MED, steps=8)
+    low.steps_done = med.steps_done = 1
+    # one call: LOW fetches (0.5), MED self-warms instantly -> publish
+    extra = c.on_step([low, med], now=1.0, step_end=2.0)
+    assert extra == pytest.approx(0.75)
+    pending = tier._pending[-1]
+    assert pending.key == _key(MED)
+    assert pending.commit_at == pytest.approx(2.0 + 0.75)   # full busy end
+    # crash while the writer is still inside its busy window -> aborted
+    c.on_crash(2.0 + 0.5)
+    tier.settle(10.0)
+    assert not tier.contains(_key(MED))
+    assert tier.stats["writes_aborted"] == 1
+
+
+def test_write_committed_before_crash_survives():
+    """Exactly-once cuts both ways: a write whose commit instant preceded
+    the crash is durable and must NOT be aborted retroactively."""
+    tier = _tier()
+    tier.begin_write(_key(LOW), 100, commit_at=1.0, owner=0)
+    tier.abort_owner(0, crash_t=2.0)       # crash AFTER the commit instant
+    tier.settle(3.0)
+    assert tier.contains(_key(LOW))
+    assert tier.stats["writes"] == 1 and tier.stats["writes_aborted"] == 0
+
+
+def test_cluster_crash_with_tier_keeps_request_accounting():
+    """Conservation holds through crash + requeue with the tier active,
+    and the driver's settle ordering (crash pass first) holds up."""
+    factory = sim_engine_factory(DEFAULT_RES, cache=CacheHitModel())
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=2, policy="cache_affinity",
+                               failures=FailureConfig(mtbf=1e9, recover=True,
+                                                      cold_start=1.0),
+                               cache_tier=CacheTierConfig(),
+                               record_timeseries=False))
+    cl.replicas[0].crash_at = 1.5
+    wl = cluster_workload(qps=120.0, duration=3.0, seed=0)
+    m = cl.run(wl)
+    assert m.replicas_failed == 1 and m.requests_requeued > 0
+    assert m.completed + m.dropped == len(wl)
+    assert all(r.state in ("done", "dropped") for r in wl)
+    s = m.summary()
+    json.dumps(s)
+    assert s["cache_tier"]["tier"]["pending_writes"] == 0
+
+
+# ---------------- L1 warmth dynamics + cost charging ----------------
+
+def test_l1_thrash_evicts_beyond_capacity():
+    tier = _tier()
+    cfg = CacheTierConfig(l1_entries=2, step_bands=1, warmup_steps=2)
+    c = TierClient(tier, rid=0, cfg=cfg, patch=8)
+    reqs = [_req(i, res, steps=8) for i, res in enumerate(DEFAULT_RES)]
+    for r in reqs:
+        r.steps_done = 1
+    c.on_step(reqs, 0.0, 0.1)              # 3 distinct keys, capacity 2
+    assert len(c._l1) == 2 and c.stats["l1_evictions"] == 1
+
+
+def test_fetch_cost_charged_on_replica_clock():
+    """A cold replica fetching a sibling's committed entry pays fetch_cost
+    on its busy horizon; a warm step pays nothing extra."""
+    tier_cfg = CacheTierConfig(fetch_cost=0.5, write_cost=0.25,
+                               step_bands=1, warmup_steps=2)
+    tier = CacheTier(tier_cfg)
+    factory = sim_engine_factory(DEFAULT_RES)
+
+    def replica(rid):
+        rep = Replica(rid, factory(DEFAULT_RES))
+        rep.attach_tier(TierClient(tier, rid, cfg=tier_cfg))
+        return rep
+
+    rep0 = replica(0)
+    rep0.submit(_req(0, LOW, steps=6))
+    now = 0.0
+    for _ in range(3):                     # self-warm + publish
+        ev = rep0.tick(now)
+        now = rep0.next_free
+    assert rep0.tier.stats["publishes"] == 1
+    tier.settle(now + 1.0)
+    assert tier.contains((tuple(LOW), rep0.patch, 0))
+
+    rep1 = replica(1)
+    rep1.submit(_req(1, LOW, steps=6))
+    t0 = now + 1.0
+    ev = rep1.tick(t0)
+    # busy horizon = engine step + one fetch
+    assert rep1.next_free - t0 == pytest.approx(ev.dt + 0.5)
+    assert rep1.tier.stats["l2_fetches"] == 1
+    assert rep1.tier.stats["fetch_time"] == pytest.approx(0.5)
+    # second step of the same band: warm, nothing extra
+    t1 = rep1.next_free
+    ev2 = rep1.tick(t1)
+    assert rep1.next_free - t1 == pytest.approx(ev2.dt)
+
+
+def test_two_level_hit_rate_bounds_and_monotonicity():
+    m = CacheHitModel()
+    p = m.hit_rate(1.0, 0.9)
+    # fully warm L1 == plain model; fully cold with no L2 == zero
+    assert m.two_level_hit_rate(1.0, 0.9, 1.0, 0.0) == pytest.approx(p)
+    assert m.two_level_hit_rate(1.0, 0.9, 0.0, 0.0) == 0.0
+    # L2 recovers part of the cold share, monotone in both fractions
+    half = m.two_level_hit_rate(1.0, 0.9, 0.5, 0.0)
+    half_l2 = m.two_level_hit_rate(1.0, 0.9, 0.5, 1.0)
+    assert half == pytest.approx(0.5 * p)
+    assert half < half_l2 < p
+    assert m.two_level_hit_rate(1.0, 0.9, 0.2, 0.5) \
+        < m.two_level_hit_rate(1.0, 0.9, 0.6, 0.5)
+
+
+def test_warm_fractions_patch_weighted():
+    tier = _tier()
+    cfg = CacheTierConfig(step_bands=1, warmup_steps=2)
+    c = TierClient(tier, rid=0, cfg=cfg, patch=8)
+    c._l1[_key(HIGH)] = _L1State(steps=2)            # High fully warm
+    l1, l2 = c.warm_fractions([_req(0, HIGH), _req(1, LOW)])
+    # High carries 16 patches vs Low's 4 at patch 8
+    assert l1 == pytest.approx(16 / 20)
+    assert l2 == 0.0
+    tier.begin_write(_key(LOW), 100, commit_at=0.0, owner=1)
+    tier.settle(0.0)
+    l1b, l2b = c.warm_fractions([_req(0, HIGH), _req(1, LOW)])
+    assert l1b == pytest.approx(l1)
+    assert l2b == pytest.approx(1.0)                 # all cold mass covered
+
+
+def test_migration_switch_clears_l1():
+    tier = _tier()
+    c = TierClient(tier, rid=0, patch=8)
+    c._l1[_key(LOW)] = _L1State(steps=99)
+    assert c.warmth(LOW) > 0
+    c.on_switch(patch=16)
+    assert c.warmth(LOW) == 0.0 and c.patch == 16
+
+
+# ---------------- cache_affinity dispatch ----------------
+
+def _routing_replicas(warm_res=None, tier=None):
+    factory = sim_engine_factory(DEFAULT_RES)
+    tier = tier or _tier()
+    cfg = CacheTierConfig(step_bands=1, warmup_steps=2)
+    reps = []
+    for rid in range(2):
+        rep = Replica(rid, factory(DEFAULT_RES))
+        rep.attach_tier(TierClient(tier, rid, cfg=cfg))
+        reps.append(rep)
+    if warm_res is not None:
+        reps[0].tier._l1[(tuple(warm_res), reps[0].patch, 0)] = \
+            _L1State(steps=2)
+    return reps
+
+
+def test_cache_affinity_routes_to_warmest():
+    reps = _routing_replicas(warm_res=HIGH)
+    pol = make_policy("cache_affinity")
+    assert pol.select(_req(0, HIGH), reps, now=0.0) is reps[0]
+    # for a resolution nobody is warm for, ties break like JSQ (lowest rid
+    # at equal depth/backlog)
+    assert pol.select(_req(1, LOW), reps, now=0.0) is reps[0]
+    reps[0].submit(_req(2, LOW))
+    assert pol.select(_req(3, LOW), reps, now=0.0) is reps[1]
+
+
+def test_cache_affinity_bounds_queue_imbalance():
+    """Warmth never overrides a queue gap beyond max_imbalance: a warm
+    replica already drowning loses to a cold idle one."""
+    reps = _routing_replicas(warm_res=HIGH)
+    pol = make_policy("cache_affinity")
+    for i in range(pol.max_imbalance + 1):
+        reps[0].submit(_req(10 + i, HIGH))
+    assert reps[0].cache_warmth(HIGH) > reps[1].cache_warmth(HIGH)
+    assert pol.select(_req(99, HIGH), reps, now=0.0) is reps[1]
+
+
+def test_cache_affinity_without_tier_degrades_to_jsq():
+    factory = sim_engine_factory(DEFAULT_RES)
+    reps = [Replica(rid, factory(DEFAULT_RES)) for rid in range(3)]
+    reps[0].submit(_req(0, LOW))
+    pol = make_policy("cache_affinity")
+    jsq = make_policy("join_shortest_queue")
+    for rid, res in ((1, LOW), (2, HIGH), (3, MED)):
+        assert pol.select(_req(rid, res), reps, 0.0) \
+            is jsq.select(_req(rid, res), reps, 0.0)
+
+
+def test_cache_affinity_spread_breaks_warmth_ties_by_zone_load():
+    factory = sim_engine_factory(DEFAULT_RES)
+    tier = _tier()
+    reps = []
+    for rid, zone in ((0, 0), (1, 0), (2, 1)):
+        rep = Replica(rid, factory(DEFAULT_RES), zone=zone)
+        rep.attach_tier(TierClient(tier, rid))
+        reps.append(rep)
+    reps[0].submit(_req(0, LOW))           # load zone 0
+    pol = make_policy("cache_affinity_spread")
+    # equal (zero) warmth everywhere; zone 1 holds least outstanding work
+    assert pol.select(_req(1, HIGH), reps, 0.0) is reps[2]
+
+
+# ---------------- satellite: latent-size-aware checkpoint cost ----------
+
+def test_checkpoint_snapshot_cost_latent_size_aware():
+    flat = CheckpointConfig()
+    assert flat.snapshot_cost(LOW) == flat.snapshot_cost(HIGH) \
+        == flat.write_cost
+    sized = CheckpointConfig(write_cost=0.0, cost_per_byte=1e-6)
+    assert sized.snapshot_cost(LOW) == pytest.approx(1e-6 * 256 * 16)
+    assert sized.snapshot_cost(HIGH) == pytest.approx(1e-6 * 1024 * 16)
+    assert sized.snapshot_cost(HIGH) == 4 * sized.snapshot_cost(LOW)
+    with pytest.raises(ValueError, match="cost_per_byte"):
+        CheckpointConfig(cost_per_byte=-1.0)
+
+
+def test_checkpoint_byte_cost_charged_by_resolution():
+    """Same tick pattern, same snapshot count: the replica holding High
+    latents pays 4x the checkpoint time of the one holding Low."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    times = {}
+    for res in (LOW, HIGH):
+        rep = Replica(0, factory(DEFAULT_RES),
+                      checkpoint=CheckpointConfig(every_k_steps=1,
+                                                  write_cost=0.0,
+                                                  cost_per_byte=1e-6))
+        rep.submit(_req(0, res, steps=4))
+        now = 0.0
+        for _ in range(4):
+            rep.tick(now)
+            now = rep.next_free
+        # the final step completes the request, which is GC'd before the
+        # snapshot pass — so k-1 snapshots for a k-step request at every_k=1
+        assert rep.checkpoint_writes == 3
+        times[tuple(res)] = rep.checkpoint_time
+    assert times[tuple(HIGH)] == pytest.approx(4 * times[tuple(LOW)])
+    assert times[tuple(LOW)] > 0.0
+
+
+# ---------------- satellite: blind-fleet zone rebalancing ----------------
+
+def _zone_cluster(n=6, zones=3):
+    factory = sim_engine_factory(DEFAULT_RES)
+    return Cluster(factory, DEFAULT_RES,
+                   ClusterConfig(n_replicas=n, policy="join_shortest_queue",
+                                 failures=FailureConfig(
+                                     mtbf=None, zones=zones,
+                                     zone_mtbf=1e9, zone_downtime=5.0),
+                                 record_timeseries=False))
+
+
+def test_blind_spawn_rebalances_lopsided_fleet():
+    """A zone-unaware fleet that drifted lopsided places its next spawn in
+    the least-occupied live zone instead of round-robin."""
+    cl = _zone_cluster()
+    assert [r.zone for r in cl.replicas] == [0, 1, 2, 0, 1, 2]
+    for rep in cl.replicas:
+        if rep.zone == 0:
+            rep.fail(1.0)                  # occupancy drifts to (0, 2, 2)
+    rep = cl._spawn(DEFAULT_RES, now=2.0, cold=0.0)
+    assert rep.zone == 0
+
+
+def test_blind_spawn_keeps_round_robin_when_balanced():
+    cl = _zone_cluster()
+    cl._zone_counter = 1                   # next round-robin pick: zone 1
+    rep = cl._spawn(DEFAULT_RES, now=1.0, cold=0.0)
+    assert rep.zone == 1                   # balanced fleet: no correction
+
+
+def test_blind_spawn_ignores_down_zone_emptiness():
+    """A zone emptied by an outage (and still down) must not trigger the
+    lopsided correction: blind fleets keep round-robin — and keep paying
+    the down-zone respawn stall zone-aware placement avoids."""
+    cl = _zone_cluster()
+    for rep in cl.replicas:
+        if rep.zone == 0:
+            rep.fail(1.0)
+    cl._zone_down_until[0] = 100.0         # zone 0 is DOWN, not just empty
+    cl._zone_counter = 0
+    rep = cl._spawn(DEFAULT_RES, now=2.0, cold=0.5)
+    assert rep.zone == 0                   # round-robin, into the down zone
+    assert rep.ready_at == pytest.approx(100.0 + 0.5)   # boot stalls
+
+
+# ---------------- satellite: checked-in CacheHitModel calibration --------
+
+def test_cache_hit_model_defaults_match_calibration():
+    """The defaults are the fit to the checked-in tensor-path samples:
+    re-fitting must reproduce them (regression guard for both the samples
+    file and the coefficients)."""
+    path = Path(__file__).parent.parent / "benchmarks" / "data" \
+        / "cache_calibration.json"
+    data = json.loads(path.read_text())
+    refit = fit_cache_hit_model([tuple(s) for s in data["samples"]])
+    default = CacheHitModel()
+    assert refit.b0 == pytest.approx(default.b0, abs=0.02)
+    assert refit.b_conc == pytest.approx(default.b_conc, abs=0.02)
+    assert refit.b_step == pytest.approx(default.b_step, abs=0.02)
+    assert refit.b_conc >= 0.0 and refit.b_step >= 0.0
+    # and the stored fit matches what fit_cache_hit_model computes today
+    assert refit.b0 == pytest.approx(data["fit"]["b0"], abs=1e-6)
+
+
+# ---------------- fleet metrics + headline ----------------
+
+def test_summary_reports_tier_metrics_json_ready():
+    factory = sim_engine_factory(DEFAULT_RES, cache=CacheHitModel())
+    cl = Cluster(factory, DEFAULT_RES,
+                 ClusterConfig(n_replicas=2, policy="cache_affinity",
+                               cache_tier=CacheTierConfig(),
+                               record_timeseries=False))
+    m = cl.run(cluster_workload(qps=24.0, duration=6.0, seed=0))
+    s = m.summary()
+    ct = s["cache_tier"]
+    json.dumps(s)
+    for k in ("l1_hit_rate", "l2_hit_rate", "fetch_time", "write_time"):
+        assert k in ct
+    for k in ("bytes_stored", "bytes_peak", "evictions", "writes",
+              "writes_aborted", "hit_rate"):
+        assert k in ct["tier"]
+    assert ct["l1_hits"] + ct["l2_fetches"] + ct["cold_misses"] > 0
+
+
+def test_tier_and_cache_affinity_beat_best_no_tier_policy():
+    """The benchmark's asserted headline on the shared CACHE_TIER scenario
+    (seed 7): the fleet tier + warmth-directed dispatch beats the
+    strongest no-tier PR-4 policies (least_slack and mean-mix-provisioned
+    resolution_affinity) under identical L1 warmth dynamics."""
+    sc = CACHE_TIER
+    factory = sim_engine_factory(DEFAULT_RES, steps=sc["steps"],
+                                 cache=CacheHitModel())
+
+    def run(policy, capacity, mix0=None):
+        cl = Cluster(factory, DEFAULT_RES,
+                     ClusterConfig(n_replicas=sc["n_replicas"],
+                                   policy=policy, initial_mix=mix0,
+                                   cache_tier=cachetier_config(capacity),
+                                   record_timeseries=False))
+        return cl.run(cachetier_workload(seed=7))
+
+    head = run("cache_affinity", None)
+    ls = run("least_slack", 0)
+    ra = run("resolution_affinity", 0, mix0=cachetier_mean_mix())
+    assert head.cache_tier["l2_hit_rate"] > 0
+    assert head.cache_tier["tier"]["writes"] > 0
+    best = max(ls.slo_satisfaction, ra.slo_satisfaction)
+    assert head.slo_satisfaction > best, (
+        head.slo_satisfaction, ls.slo_satisfaction, ra.slo_satisfaction)
