@@ -43,6 +43,23 @@ fault-domain-aware ``zone_spread`` policy (zone-balanced placement that
 avoids down zones, least-loaded-zone dispatch) — zone_spread must win
 fleet SLO satisfaction. Both wins are asserted in CI.
 
+``--trace-dir DIR`` runs one traced regime (the crash+checkpoint
+scenario — it exercises requeue, checkpoint and drop paths) with the
+per-request span tracer on and persists three artifacts into DIR:
+``trace.jsonl`` (fleet events + per-request span records with the full
+latency decomposition), ``trace_chrome.json`` (Chrome ``chrome://tracing``
+/ Perfetto timeline — replicas as tracks, zones as process groups), and
+``timeseries.json`` (the fleet summary with the raw queue/replica time
+series that the default summary reduces to stats). ``--trace-mode``
+picks the retention policy: ``all`` (default), ``violations`` (per-request
+events kept only for SLO misses/drops), or ``sample``. The SLO-violation
+attribution histogram is printed either way; feed ``trace.jsonl`` to
+``scripts/trace_report.py`` for the offline view.
+
+``--perf-json PATH`` appends a sim-throughput record (event-loop
+iterations per wall second, per regime and total) to PATH — the nightly
+perf trajectory writes one ``BENCH_<date>.json`` per run.
+
 ``--cachetier`` adds the fleet patch-cache-tier axis (shared scenario
 ``simtools.CACHE_TIER``): repeat-heavy hybrid-resolution traffic whose
 dominant resolution flips between phases, every run priced under the same
@@ -63,7 +80,7 @@ from pathlib import Path
 
 from benchmarks.common import make_cluster
 from repro.cluster import (AutoscalerConfig, CheckpointConfig,
-                           FailureConfig, RepartitionConfig)
+                           FailureConfig, RepartitionConfig, TraceConfig)
 from repro.cluster.simtools import (CACHE_TIER, CRASH_FAULTS, UPDOWN_KNOTS,
                                     ZONE_FAULTS, cachetier_config,
                                     cachetier_mean_mix, cachetier_workload,
@@ -325,6 +342,65 @@ def cachetier_trace(seed):
     return out
 
 
+def traced_run(trace_dir, mode, seed):
+    """One traced regime for ``--trace-dir``: the crash+checkpoint
+    scenario under ``least_slack`` dispatch, chosen because it walks the
+    nastiest span paths (crash-orphan requeue, checkpoint resume, drops)
+    so the exported decomposition shows every component class. Writes
+    ``trace.jsonl`` / ``trace_chrome.json`` / ``timeseries.json`` into
+    DIR and prints the SLO-violation attribution histogram."""
+    tdir = Path(trace_dir)
+    tdir.mkdir(parents=True, exist_ok=True)
+    cl = make_cluster(n_replicas=3, policy="least_slack",
+                      failures=FailureConfig(mtbf=10.0, recover=True,
+                                             seed=seed),
+                      checkpoint=CheckpointConfig(),
+                      trace=TraceConfig(mode=mode, seed=seed),
+                      record_timeseries=True)
+    m = cl.run(cluster_workload(qps=30.0, duration=12.0, seed=seed))
+    s = m.summary(full_timeseries=True)
+    n_spans = cl.tracer.write_jsonl(tdir / "trace.jsonl")
+    n_chrome = cl.tracer.write_chrome_trace(tdir / "trace_chrome.json")
+    (tdir / "timeseries.json").write_text(json.dumps(s, indent=1))
+    att = s.get("attribution", {})
+    pred = s.get("predictor", {})
+    print(f"trace mode={mode}: {n_spans} jsonl records, "
+          f"{n_chrome} chrome events -> {tdir}")
+    for comp, cnt in sorted(att.get("dominant", {}).items(),
+                            key=lambda kv: -kv[1]):
+        print(f"  violations dominated by {comp:16s} {cnt}")
+    if pred:
+        print(f"  predictor n={pred['n']} mae={pred['mae']:.4f}s "
+              f"bias={pred['bias']:+.4f}s drift={pred['drift']}")
+    return {"mode": mode, "dir": str(tdir), "jsonl_records": n_spans,
+            "chrome_events": n_chrome, "attribution": att,
+            "predictor": pred}
+
+
+def perf_summary(results, date=None):
+    """Fold sweep records into the sim-throughput trajectory record the
+    nightly job persists as ``BENCH_<date>.json``: per-regime and total
+    event-loop iterations per wall second."""
+    regimes = []
+    for r in results:
+        wall = r.get("wall_s", 0.0)
+        ev = r.get("sim_events", 0)
+        regimes.append({
+            "qps": r["qps"], "policy": r["policy"],
+            "n_replicas": r["n_replicas"], "wall_s": wall,
+            "sim_events": ev,
+            "events_per_s": round(ev / wall, 1) if wall else 0.0})
+    total_wall = sum(r["wall_s"] for r in regimes)
+    total_ev = sum(r["sim_events"] for r in regimes)
+    return {"kind": "cluster_sweep_perf",
+            "date": date or time.strftime("%Y-%m-%d"),
+            "total": {"wall_s": round(total_wall, 2),
+                      "sim_events": total_ev,
+                      "events_per_s": round(total_ev / total_wall, 1)
+                      if total_wall else 0.0},
+            "regimes": regimes}
+
+
 #: ``cachetier_trace`` runs counted as no-tier PR-4 baselines by the
 #: headline assert (cache_affinity and the tier runs are this PR's)
 CACHETIER_BASELINES = ("round_robin", "join_shortest_queue", "least_slack",
@@ -353,6 +429,18 @@ def main() -> None:
                          "tier + cache_affinity dispatch vs every no-tier "
                          "PR-4 policy on the repeat-heavy hybrid-"
                          "resolution scenario (win asserted)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="run one traced regime (crash+checkpoint) and "
+                         "write trace.jsonl / trace_chrome.json / "
+                         "timeseries.json into DIR")
+    ap.add_argument("--trace-mode", default="all",
+                    choices=("all", "violations", "sample"),
+                    help="per-request event retention for --trace-dir "
+                         "(spans/attribution always cover every request)")
+    ap.add_argument("--perf-json", default=None, metavar="PATH",
+                    help="write the sim-throughput trajectory record "
+                         "(events/s per regime + total) to PATH, e.g. "
+                         "BENCH_$(date +%%F).json")
     ap.add_argument("--out", default="benchmarks/cluster_results.json")
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--seed", type=int, default=1)
@@ -391,6 +479,11 @@ def main() -> None:
     if args.cachetier:
         cachetier = cachetier_trace(seed=args.seed + 6)
 
+    traced = None
+    if args.trace_dir:
+        traced = traced_run(args.trace_dir, args.trace_mode,
+                            seed=args.seed + 8)
+
     # headline: SLO-aware / resolution-aware routing must beat round-robin
     # somewhere in the sweep
     wins = []
@@ -422,9 +515,22 @@ def main() -> None:
         out["faults"] = faults
     if cachetier is not None:
         out["cachetier"] = cachetier
+    if traced is not None:
+        out["traced"] = traced
     Path(args.out).write_text(json.dumps(out, indent=1))
     print(f"# wrote {args.out} ({len(results)} sweep points, "
           f"{len(wins)} routing wins vs round_robin)", file=sys.stderr)
+    if args.perf_json:
+        perf = perf_summary(results)
+        if perf["total"]["sim_events"] <= 0 \
+                or perf["total"]["events_per_s"] <= 0:
+            raise SystemExit("perf trajectory recorded zero sim "
+                             "throughput — sim_events plumbing "
+                             "regression?")
+        Path(args.perf_json).write_text(json.dumps(perf, indent=1))
+        print(f"# wrote {args.perf_json} "
+              f"(total {perf['total']['events_per_s']} events/s over "
+              f"{len(perf['regimes'])} regimes)", file=sys.stderr)
     if not wins:
         raise SystemExit("no sweep point where SLO/resolution-aware "
                          "routing beat round_robin — policy regression?")

@@ -102,7 +102,8 @@ def workload(eng, qps, duration=40.0, slo_scale=5.0, steps=10, seed=0,
 def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                  steps=10, scale=1.0, record_timeseries=True,
                  initial_mix=None, repartition=None, cache=None,
-                 failures=None, checkpoint=None, cache_tier=None):
+                 failures=None, checkpoint=None, cache_tier=None,
+                 trace=None):
     """Multi-replica sim cluster over the benchmark resolution ladder.
     Engines are synthetic sim (no tensors) with the patch-aware latency
     surrogate; pair with ``repro.cluster.simtools.cluster_workload`` so
@@ -114,7 +115,9 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
     orphans resume from their last progress snapshot; ``cache_tier`` (a
     ``CacheTierConfig``) turns on the fleet patch-cache tier with
     per-replica L1 warmth dynamics (capacity_bytes=0: warmth dynamics
-    without a fleet L2 — the no-tier baseline)."""
+    without a fleet L2 — the no-tier baseline); ``trace`` (a
+    ``TraceConfig``) turns on the per-request span tracer + fleet event
+    bus (latency decomposition, SLO attribution, exporters)."""
     from repro.cluster import Cluster, ClusterConfig, sim_engine_factory
     from repro.core.latency_model import CacheHitModel
     if cache is True:
@@ -129,4 +132,5 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                                  failures=failures,
                                  checkpoint=checkpoint,
                                  cache_tier=cache_tier,
+                                 trace=trace,
                                  record_timeseries=record_timeseries))

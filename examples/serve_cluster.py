@@ -9,7 +9,9 @@ partial-progress checkpointing (crash orphans resume mid-denoise instead
 of restarting) and correlated zone outages served zone-blind vs. with the
 fault-domain-aware zone_spread policy — and the fleet patch-cache tier:
 per-replica L1 warmth with a shared L2 store and warmth-directed
-``cache_affinity`` dispatch on a repeat-heavy hybrid-resolution workload.
+``cache_affinity`` dispatch on a repeat-heavy hybrid-resolution workload —
+and fleet tracing: per-request latency decomposition with SLO-violation
+attribution and dispatch-predictor calibration on a crashy regime.
 
 Shows the cluster-level levers on top of the single-engine paper
 reproduction: SLO-aware routing (least_slack), resolution-partitioned
@@ -24,8 +26,9 @@ from dataclasses import replace
 
 from repro.cluster import (AutoscalerConfig, CheckpointConfig, Cluster,
                            ClusterConfig, FailureConfig, RepartitionConfig,
-                           cachetier_config, cachetier_mean_mix,
-                           cachetier_workload, sim_engine_factory)
+                           TraceConfig, cachetier_config,
+                           cachetier_mean_mix, cachetier_workload,
+                           sim_engine_factory)
 from repro.cluster.simtools import (CACHE_TIER, CRASH_FAULTS, DEFAULT_RES,
                                     UPDOWN_KNOTS, ZONE_FAULTS,
                                     cluster_workload, phased_workload,
@@ -207,3 +210,25 @@ for tag, pol, cap, mix0 in (
           f"l2-hit={ct['l2_hit_rate']:.3f} "
           f"tier-bytes={ct['tier']['bytes_peak']} "
           f"evictions={ct['tier']['evictions']}")
+
+# ---- fleet tracing: where do the SLO misses come from? -------------------
+print("\nfleet tracing on a crashy checkpointed regime (per-request "
+      "latency decomposition; components sum to end-to-end latency):")
+cl = Cluster(factory, DEFAULT_RES,
+             ClusterConfig(n_replicas=3, policy="least_slack",
+                           failures=FailureConfig(mtbf=10.0, recover=True,
+                                                  seed=SEED + 8),
+                           checkpoint=CheckpointConfig(),
+                           trace=TraceConfig()))
+m = cl.run(cluster_workload(qps=60.0, duration=12.0, seed=SEED + 8))
+att, pred = m.attribution, m.predictor
+print(f"requests={att['requests']} ok={att['completed_ok']} "
+      f"missed={att['missed']} dropped={att['dropped']}")
+for comp, cnt in att["dominant"].items():
+    print(f"  violations dominated by {comp:16s} {cnt}")
+print(f"dispatch predictor: n={pred['n']} mae={pred['mae']:.4f}s "
+      f"bias={pred['bias']:+.4f}s drift={pred['drift']}")
+worst = max(cl.tracer.finished, key=lambda s: s.end - s.arrival)
+print(f"slowest request {worst.rid}: latency="
+      f"{worst.end - worst.arrival:.3f}s requeues={worst.requeues} -> "
+      + " ".join(f"{k}={v:.3f}" for k, v in worst.comp.items() if v > 0))

@@ -1,0 +1,130 @@
+"""Offline trace report: fold a ``--trace-dir`` JSONL export back into
+the SLO-violation attribution table, predictor calibration stats, and an
+event census — without re-running the simulation.
+
+The JSONL file (written by ``benchmarks.cluster_sweep --trace-dir`` or
+``Tracer.write_jsonl``) carries one ``trace_meta`` header line, the
+retained bus events, and one ``span`` record per finished request with
+the full latency decomposition. This script only needs the ``span``
+records, so it works on every retention mode — spans are always
+exported for all requests even when per-request events are sampled or
+violations-only.
+
+Run:  PYTHONPATH=src python scripts/trace_report.py TRACE.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import Counter
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.cluster.trace import COMPONENTS  # noqa: E402
+
+
+def load_records(path):
+    """All JSONL records: (meta_header_or_None, events, spans)."""
+    meta, events, spans = None, [], []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            kind = rec.get("kind")
+            if kind == "trace_meta":
+                meta = rec
+            elif kind == "span":
+                spans.append(rec)
+            else:
+                events.append(rec)
+    return meta, events, spans
+
+
+def load_spans(path):
+    """Just the per-request span records (the attribution inputs)."""
+    return load_records(path)[2]
+
+
+def attribution_from_spans(spans):
+    """Recompute the fleet SLO-violation attribution from span records —
+    must agree with the live ``Tracer.attribution_summary()`` (asserted
+    by the round-trip test). Violations are completed-but-missed plus
+    dropped; each is charged to its dominant latency component."""
+    dominant = Counter()
+    viol_time = {c: 0.0 for c in COMPONENTS}
+    completed_ok = missed = dropped = 0
+    for s in spans:
+        if s["outcome"] == "dropped":
+            dropped += 1
+        elif s["slo_met"]:
+            completed_ok += 1
+            continue
+        else:
+            missed += 1
+        dominant[s["dominant"]] += 1
+        for comp, v in s["components"].items():
+            viol_time[comp] += v
+    return {"requests": len(spans), "completed_ok": completed_ok,
+            "missed": missed, "dropped": dropped,
+            "dominant": dict(dominant),
+            "violation_time_by_component": {
+                c: round(t, 6) for c, t in viol_time.items() if t > 0}}
+
+
+def predictor_stats(spans):
+    """Residual stats over spans that carry a prediction (completed
+    requests dispatched at least once)."""
+    res = [s["residual"] for s in spans
+           if s.get("residual") is not None]
+    if not res:
+        return {"n": 0}
+    res.sort(key=abs)
+    abs_res = [abs(r) for r in res]
+    return {"n": len(res),
+            "mae": round(sum(abs_res) / len(res), 6),
+            "p95_abs_err": round(
+                sorted(abs_res)[max(0, int(0.95 * len(abs_res)) - 1)], 6),
+            "bias": round(sum(res) / len(res), 6)}
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        raise SystemExit(f"usage: {sys.argv[0]} TRACE.jsonl")
+    meta, events, spans = load_records(sys.argv[1])
+    if not spans:
+        raise SystemExit("no span records in trace — was the tracer on?")
+    if meta:
+        print(f"mode={meta['mode']} events_retained={meta['events']} "
+              f"events_emitted={meta['events_emitted']} "
+              f"spans={meta['spans']}")
+    census = Counter(e.get("kind", "?") for e in events)
+    print("events:", " ".join(f"{k}={n}" for k, n in
+                              sorted(census.items(), key=lambda kv: -kv[1])))
+
+    att = attribution_from_spans(spans)
+    print(f"\nrequests={att['requests']} ok={att['completed_ok']} "
+          f"missed={att['missed']} dropped={att['dropped']}")
+    viol = att["missed"] + att["dropped"]
+    if viol:
+        print("SLO-violation attribution (dominant component per miss):")
+        width = max(len(c) for c in att["dominant"])
+        for comp, cnt in sorted(att["dominant"].items(),
+                                key=lambda kv: -kv[1]):
+            t = att["violation_time_by_component"].get(comp, 0.0)
+            print(f"  {comp:{width}s}  {cnt:5d} ({cnt / viol:6.1%})  "
+                  f"{t:9.3f}s total across violations")
+    else:
+        print("no SLO violations — nothing to attribute")
+
+    pred = predictor_stats(spans)
+    if pred["n"]:
+        print(f"\npredictor: n={pred['n']} mae={pred['mae']:.4f}s "
+              f"p95|err|={pred['p95_abs_err']:.4f}s "
+              f"bias={pred['bias']:+.4f}s")
+
+
+if __name__ == "__main__":
+    main()

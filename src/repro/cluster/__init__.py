@@ -20,6 +20,10 @@ Layers:
 - ``metrics``    — fleet + per-replica aggregation (SLO satisfaction,
                    goodput, utilization, patch-cache hit rates, queue and
                    repartition time series);
+- ``trace``      — opt-in sim-clock event bus + per-request span tracer:
+                   latency decomposition with a conservation invariant,
+                   SLO-violation attribution, predictor calibration, and
+                   JSONL / Chrome-trace exporters (zero-cost when off);
 - ``simtools``   — patch-aware (optionally cache-aware) sim engine
                    factories plus steady / phased-drift / ramp workload
                    generators shared by tests, benchmarks and examples.
@@ -50,6 +54,8 @@ from repro.cluster.router import (POLICIES, CacheAffinity,
                                   Router, ZoneSpread,
                                   allocate_replica_counts, make_policy,
                                   mix_drift, partition_resolutions)
+from repro.cluster.trace import (COMPONENTS, NULL_TRACER, NullTracer,
+                                 TraceConfig, Tracer)
 from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
                                     cachetier_config, cachetier_mean_mix,
                                     cachetier_workload, cluster_workload,
@@ -71,4 +77,5 @@ __all__ = [
     "cachetier_config", "cachetier_mean_mix", "cachetier_workload",
     "cluster_workload", "phased_workload", "piecewise_rate_workload",
     "ramp_workload", "sim_engine_factory", "standalone_latencies",
+    "COMPONENTS", "NULL_TRACER", "NullTracer", "TraceConfig", "Tracer",
 ]

@@ -51,6 +51,7 @@ from dataclasses import dataclass
 from typing import Deque, List, Optional, Sequence, Tuple
 
 from repro.cluster.replica import Replica
+from repro.cluster.trace import NULL_TRACER
 from repro.core.serving import TickEvents
 
 
@@ -159,6 +160,9 @@ class AutoscalerConfig:
 
 
 class Autoscaler:
+    #: no-op by default; the cluster driver swaps in a live tracer
+    tracer = NULL_TRACER
+
     def __init__(self, cfg: AutoscalerConfig):
         self.cfg = cfg
         self._last_action = -1e18
@@ -258,6 +262,8 @@ class Autoscaler:
         if n == 0:
             self._last_action = now
             self.actions.append((now, +1))
+            if self.tracer.enabled:
+                self.tracer.scale(now, +1, "bootstrap")
             return +1
 
         pressured = (backlog > cfg.scale_up_backlog
@@ -269,6 +275,8 @@ class Autoscaler:
             self._idle_since = None
             self._last_action = now
             self.actions.append((now, +1))
+            if self.tracer.enabled:
+                self.tracer.scale(now, +1, "reactive")
             return +1
 
         horizon = cfg.forecast_horizon if cfg.forecast_horizon \
@@ -297,6 +305,8 @@ class Autoscaler:
                     self._last_action = now
                     self.actions.append((now, +1))
                     self.predictive_spawns.append(now)
+                    if self.tracer.enabled:
+                        self.tracer.scale(now, +1, "predictive")
                     return +1
 
         # predictive early retirement: the forecast (with the larger
@@ -325,6 +335,8 @@ class Autoscaler:
                     self._last_action = now
                     self.actions.append((now, -1))
                     self.predictive_retirements.append(now)
+                    if self.tracer.enabled:
+                        self.tracer.scale(now, -1, "predictive")
                     return -1
 
         if (idle and n > cfg.min_replicas
@@ -332,6 +344,8 @@ class Autoscaler:
             self._last_action_prev = self._last_action
             self._last_action = now
             self.actions.append((now, -1))
+            if self.tracer.enabled:
+                self.tracer.scale(now, -1, "idle")
             return -1
         return 0
 
@@ -347,3 +361,5 @@ class Autoscaler:
                 and self.predictive_retirements[-1] == now:
             self.predictive_retirements.pop()
         self._last_action = self._last_action_prev
+        if self.tracer.enabled:
+            self.tracer.scale(now, 0, "retirement_cancelled")

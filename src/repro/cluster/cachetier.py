@@ -46,6 +46,8 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.cluster.trace import NULL_TRACER
+
 Resolution = Tuple[int, int]
 #: (resolution, gcd patch size, step band) — the unit of transferable warmth
 CacheKey = Tuple[Resolution, int, int]
@@ -131,6 +133,9 @@ class CacheTier:
     synthetic); semantics mirror what a real latent-patch object store
     would do."""
 
+    #: no-op by default; the cluster driver swaps in a live tracer
+    tracer = NULL_TRACER
+
     def __init__(self, cfg: CacheTierConfig):
         self.cfg = cfg
         # key -> bytes; OrderedDict order == recency (oldest first)
@@ -184,6 +189,8 @@ class CacheTier:
                 keep.append(p)
         self._pending = keep
         self.stats["writes_aborted"] += dropped
+        if self.tracer.enabled:
+            self.tracer.tier_abort(crash_t, owner, dropped)
         return dropped
 
     def settle(self, now: float) -> None:
@@ -196,6 +203,7 @@ class CacheTier:
         if not due:
             return
         self._pending = [p for p in self._pending if p.commit_at > now]
+        tr = self.tracer
         for p in sorted(due, key=lambda q: q.commit_at):
             if p.key in self._entries:
                 # a sibling committed the same key first: refresh recency,
@@ -206,10 +214,17 @@ class CacheTier:
             self._entries[p.key] = p.nbytes
             self.bytes_stored += p.nbytes
             self.stats["writes"] += 1
+            if tr.enabled:
+                # committed at its own commit instant (always finite, even
+                # when the driver's shutdown drain settles at t=inf)
+                tr.tier_commit(p.commit_at, p.key, p.nbytes, p.owner)
         self.bytes_peak = max(self.bytes_peak, self.bytes_stored)
-        self._evict_to_capacity()
+        # evictions happen when the last due commit lands (finite even for
+        # the settle(inf) shutdown drain)
+        self._evict_to_capacity(max(p.commit_at for p in due))
 
-    def _evict_to_capacity(self) -> None:
+    def _evict_to_capacity(self, t: float) -> None:
+        tr = self.tracer
         while self.bytes_stored > self.cfg.capacity_bytes and self._entries:
             if self.cfg.eviction == "lru":
                 key, nbytes = next(iter(self._entries.items()))
@@ -221,6 +236,8 @@ class CacheTier:
             self.bytes_stored -= nbytes
             self.stats["evictions"] += 1
             self.stats["bytes_evicted"] += nbytes
+            if tr.enabled:
+                tr.tier_evict(t, key, nbytes)
 
     # ---------------- reporting ----------------
 

@@ -100,6 +100,7 @@ from repro.cluster.router import (AFFINITY_POLICIES, ZONE_AWARE_POLICIES,
                                   MixTracker, Router,
                                   allocate_replica_counts, make_policy,
                                   mix_drift, partition_resolutions)
+from repro.cluster.trace import NULL_TRACER, TraceConfig, Tracer
 
 Resolution = Tuple[int, int]
 EngineFactory = Callable[[Sequence[Resolution]], "object"]
@@ -171,6 +172,9 @@ class ClusterConfig:
     # PR-2 always-warm cache surrogate behavior; capacity_bytes=0 models
     # L1 warmth with NO fleet tier (the honest no-tier baseline).
     cache_tier: Optional[CacheTierConfig] = None
+    # sim-clock event bus + per-request span tracer (trace.py). None keeps
+    # tracing disabled — a guarded no-op with bit-identical metrics.
+    trace: Optional[TraceConfig] = None
     record_timeseries: bool = True
     max_events: int = 2_000_000        # runaway-loop backstop
 
@@ -184,8 +188,21 @@ class Cluster:
         self.policy = make_policy(cfg.policy)
         self._affinity = self.policy.name in AFFINITY_POLICIES
         self._zone_aware = self.policy.name in ZONE_AWARE_POLICIES
+        # event bus / span tracer (must exist before the first _spawn and
+        # before router/autoscaler/tier wiring below). Denoise-band
+        # sub-decomposition aligns with the tier's step bands when a tier
+        # is configured.
+        if cfg.trace is not None:
+            bands = cfg.cache_tier.step_bands if cfg.cache_tier is not None \
+                else 4
+            self.tracer = Tracer(cfg.trace, step_bands=bands)
+        else:
+            self.tracer = NULL_TRACER
         self.router = Router(self.policy)
+        self.router.tracer = self.tracer
         self.autoscaler = Autoscaler(cfg.autoscaler) if cfg.autoscaler else None
+        if self.autoscaler is not None:
+            self.autoscaler.tracer = self.tracer
         self.replicas: List[Replica] = []
         self._next_rid = 0
         # failure injection (must exist before the first _spawn below)
@@ -203,6 +220,8 @@ class Cluster:
         # so initial replicas get their TierClients)
         self.cache_tier = CacheTier(cfg.cache_tier) \
             if cfg.cache_tier is not None else None
+        if self.cache_tier is not None:
+            self.cache_tier.tracer = self.tracer
         self._n_crashes = 0          # independent crashes (max_failures cap)
         self._recoveries = 0
         self._requeue_delays: List[float] = []
@@ -308,7 +327,7 @@ class Cluster:
         return min(cand, key=lambda z: (in_block[z], total[z], z))
 
     def _spawn(self, resolutions: Sequence[Resolution], now: float,
-               cold: float) -> Replica:
+               cold: float, cause: str = "init") -> Replica:
         eng = self.make_engine(list(resolutions))
         if eng.cfg.clock != "sim":
             raise ValueError("cluster driver requires sim-clock engines")
@@ -319,6 +338,7 @@ class Cluster:
             cold += self._zone_down_until[zone] - now
         rep = Replica(self._next_rid, eng, spawn_at=now, cold_start=cold,
                       zone=zone, checkpoint=self.cfg.checkpoint)
+        rep.tracer = self.tracer
         if self.cache_tier is not None:
             rep.attach_tier(TierClient(self.cache_tier, rep.rid))
         fcfg = self.cfg.failures
@@ -328,6 +348,8 @@ class Cluster:
             rep.crash_at = now + self._failure_rng.exponential(fcfg.mtbf)
         self._next_rid += 1
         self.replicas.append(rep)
+        if self.tracer.enabled:
+            self.tracer.replica_spawn(rep, now, cause)
         return rep
 
     def _dispatchable(self) -> List[Replica]:
@@ -349,7 +371,7 @@ class Cluster:
             block = max(self._blocks, key=pressure)
         else:
             block = list(self.resolutions)
-        self._spawn(block, now=now, cold=cold)
+        self._spawn(block, now=now, cold=cold, cause="scale_up")
 
     def _scale_down(self, now: float) -> bool:
         """Mark the cheapest legal victim retiring; False when no replica
@@ -376,6 +398,11 @@ class Cluster:
         victim = min(cands, key=lambda r: (r.queue_depth, r.backlog(now),
                                            -r.rid))
         victim.retiring = True             # drains, then retires
+        if self.tracer.enabled:
+            asc = self.autoscaler
+            predictive = bool(asc is not None and asc.predictive_retirements
+                              and asc.predictive_retirements[-1] == now)
+            self.tracer.replica_retiring(victim, now, predictive)
         return True
 
     # ---------------- failure injection + recovery ----------------
@@ -413,6 +440,9 @@ class Cluster:
             self.zone_outage_log.append({
                 "t": round(t, 3), "zone": z, "killed": killed,
                 "down_until": round(t + fcfg.zone_downtime, 3)})
+            if self.tracer.enabled:
+                self.tracer.zone_outage(t, z, killed,
+                                        t + fcfg.zone_downtime)
 
     def _maybe_fail(self, now: float) -> bool:
         """Kill every replica whose scheduled crash is due — independent
@@ -427,7 +457,10 @@ class Cluster:
             return False
         self._maybe_zone_outage(now)
         progress = False
+        tr = self.tracer
         all_orphans: List[Request] = []
+        # (crash t, request, steps the crash rolled back, replica, cause)
+        orphan_info: List[tuple] = []
         for rep in list(self.replicas):
             if rep.retired_at is not None or rep.crash_at is None \
                     or rep.crash_at > now:
@@ -465,6 +498,11 @@ class Cluster:
             # (and logged); its block is safe — _scale_down never picks a
             # block's last server
             was_retiring = rep.retiring
+            if tr.enabled:
+                # pre-crash progress, to price the steps the kill rolls
+                # back (checkpoint restore happens inside fail())
+                pre_steps = {r.rid: r.steps_done
+                             for r in rep.engine.wait + rep.engine.active}
             orphans = rep.fail(t)
             if not zone_kill:
                 # zone kills have their own budget (max_zone_outages);
@@ -484,25 +522,39 @@ class Cluster:
                 cap = self.autoscaler.cfg.max_replicas \
                     if self.autoscaler else None
                 if cap is None or len(self._dispatchable()) < cap:
-                    self._spawn(block, now=t, cold=cold)
+                    self._spawn(block, now=t, cold=cold, cause="recovery")
                     self._recoveries += 1
                     replaced = True
+            cause = "zone" if zone_kill else "crash"
             self.failure_log.append({
                 "t": round(t, 3), "rid": rep.rid, "zone": rep.zone,
-                "cause": "zone" if zone_kill else "crash",
+                "cause": cause,
                 "requeued": len(orphans), "steps_resumed": resumed,
                 "replaced": replaced})
+            if tr.enabled:
+                tr.replica_crash(rep, t, cause, len(orphans), resumed,
+                                 replaced)
+                orphan_info.extend(
+                    (t, r, pre_steps[r.rid] - r.steps_done, rep.rid, cause)
+                    for r in orphans)
             progress = True
         if all_orphans:
             # one batched requeue so orphans of *different* same-pass
             # crashes still re-enter in global arrival order
             self.router.requeue(all_orphans)
+            if tr.enabled:
+                # requeue events in the router's order — (crash t, arrival)
+                # — so the sorted bus keeps same-instant orphans of a zone
+                # outage in arrival order
+                for t, r, lost, rrid, cause in sorted(
+                        orphan_info, key=lambda x: (x[0], x[1].arrival)):
+                    tr.requeue(r, t, lost, rrid, cause)
         if progress and self._migration_queue:
             # a crash may have killed the actively migrating replica; the
             # queued movers must not wait on a drain that can no longer
             # finish (nothing else would ever restart them — the replan
             # gates block while the queue is non-empty)
-            self._start_migrations()
+            self._start_migrations(now)
         return progress
 
     # ---------------- drift-/resize-triggered repartitioning ----------------
@@ -603,10 +655,12 @@ class Cluster:
         if drift is not None:
             entry["drift"] = round(drift, 4)
         self.repartition_log.append(entry)
-        self._start_migrations()
+        if self.tracer.enabled:
+            self.tracer.repartition(now, entry)
+        self._start_migrations(now)
         return True
 
-    def _start_migrations(self) -> None:
+    def _start_migrations(self, now: float) -> None:
         active = sum(1 for r in self.replicas if r.migrating_to is not None)
         limit = self.cfg.repartition.max_concurrent if self.cfg.repartition \
             else 1
@@ -615,6 +669,8 @@ class Cluster:
             if rep.retiring or rep.retired_at is not None:
                 continue                   # victim vanished; drop the move
             rep.migrating_to = [tuple(r) for r in block]
+            if self.tracer.enabled:
+                self.tracer.migrate_start(rep, now, rep.migrating_to)
             active += 1
 
     def _finish_migrations(self, now: float) -> bool:
@@ -628,9 +684,11 @@ class Cluster:
                     and not rep.has_work:
                 eng = self.make_engine(list(rep.migrating_to))
                 rep.switch_engine(eng, now, switch_cost=cost)
+                if self.tracer.enabled:
+                    self.tracer.migrate_end(rep, now, cost)
                 progress = True
         if progress:
-            self._start_migrations()
+            self._start_migrations(now)
         return progress
 
     # ---------------- event loop ----------------
@@ -672,6 +730,8 @@ class Cluster:
                 if rep.retiring and rep.retired_at is None \
                         and not rep.has_work:
                     rep.retired_at = now
+                    if self.tracer.enabled:
+                        self.tracer.replica_retired(rep, now)
                     progress = True
 
             if self._finish_migrations(now):
@@ -759,11 +819,18 @@ class Cluster:
                 # nothing can ever serve what's left
                 for r in self.router.queue:
                     r.state = "dropped"
+                    if self.tracer.enabled:
+                        self.tracer.drop(r, now, "frontend")
                 mts.router_dropped += len(self.router.queue)
                 self.router.queue.clear()
                 break
 
         mts.span = now
+        mts.sim_events = events
+        if self.tracer.enabled:
+            mts.attribution = self.tracer.attribution_summary()
+            mts.predictor = self.tracer.predictor_summary()
+            mts.trace_events = self.tracer.n_events
         mts.repartitions = list(self.repartition_log)
         mts.failures = list(self.failure_log)
         mts.replicas_failed = sum(1 for r in self.replicas

@@ -74,6 +74,14 @@ class ClusterMetrics:
     # entries, evictions, aborted in-flight writes). Empty dict when no
     # tier is configured.
     cache_tier: dict = field(default_factory=dict)
+    # driver event-loop iterations this run took — the sim-throughput
+    # denominator for the nightly perf trajectory (always recorded)
+    sim_events: int = 0
+    # tracing (ClusterConfig.trace): SLO-violation attribution histogram,
+    # predictor calibration, and retained bus events. Empty when disabled.
+    attribution: dict = field(default_factory=dict)
+    predictor: dict = field(default_factory=dict)
+    trace_events: int = 0
 
     # -- fleet aggregates --------------------------------------------------
     @property
@@ -138,12 +146,17 @@ class ClusterMetrics:
                 "mean": float(counts.mean()), "final": float(counts[-1])}
 
     # -- JSON --------------------------------------------------------------
-    def summary(self) -> dict:
-        """JSON-ready fleet summary (time series reduced to stats so sweep
-        artifacts stay small)."""
+    def summary(self, full_timeseries: bool = False) -> dict:
+        """JSON-ready fleet summary. By default the queue/replica time
+        series is reduced to stats so sweep artifacts stay small —
+        ``queue_ts_points_dropped`` says how many samples that reduction
+        discarded. ``full_timeseries=True`` additionally emits the raw
+        ``queue_timeseries`` rows ``[t, frontend_depth,
+        queued_in_replicas, dispatchable_replicas]`` (what ``--trace-dir``
+        persists)."""
         depths = np.asarray([p[1] + p[2] for p in self.queue_ts], np.float64) \
             if self.queue_ts else np.zeros(1)
-        return {
+        out = {
             "completed": self.completed,
             "dropped": self.dropped,
             "router_dropped": self.router_dropped,
@@ -181,6 +194,7 @@ class ClusterMetrics:
                 "steps_resumed": self.steps_resumed,
             },
             "cache_tier": self.cache_tier,
+            "sim_events": self.sim_events,
             "per_replica": {
                 str(rid): {
                     "patch": rep.patch,
@@ -195,3 +209,18 @@ class ClusterMetrics:
                     "zone": rep.zone,
                 } for rid, rep in sorted(self.per_replica.items())},
         }
+        if self.attribution:
+            out["attribution"] = self.attribution
+        if self.predictor:
+            out["predictor"] = self.predictor
+        if self.trace_events:
+            out["trace_events"] = self.trace_events
+        if full_timeseries:
+            out["queue_timeseries"] = [
+                [round(t, 6), f, q, n] for t, f, q, n in self.queue_ts]
+            out["queue_ts_points_dropped"] = 0
+        else:
+            # the mean/max reduction above discarded this many samples;
+            # summary(full_timeseries=True) recovers them
+            out["queue_ts_points_dropped"] = len(self.queue_ts)
+        return out

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.requests import Request
 from repro.core.serving import Metrics, PatchedServeEngine, TickEvents
+from repro.cluster.trace import NULL_TRACER
 
 
 @dataclass
@@ -81,6 +82,11 @@ class CheckpointConfig:
 
 
 class Replica:
+    #: shared no-op tracer; the driver swaps in a live one when tracing is
+    #: enabled (class attribute so directly-constructed replicas need no
+    #: wiring and the disabled path costs one attribute load + branch)
+    tracer = NULL_TRACER
+
     def __init__(self, rid: int, engine: PatchedServeEngine,
                  spawn_at: float = 0.0, cold_start: float = 0.0,
                  zone: int = 0,
@@ -179,6 +185,17 @@ class Replica:
         return self.engine.scheduler.admission_slack(
             req, self.engine.active, now, queue_delay=self.backlog(now))
 
+    def predicted_finish(self, req: Request, now: float) -> float:
+        """Absolute finish time this replica's own latency surrogate
+        predicts for ``req`` if dispatched here at ``now``: drain the
+        backlog ahead of it, then its remaining steps at the predicted
+        batch step latency. The tracer records this at dispatch and scores
+        the residual at completion (``summary()["predictor"]``) — the same
+        quantities ``admission_slack`` prices, exposed as a time."""
+        eng = self.engine
+        step = eng._predict_step_latency(eng.active + [req])
+        return now + self.backlog(now) + step * req.remaining_steps
+
     # -- execution ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         if not self.supports(req.resolution):
@@ -201,19 +218,46 @@ class Replica:
                 self._ckpt.pop(r.rid, None)
             for r in ev.dropped:
                 self._ckpt.pop(r.rid, None)
+        tr = self.tracer
         if ev.stepped:
             dt = ev.dt
+            ckpt_cost = tier_cost = 0.0
+            ckpt_wrote = 0
             if self.ckpt_cfg is not None:
-                dt += self._write_checkpoints()
+                wrote0 = self.checkpoint_writes
+                ckpt_cost = self._write_checkpoints()
+                ckpt_wrote = self.checkpoint_writes - wrote0
+                dt += ckpt_cost
+            stepped = self.engine.active + ev.completed \
+                if (self.tier is not None or tr.enabled) else None
             if self.tier is not None:
                 # tier protocol for the batch that just stepped: L2 fetches
                 # for cold keys and publishes for freshly self-warmed ones,
                 # both charged to this step's busy horizon (in-flight
                 # publishes commit only at the end of it)
-                stepped = self.engine.active + ev.completed
-                dt += self.tier.on_step(stepped, now, now + dt)
+                tier_cost = self.tier.on_step(stepped, now, now + dt)
+                dt += tier_cost
             self.busy_time += dt
             self.next_free = now + dt
+            if tr.enabled:
+                for r in ev.dropped:
+                    tr.drop(r, now, "replica", rep=self)
+                for r in ev.admitted:
+                    tr.admit(r, self, now)
+                tr.step(self, now, ev.dt, ckpt_cost, tier_cost, stepped)
+                if ckpt_wrote:
+                    tr.checkpoint_write(self, now, ckpt_wrote, ckpt_cost)
+                for r in ev.completed:
+                    # finish is the engine step end (ckpt/tier cost extends
+                    # the replica's busy horizon, not the request's finish)
+                    tr.complete(r, self, ev.end)
+        elif tr.enabled:
+            for r in ev.dropped:
+                tr.drop(r, now, "replica", rep=self)
+            for r in ev.admitted:
+                tr.admit(r, self, now)
+            for r in ev.completed:
+                tr.complete(r, self, ev.end)
         return ev
 
     def _write_checkpoints(self) -> float:

@@ -51,6 +51,7 @@ import numpy as np
 from repro.core.csp import gcd_patch_size
 from repro.core.requests import Request
 from repro.cluster.replica import Replica
+from repro.cluster.trace import NULL_TRACER
 
 Resolution = Tuple[int, int]
 
@@ -351,6 +352,9 @@ class Router:
     """FIFO frontend queue feeding the dispatch policy. Requests that no
     ready replica covers stay queued and are retried every round."""
 
+    #: no-op by default; the cluster driver swaps in a live tracer
+    tracer = NULL_TRACER
+
     def __init__(self, policy: DispatchPolicy):
         self.policy = policy
         self.queue: List[Request] = []
@@ -363,6 +367,8 @@ class Router:
 
     def enqueue(self, req: Request) -> None:
         self.queue.append(req)
+        if self.tracer.enabled:
+            self.tracer.submit(req)
 
     def requeue(self, reqs: Sequence[Request]) -> None:
         """Put requests orphaned by a replica crash back at the *head* of
@@ -376,11 +382,16 @@ class Router:
     def dispatch(self, replicas: Sequence[Replica],
                  now: float) -> List[Tuple[Request, Replica]]:
         sent, kept = [], []
+        tr = self.tracer
         for req in self.queue:
             rep = self.policy.select(req, replicas, now)
             if rep is None:
                 kept.append(req)
                 continue
+            if tr.enabled:
+                # prediction sampled before submit so it prices the batch
+                # the dispatch decision saw (admission_slack's view)
+                tr.dispatch(req, rep, now, rep.predicted_finish(req, now))
             rep.submit(req)
             self.dispatched += 1
             sent.append((req, rep))
