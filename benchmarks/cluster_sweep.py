@@ -68,6 +68,18 @@ fleet L2 (``capacity_bytes=0``); the headline run adds the shared tier and
 ``cache_affinity`` (warmth-directed) dispatch and must beat the best
 no-tier policy on fleet SLO satisfaction — asserted, with tier-only /
 dispatch-only / small-capacity ablations reported alongside.
+
+``--warmboot`` adds the warm-boot elastic fleet axis (shared scenario
+``simtools.FLASH_CROWD``): a small fleet absorbing a flash-crowd spike by
+elastic scaling, where every cold spawn pays a long reuse-predictor
+warmup unless the spawn path pre-fetches the new replica's block's
+committed L2 entries during boot (size-dependent transfer time,
+overlapped with cold start) and the autoscaler prices the shorter
+effective cold start. Three arms per seed — no-tier, tier-without-
+prefetch (ablation), tier + spawn prefetch — and the tier-warmed fleet
+must beat the cold fleet on fleet SLO satisfaction on every seed
+(>=3 seeds, asserted) with structural guards on the prefetch, publish
+and warm-boot-pricing paths.
 """
 from __future__ import annotations
 
@@ -81,11 +93,13 @@ from pathlib import Path
 from benchmarks.common import make_cluster
 from repro.cluster import (AutoscalerConfig, CheckpointConfig,
                            FailureConfig, RepartitionConfig, TraceConfig)
-from repro.cluster.simtools import (CACHE_TIER, CRASH_FAULTS, UPDOWN_KNOTS,
-                                    ZONE_FAULTS, cachetier_config,
-                                    cachetier_mean_mix, cachetier_workload,
-                                    cluster_workload, phased_workload,
-                                    piecewise_rate_workload, ramp_workload)
+from repro.cluster.simtools import (CACHE_TIER, CRASH_FAULTS, FLASH_CROWD,
+                                    UPDOWN_KNOTS, ZONE_FAULTS,
+                                    cachetier_config, cachetier_mean_mix,
+                                    cachetier_workload, cluster_workload,
+                                    flash_crowd_workload, phased_workload,
+                                    piecewise_rate_workload, ramp_workload,
+                                    warmboot_cluster_kwargs)
 
 POLICIES = ("round_robin", "join_shortest_queue", "least_slack",
             "resolution_affinity")
@@ -342,6 +356,65 @@ def cachetier_trace(seed):
     return out
 
 
+#: flash-crowd arms, coldest first; ``warmboot_trace`` runs every arm on
+#: every seed so the win is per-seed, not an average hiding a loss
+WARMBOOT_ARMS = ("cold", "noprefetch", "warm")
+
+
+def warmboot_trace(seed, n_seeds=3):
+    """Warm-boot elastic fleets on the shared flash-crowd spike
+    (``simtools.FLASH_CROWD``): a 2-replica fleet sized for the 14 qps
+    baseline absorbs a 200 qps / 15 s spike by elastically spawning up to
+    6 replicas. Three arms, identical workload and L1 warmth dynamics:
+    ``cold`` (no fleet L2 — every spawned replica ramps its reuse
+    predictor from scratch, ``warmup_steps=160``), ``noprefetch`` (shared
+    tier, spawns still boot with an empty L1 — the ablation), ``warm``
+    (tier + ``prefetch_on_spawn``: the spawn path pulls the committed
+    entries for the new replica's block during the cold-start window,
+    size-dependent transfer time overlapped with boot, and the autoscaler
+    prices the shorter effective cold start so predictive spawns trigger
+    earlier). The headline — warm beats cold on fleet SLO satisfaction on
+    *every* seed — is asserted in ``main`` together with structural
+    guards (warm prefetched, the ablations did not, the tier was actually
+    written to)."""
+    sc = FLASH_CROWD
+    out = {"scenario": {k: ([list(p) for p in v] if k == "knots"
+                            else (list(v) if isinstance(v, tuple) else v))
+                        for k, v in sc.items()},
+           "seeds": []}
+    for s in range(seed, seed + n_seeds):
+        row = {"seed": s}
+        for arm in WARMBOOT_ARMS:
+            cl = make_cluster(**warmboot_cluster_kwargs(arm),
+                              record_timeseries=False)
+            m = cl.run(flash_crowd_workload(seed=s))
+            summ = m.summary()
+            ct = summ["cache_tier"]
+            tier = ct.get("tier", {})
+            row[arm] = {"slo": summ["slo_satisfaction"],
+                        "p95": summ["latency_p95"],
+                        "goodput": summ["goodput"],
+                        "l1_hit_rate": ct.get("l1_hit_rate", 0.0),
+                        "prefetches": tier.get("prefetches", 0),
+                        "l2_writes": tier.get("writes", 0),
+                        "scale_actions": len(cl.autoscaler.actions),
+                        "warm_boot_priced": cl.autoscaler.warm_boot}
+            print(f"warmboot seed={s} {arm:10s} "
+                  f"slo={row[arm]['slo']:.3f} "
+                  f"p95={row[arm]['p95']:.3f}s "
+                  f"l1={row[arm]['l1_hit_rate']:.3f} "
+                  f"prefetch={row[arm]['prefetches']} "
+                  f"writes={row[arm]['l2_writes']}")
+        out["seeds"].append(row)
+    for arm in WARMBOOT_ARMS:
+        out[f"mean_slo_{arm}"] = round(
+            sum(r[arm]["slo"] for r in out["seeds"]) / n_seeds, 4)
+    print(f"warmboot mean slo: warm={out['mean_slo_warm']:.4f} "
+          f"noprefetch={out['mean_slo_noprefetch']:.4f} "
+          f"cold={out['mean_slo_cold']:.4f}")
+    return out
+
+
 def traced_run(trace_dir, mode, seed):
     """One traced regime for ``--trace-dir``: the crash+checkpoint
     scenario under ``least_slack`` dispatch, chosen because it walks the
@@ -429,6 +502,11 @@ def main() -> None:
                          "tier + cache_affinity dispatch vs every no-tier "
                          "PR-4 policy on the repeat-heavy hybrid-"
                          "resolution scenario (win asserted)")
+    ap.add_argument("--warmboot", action="store_true",
+                    help="add the warm-boot elastic fleet comparison: "
+                         "spawn prefetch from the cache tier vs tier-"
+                         "without-prefetch vs no-tier on the flash-crowd "
+                         "spike, >=3 seeds (per-seed win asserted)")
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="run one traced regime (crash+checkpoint) and "
                          "write trace.jsonl / trace_chrome.json / "
@@ -479,6 +557,10 @@ def main() -> None:
     if args.cachetier:
         cachetier = cachetier_trace(seed=args.seed + 6)
 
+    warmboot = None
+    if args.warmboot:
+        warmboot = warmboot_trace(seed=args.seed)
+
     traced = None
     if args.trace_dir:
         traced = traced_run(args.trace_dir, args.trace_mode,
@@ -515,6 +597,8 @@ def main() -> None:
         out["faults"] = faults
     if cachetier is not None:
         out["cachetier"] = cachetier
+    if warmboot is not None:
+        out["warmboot"] = warmboot
     if traced is not None:
         out["traced"] = traced
     Path(args.out).write_text(json.dumps(out, indent=1))
@@ -615,6 +699,31 @@ def main() -> None:
                 f"lost to the best no-tier policy ({best_tag}, "
                 f"{best['slo_satisfaction']:.3f}) on the repeat-heavy "
                 "hybrid-resolution scenario — cache-tier regression?")
+    if warmboot is not None:
+        for row in warmboot["seeds"]:
+            w, np_, c = row["warm"], row["noprefetch"], row["cold"]
+            if w["prefetches"] <= 0:
+                raise SystemExit(
+                    f"warm arm (seed {row['seed']}) never prefetched on "
+                    "spawn — spawn-prefetch path regression?")
+            if np_["prefetches"] > 0 or c["prefetches"] > 0:
+                raise SystemExit(
+                    f"an ablation arm prefetched (seed {row['seed']}) — "
+                    "prefetch_on_spawn gating regression?")
+            if w["l2_writes"] <= 0:
+                raise SystemExit(
+                    f"warm arm (seed {row['seed']}) committed nothing to "
+                    "the tier — publish-path regression?")
+            if not w["warm_boot_priced"]:
+                raise SystemExit(
+                    "warm arm's autoscaler was not flagged warm-bootable "
+                    "— effective-cold-start pricing regression?")
+            if w["slo"] <= c["slo"]:
+                raise SystemExit(
+                    f"tier-warmed elastic fleet ({w['slo']:.3f}) lost to "
+                    f"the cold elastic fleet ({c['slo']:.3f}) on the "
+                    f"flash-crowd spike (seed {row['seed']}) — warm-boot "
+                    "regression?")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,8 @@ of restarting) and correlated zone outages served zone-blind vs. with the
 fault-domain-aware zone_spread policy — and the fleet patch-cache tier:
 per-replica L1 warmth with a shared L2 store and warmth-directed
 ``cache_affinity`` dispatch on a repeat-heavy hybrid-resolution workload —
+the warm-boot elastic fleet: spawns pre-fetch the tier during cold start
+(autoscaler-priced shorter effective cold start) on a flash-crowd spike —
 and fleet tracing: per-request latency decomposition with SLO-violation
 attribution and dispatch-predictor calibration on a crashy regime.
 
@@ -30,9 +32,10 @@ from repro.cluster import (AutoscalerConfig, CheckpointConfig, Cluster,
                            cachetier_mean_mix, cachetier_workload,
                            sim_engine_factory)
 from repro.cluster.simtools import (CACHE_TIER, CRASH_FAULTS, DEFAULT_RES,
-                                    UPDOWN_KNOTS, ZONE_FAULTS,
-                                    cluster_workload, phased_workload,
-                                    piecewise_rate_workload, ramp_workload)
+                                    FLASH_CROWD, UPDOWN_KNOTS, ZONE_FAULTS,
+                                    cluster_workload, flash_crowd_workload,
+                                    phased_workload, piecewise_rate_workload,
+                                    ramp_workload, warmboot_cluster_kwargs)
 from repro.core.latency_model import CacheHitModel
 
 QPS, DURATION, SEED = 48.0, 30.0, 1
@@ -210,6 +213,31 @@ for tag, pol, cap, mix0 in (
           f"l2-hit={ct['l2_hit_rate']:.3f} "
           f"tier-bytes={ct['tier']['bytes_peak']} "
           f"evictions={ct['tier']['evictions']}")
+
+# ---- warm-boot elastic fleet: spawns pre-fetch the tier ------------------
+sc = FLASH_CROWD
+print(f"\nwarm-boot elastic fleet on the flash-crowd spike "
+      f"({sc['knots'][1][1]:.0f} -> {sc['knots'][2][1]:.0f} qps at "
+      f"t={sc['knots'][1][0]:.0f}s, cold_start={sc['cold_start']}s): cold "
+      "spawns vs tier-warmed spawns (prefetch overlapped with boot, "
+      "autoscaler prices the shorter effective cold start):")
+for tag, arm in (("cold elastic (no tier)", "cold"),
+                 ("tier, no spawn prefetch", "noprefetch"),
+                 ("warm-boot elastic", "warm")):
+    kw = warmboot_cluster_kwargs(arm)
+    wb_factory = sim_engine_factory(
+        DEFAULT_RES, steps=kw.pop("steps"),
+        cache=CacheHitModel() if kw.pop("cache") else None)
+    cl = Cluster(wb_factory, DEFAULT_RES, ClusterConfig(**kw))
+    m = cl.run(flash_crowd_workload(seed=SEED))
+    ct = m.summary()["cache_tier"]
+    tier = ct.get("tier", {})
+    print(f"{tag:26s} slo={m.slo_satisfaction:.3f} "
+          f"p95={m.latency_quantile(0.95):.3f}s "
+          f"spawns={len([a for _, a in cl.autoscaler.actions if a > 0])} "
+          f"prefetches={tier.get('prefetches', 0)} "
+          f"l2-writes={tier.get('writes', 0)} "
+          f"warm-priced={cl.autoscaler.warm_boot}")
 
 # ---- fleet tracing: where do the SLO misses come from? -------------------
 print("\nfleet tracing on a crashy checkpointed regime (per-request "

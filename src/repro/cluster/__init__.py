@@ -59,10 +59,12 @@ from repro.cluster.trace import (COMPONENTS, NULL_TRACER, NullTracer,
 from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
                                     cachetier_config, cachetier_mean_mix,
                                     cachetier_workload, cluster_workload,
-                                    phased_workload,
+                                    flash_crowd_workload, phased_workload,
                                     piecewise_rate_workload, ramp_workload,
                                     sim_engine_factory,
-                                    standalone_latencies)
+                                    standalone_latencies,
+                                    warmboot_autoscaler,
+                                    warmboot_tier_config)
 
 __all__ = [
     "ArrivalForecaster", "Autoscaler", "AutoscalerConfig",
@@ -75,7 +77,8 @@ __all__ = [
     "make_policy", "MixTracker", "mix_drift", "partition_resolutions",
     "allocate_replica_counts", "DEFAULT_RES", "PatchAwareLatency",
     "cachetier_config", "cachetier_mean_mix", "cachetier_workload",
-    "cluster_workload", "phased_workload", "piecewise_rate_workload",
-    "ramp_workload", "sim_engine_factory", "standalone_latencies",
+    "cluster_workload", "flash_crowd_workload", "phased_workload",
+    "piecewise_rate_workload", "ramp_workload", "sim_engine_factory",
+    "standalone_latencies", "warmboot_autoscaler", "warmboot_tier_config",
     "COMPONENTS", "NULL_TRACER", "NullTracer", "TraceConfig", "Tracer",
 ]

@@ -26,6 +26,15 @@ stall. The forecaster self-monitors: its one-bin-ahead relative error is
 tracked, and while that error is high (or too few bins have been seen)
 the predictive path stands down and only the reactive signals act.
 
+Warm-boot pricing (``warm_boot_factor``, elastic x cache tier): when the
+driver marks the fleet warm-bootable — every spawn bulk-prefetches its
+block's committed cache-tier entries during boot (``cachetier.py``) — the
+predictive path prices spawns with ``cold_start * warm_boot_factor``
+instead of the full cold start. A warm-booted replica needs no post-boot
+cache-warmup ramp, so pre-spawning is cheaper to be wrong about and the
+controller triggers earlier in a ramp (shorter horizon, tighter
+mid-boot-capacity cutoff).
+
 Predictive **scale-down** (``predictive_down``, elastic controller): the
 same reliability-gated forecast also retires capacity *ahead* of a
 ramp-down. When the projected rate — priced with a retirement headroom
@@ -143,6 +152,18 @@ class AutoscalerConfig:
     # per-replica sustainable throughput (req/s); None = learn online from
     # the completion rate while the fleet is under pressure
     service_rate: Optional[float] = None
+    # -- warm-boot pricing (elastic x cache tier) --------------------------
+    # when the driver flags the fleet warm-bootable (tier enabled with
+    # prefetch_on_spawn: a spawn's L1 is bulk-warmed from committed tier
+    # entries during boot), a new replica is productive the moment it is
+    # ready — no post-boot cache-warmup ramp. The predictive path then
+    # prices spawns with cold_start * warm_boot_factor: the forecast
+    # horizon shrinks (triggering on nearer, more certain demand) and the
+    # capacity cutoff tightens, so pre-spawns fire earlier in a ramp and
+    # keep firing while mid-boot replicas would otherwise look like
+    # horizon capacity they cannot cash in cold. 1.0 (default) keeps the
+    # original pricing bit-identical.
+    warm_boot_factor: float = 1.0
     # -- predictive scale-down (elastic controller; needs predictive) ------
     predictive_down: bool = False
     # retire only while forecast * down_headroom still fits in n-1 replicas;
@@ -157,6 +178,8 @@ class AutoscalerConfig:
         # silently inert — the forecaster never even sees arrivals)
         if self.predictive_down:
             self.predictive = True
+        if not 0.0 < self.warm_boot_factor <= 1.0:
+            raise ValueError("warm_boot_factor must be in (0, 1]")
 
 
 class Autoscaler:
@@ -165,6 +188,9 @@ class Autoscaler:
 
     def __init__(self, cfg: AutoscalerConfig):
         self.cfg = cfg
+        #: set True by the cluster driver when spawns boot warm (cache tier
+        #: with prefetch_on_spawn) — gates warm_boot_factor pricing
+        self.warm_boot = False
         self._last_action = -1e18
         self._idle_since: Optional[float] = None
         self._outcomes: Deque[Tuple[float, bool, bool]] = deque()
@@ -234,6 +260,17 @@ class Autoscaler:
         rate = done / min(span, self.cfg.window) / ready
         self._mu = rate if self._mu is None else 0.7 * self._mu + 0.3 * rate
 
+    def effective_cold_start(self) -> float:
+        """The cold start the predictive path prices spawns with: the
+        configured ``cold_start``, discounted by ``warm_boot_factor`` when
+        the driver flagged the fleet warm-bootable. A tier-prefetched
+        replica serves at full cache speed from its first dispatch, so its
+        time-to-*useful* is genuinely shorter than a stone-cold boot's even
+        though the boot itself takes as long."""
+        if self.warm_boot:
+            return self.cfg.cold_start * self.cfg.warm_boot_factor
+        return self.cfg.cold_start
+
     # -- decision ----------------------------------------------------------
     def decide(self, now: float, frontend_depth: int,
                replicas: Sequence[Replica]) -> int:
@@ -279,8 +316,9 @@ class Autoscaler:
                 self.tracer.scale(now, +1, "reactive")
             return +1
 
+        ecs = self.effective_cold_start()
         horizon = cfg.forecast_horizon if cfg.forecast_horizon \
-            is not None else cfg.cold_start + cfg.forecast_bin
+            is not None else ecs + cfg.forecast_bin
 
         # predictive pre-spawn: provision for the rate one cold-start out,
         # counting replicas already warming; reliability-gated so a bad
@@ -294,10 +332,14 @@ class Autoscaler:
                               cfg.max_replicas)
                 # a replica that cannot be up by the horizon — e.g. a crash
                 # replacement stalled behind a zone outage — is not
-                # capacity at the horizon; plan with the ones that will be
-                # (a normally-warming spawn is always counted: the cutoff
-                # never undercuts one cold start)
-                cutoff = now + max(horizon, cfg.cold_start)
+                # capacity at the horizon; plan with the ones that will be.
+                # Cold fleets never let the cutoff undercut one cold start
+                # (a normally-warming spawn is always counted); warm-boot
+                # fleets price it at the shorter effective cold start, so a
+                # still-booting replica only counts once it is nearly up —
+                # spawns trigger earlier and refill faster, and the extras
+                # arrive warm instead of adding cold-ramp drag
+                cutoff = now + max(horizon, ecs)
                 n_h = sum(1 for r in pool if r.ready_at <= cutoff)
                 if desired > n_h:
                     self._idle_since = None

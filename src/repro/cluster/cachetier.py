@@ -27,10 +27,25 @@ the missing tier:
   the engine's local (L1) patch-cache working set. A key self-warms after
   ``warmup_steps`` executed steps (the threshold predictor needs a few
   steps of stable cached inputs before reuse fires), or warms *instantly*
-  by fetching a committed tier entry at ``fetch_cost`` on the sim clock.
+  by fetching a committed tier entry on the sim clock — transfer time is
+  ``fetch_cost`` plus ``fetch_cost_per_byte`` times the entry's bytes, so
+  High-resolution entries honestly cost more to pull than Low ones.
   Crossing the self-warm threshold publishes the entry back to the tier at
-  ``write_cost``. Crashes and engine migrations clear L1 (the working set
+  ``write_cost``; a *warm* key whose tier entry was later evicted is
+  re-published the next time it is touched (the fleet store refills from
+  live working sets instead of losing the key until some replica re-warms
+  from scratch). Crashes and engine migrations clear L1 (the working set
   lived in the dead/replaced process); the tier itself survives.
+
+- Warm boot (``prefetch_on_spawn``) — the cluster driver calls
+  ``TierClient.prefetch_block`` when it spawns a replica: the newest
+  committed tier entries matching the replica's block (same patch size,
+  its resolutions) are bulk-fetched into L1 *during* the cold start, so
+  the replica's first dispatch already sees a warm cache. The transfer
+  overlaps boot: the replica is ready at ``max(cold_start, transfer)``
+  after spawn, and prefetch traffic is accounted separately
+  (``prefetches`` / ``prefetch_time``) so it never inflates the
+  steady-state hit rate.
 
 The latency effect is priced by the two-level hit model
 (``CacheHitModel.two_level_hit_rate`` via ``simtools.PatchAwareLatency``):
@@ -77,7 +92,13 @@ class CacheTierConfig:
     first unless they are hot)."""
     capacity_bytes: int = 1 << 18       # 256 KiB ~= the full default ladder
     fetch_cost: float = 5e-3            # sim s per remote (res, band) fetch
+    #: size-dependent fetch component: sim s per entry byte transferred.
+    #: 0.0 (default) keeps the flat fetch_cost pricing bit-identical.
+    fetch_cost_per_byte: float = 0.0
     write_cost: float = 2e-3            # sim s per tier publish
+    #: warm boot: the driver prefetches a spawning replica's block entries
+    #: from the tier during cold start (overlapped with boot)
+    prefetch_on_spawn: bool = False
     eviction: str = "lru"               # lru | size_aware
     # -- warmth model (per-replica L1) ----------------------------------
     step_bands: int = 4                 # denoise trajectory bands per key
@@ -99,6 +120,8 @@ class CacheTierConfig:
                 f"{self.eviction!r}")
         if self.fetch_cost < 0 or self.write_cost < 0:
             raise ValueError("fetch_cost and write_cost must be >= 0")
+        if self.fetch_cost_per_byte < 0:
+            raise ValueError("fetch_cost_per_byte must be >= 0")
         if self.size_aware_window < 1:
             raise ValueError("size_aware_window must be >= 1")
         if self.step_bands < 1:
@@ -115,6 +138,15 @@ class CacheTierConfig:
         inputs + cached outputs, each a full latent's worth of patches."""
         return latent_bytes(resolution, self.channels, self.itemsize,
                             stores=2)
+
+    def fetch_time(self, resolution: Resolution) -> float:
+        """Sim-clock time to pull one committed tier entry for
+        ``resolution``: flat ``fetch_cost`` (request overhead) plus the
+        size-dependent transfer ``fetch_cost_per_byte x entry_bytes``. With
+        the default ``fetch_cost_per_byte = 0`` this is exactly the legacy
+        constant pricing."""
+        return self.fetch_cost + self.fetch_cost_per_byte \
+            * self.entry_bytes(resolution)
 
 
 @dataclass
@@ -145,7 +177,7 @@ class CacheTier:
         self.bytes_peak = 0
         self.stats = {"hits": 0, "misses": 0, "writes": 0, "refreshes": 0,
                       "writes_aborted": 0, "evictions": 0,
-                      "bytes_evicted": 0}
+                      "bytes_evicted": 0, "prefetches": 0}
 
     # ---------------- reads ----------------
 
@@ -154,14 +186,35 @@ class CacheTier:
         used by latency *predictions*, which must not perturb the store."""
         return key in self._entries
 
+    def pending(self, key: CacheKey) -> bool:
+        """Side-effect-free probe for an in-flight (staged, uncommitted)
+        write of ``key`` — lets a warm replica avoid staging a duplicate
+        re-publish every step while its first one is still committing."""
+        return any(p.key == key for p in self._pending)
+
+    def committed_keys(self) -> List[CacheKey]:
+        """Committed keys, newest-recency first — the order a warm-boot
+        prefetch should fill a bounded L1 in."""
+        return list(reversed(self._entries))
+
     def lookup(self, key: CacheKey, now: float) -> bool:
         """Fetch probe: hit touches recency and counts toward hit stats.
-        The caller charges ``fetch_cost`` on its own clock on a hit."""
+        The caller charges ``fetch_time`` on its own clock on a hit."""
         if key in self._entries:
             self._entries.move_to_end(key)
             self.stats["hits"] += 1
             return True
         self.stats["misses"] += 1
+        return False
+
+    def prefetch(self, key: CacheKey) -> bool:
+        """Warm-boot fetch probe: touches recency like ``lookup`` (the
+        entry really is read) but is counted separately — boot-time bulk
+        warming must not inflate the steady-state hit rate."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.stats["prefetches"] += 1
+            return True
         return False
 
     # ---------------- two-phase writes ----------------
@@ -290,7 +343,9 @@ class TierClient:
         self._l1: "OrderedDict[CacheKey, _L1State]" = OrderedDict()
         self.stats = {"l1_hits": 0, "l2_fetches": 0, "cold_misses": 0,
                       "publishes": 0, "fetch_time": 0.0, "write_time": 0.0,
-                      "l1_evictions": 0, "steps_priced": 0}
+                      "l1_evictions": 0, "steps_priced": 0,
+                      "prefetches": 0, "prefetch_time": 0.0,
+                      "republishes": 0}
 
     # ---------------- key geometry ----------------
 
@@ -348,8 +403,9 @@ class TierClient:
                 step_end: float) -> float:
         """Advance L1 warmth for the batch that just executed and run the
         tier protocol for its cold keys: fetch committed entries
-        (``fetch_cost`` each), publish keys that just self-warmed
-        (``write_cost`` each). Returns the sim-clock cost to add to the
+        (``fetch_time`` each — flat cost plus size-dependent transfer),
+        publish keys that just self-warmed and re-publish warm keys the L2
+        lost (``write_cost`` each). Returns the sim-clock cost to add to the
         step's busy horizon. ``step_end`` is the busy end *before* tier
         costs; staged publishes commit at ``step_end`` plus everything
         this call charged — i.e. exactly the writer's final busy-window
@@ -373,12 +429,23 @@ class TierClient:
                 self.stats["l1_hits"] += 1
                 st.steps += 1
                 self._l1.move_to_end(key)
+                if self.tier.cfg.capacity_bytes > 0 \
+                        and not self.tier.contains(key) \
+                        and not self.tier.pending(key):
+                    # the L2 evicted (or a crash aborted) this entry while
+                    # we stayed warm: re-publish so the fleet store refills
+                    # from a live working set instead of losing the key
+                    publishes.append(key)
+                    self.stats["republishes"] += 1
+                    self.stats["write_time"] += cfg.write_cost
+                    extra += cfg.write_cost
                 continue
             if self.tier.lookup(key, now):
                 # committed fleet entry: one fetch makes the key warm now
+                cost = cfg.fetch_time(key[0])
                 self.stats["l2_fetches"] += 1
-                self.stats["fetch_time"] += cfg.fetch_cost
-                extra += cfg.fetch_cost
+                self.stats["fetch_time"] += cost
+                extra += cost
                 self._l1[key] = _L1State(steps=cfg.warmup_steps)
                 self._l1.move_to_end(key)
             else:
@@ -408,6 +475,45 @@ class TierClient:
                                   owner=self.rid)
         return extra
 
+    # ---------------- warm boot (spawn prefetch) ----------------
+
+    def prefetch_block(self, resolutions: Sequence[Resolution],
+                       now: float) -> Tuple[int, int, float]:
+        """Bulk-warm this (spawning) replica's L1 from the tier: fetch the
+        newest committed entries matching the replica's block — same patch
+        size, one of its ``resolutions`` — newest-recency first, up to
+        ``l1_entries``. Returns ``(n_keys, n_bytes, transfer_time)``; the
+        caller (the cluster driver's spawn path) overlaps ``transfer_time``
+        with the cold start and extends ``ready_at`` only if the transfer
+        outlasts the boot. Counted as ``prefetches``/``prefetch_time``,
+        never as steady-state hits — warm-boot traffic must not flatter
+        the tier's hit rate."""
+        cfg = self.cfg
+        if self.tier.cfg.capacity_bytes <= 0:
+            return 0, 0, 0.0            # no tier, nothing to boot from
+        want = {tuple(r) for r in resolutions}
+        picked: List[CacheKey] = []
+        for key in self.tier.committed_keys():
+            res, patch, _band = key
+            if patch == self.patch and tuple(res) in want:
+                picked.append(key)
+                if len(picked) >= cfg.l1_entries:
+                    break
+        nbytes, transfer = 0, 0.0
+        for key in picked:
+            self.tier.prefetch(key)
+            cost = cfg.fetch_time(key[0])
+            self._l1[key] = _L1State(steps=cfg.warmup_steps)
+            self._l1.move_to_end(key)
+            nbytes += cfg.entry_bytes(key[0])
+            transfer += cost
+            self.stats["prefetches"] += 1
+            self.stats["prefetch_time"] += cost
+        while len(self._l1) > cfg.l1_entries:
+            self._l1.popitem(last=False)
+            self.stats["l1_evictions"] += 1
+        return len(picked), nbytes, transfer
+
     # ---------------- lifecycle ----------------
 
     def on_crash(self, now: float) -> None:
@@ -436,7 +542,8 @@ def aggregate_client_stats(clients: Sequence[Optional[TierClient]]) -> dict:
     tot: Dict[str, float] = {"l1_hits": 0, "l2_fetches": 0, "cold_misses": 0,
                              "publishes": 0, "fetch_time": 0.0,
                              "write_time": 0.0, "l1_evictions": 0,
-                             "steps_priced": 0}
+                             "steps_priced": 0, "prefetches": 0,
+                             "prefetch_time": 0.0, "republishes": 0}
     for c in clients:
         if c is None:
             continue

@@ -78,6 +78,17 @@ aborted, never half-committed). The ``cache_affinity`` dispatch policy
 routes each request to the replica warmest for its resolution.
 ``summary()["cache_tier"]`` reports L1/L2 hit rates, bytes, evictions.
 
+Warm-boot elastic spawns (``CacheTierConfig.prefetch_on_spawn``): every
+spawn — initial, autoscaler scale-up, crash replacement — bulk-prefetches
+its block's committed tier entries into the new replica's L1 during the
+cold start (``TierClient.prefetch_block``). The transfer is size-dependent
+(``fetch_time`` per entry) and overlaps boot: ``ready_at`` extends only if
+the transfer outlasts the cold start. The driver also flags the autoscaler
+``warm_boot`` so predictive pre-spawns are priced with the shorter
+effective cold start (``AutoscalerConfig.warm_boot_factor``) — the
+elastic controller and the cache tier composing is exactly the regime the
+``--warmboot`` benchmark section asserts.
+
 Engines must be sim-clock (``EngineConfig.clock == "sim"``); for large
 sweeps build them with ``sim_synthetic=True`` (see
 ``repro.cluster.simtools``).
@@ -222,6 +233,13 @@ class Cluster:
             if cfg.cache_tier is not None else None
         if self.cache_tier is not None:
             self.cache_tier.tracer = self.tracer
+            if cfg.cache_tier.prefetch_on_spawn \
+                    and cfg.cache_tier.capacity_bytes > 0 \
+                    and self.autoscaler is not None:
+                # spawns boot warm (tier prefetch below): let the predictive
+                # autoscaler price them with the shorter effective cold
+                # start (AutoscalerConfig.warm_boot_factor)
+                self.autoscaler.warm_boot = True
         self._n_crashes = 0          # independent crashes (max_failures cap)
         self._recoveries = 0
         self._requeue_delays: List[float] = []
@@ -340,7 +358,22 @@ class Cluster:
                       zone=zone, checkpoint=self.cfg.checkpoint)
         rep.tracer = self.tracer
         if self.cache_tier is not None:
-            rep.attach_tier(TierClient(self.cache_tier, rep.rid))
+            client = TierClient(self.cache_tier, rep.rid)
+            rep.attach_tier(client)
+            if self.cfg.cache_tier.prefetch_on_spawn:
+                # warm boot: bulk-fetch the block's committed tier entries
+                # into the new replica's L1 *during* the cold start. The
+                # transfer overlaps boot — ready_at only moves if the
+                # transfer outlasts the boot itself (tiny entries on a
+                # multi-second cold start never delay readiness).
+                n, nbytes, transfer = client.prefetch_block(
+                    rep.resolutions, now)
+                if n:
+                    rep.ready_at = max(rep.ready_at, now + transfer)
+                    rep.next_free = max(rep.next_free, rep.ready_at)
+                    if self.tracer.enabled:
+                        self.tracer.tier_prefetch(now, rep, n, nbytes,
+                                                  transfer, rep.ready_at)
         fcfg = self.cfg.failures
         if self._failure_rng is not None and fcfg.mtbf is not None:
             # exponential lifetime drawn at spawn == memoryless per-replica
@@ -827,6 +860,17 @@ class Cluster:
 
         mts.span = now
         mts.sim_events = events
+        if self.cache_tier is not None:
+            # graceful shutdown: every staged write belongs to a live
+            # replica whose busy window completes (crashed owners were
+            # aborted at kill time), so drain them all before reporting.
+            # This settle runs BEFORE the tracer counters are snapshotted —
+            # it emits tier_commit events, and summary()["trace_events"]
+            # must agree with what the JSONL exporter writes.
+            self.cache_tier.settle(float("inf"))
+            mts.cache_tier = {
+                **aggregate_client_stats([r.tier for r in self.replicas]),
+                "tier": self.cache_tier.summary()}
         if self.tracer.enabled:
             mts.attribution = self.tracer.attribution_summary()
             mts.predictor = self.tracer.predictor_summary()
@@ -844,14 +888,6 @@ class Cluster:
         mts.checkpoint_time = sum(r.checkpoint_time for r in self.replicas)
         mts.zone_outages = list(self.zone_outage_log)
         mts.zone_availability = self._zone_availability(start, now)
-        if self.cache_tier is not None:
-            # graceful shutdown: every staged write belongs to a live
-            # replica whose busy window completes (crashed owners were
-            # aborted at kill time), so drain them all before reporting
-            self.cache_tier.settle(float("inf"))
-            mts.cache_tier = {
-                **aggregate_client_stats([r.tier for r in self.replicas]),
-                "tier": self.cache_tier.summary()}
         for rep in self.replicas:
             mts.per_replica[rep.rid] = ReplicaReport(
                 metrics=rep.merged_metrics, patch=rep.patch,

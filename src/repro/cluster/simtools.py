@@ -105,6 +105,99 @@ def cachetier_config(capacity_bytes: Optional[int] = None):
                            l1_entries=4, warmup_steps=8, **kw)
 
 
+#: warm-boot (elastic x cache-tier) reference scenario, shared by the
+#: ``--warmboot`` sweep, the example and the tests. A flash crowd: steady
+#: repeat-heavy traffic two replicas serve comfortably (long enough to warm
+#: their L1s and publish into the fleet L2), then the arrival rate steps up
+#: ~14x for 15 s and back down. The elastic fleet spawns through the spike
+#: either way; the regime isolates what the new replicas are worth the
+#: moment they come up. Tuning notes (how each constant earns its place):
+#: the spike rate sits just under the *warm* fleet's max-replica capacity,
+#: so the backlog drains at a rate set by how fast the new replicas serve
+#: — a cold spawn ramps its patch cache from scratch for seconds of loaded
+#: serving while a tier-warmed one is at full cache speed from its first
+#: dispatch; and ``slo_scale`` is loose enough that queued spike requests
+#: are still servable when capacity arrives (with tight SLOs every queued
+#: request is equally dead in all arms and warmth cannot move attainment).
+#: Duplicate-time knots express the step edges
+#: (``piecewise_rate_workload`` keeps their order).
+FLASH_CROWD = {"knots": [(0.0, 14.0), (10.0, 14.0), (10.0, 200.0),
+                         (25.0, 200.0), (25.0, 14.0), (35.0, 14.0)],
+               "mix": (0.85, 0.10, 0.05),
+               "steps": 12, "slo_scale": 12.0,
+               "n_replicas": 2, "max_replicas": 6, "cold_start": 2.0,
+               "cooldown": 1.0, "service_rate": 35.0}
+
+
+def flash_crowd_workload(seed: int = 0) -> List[Request]:
+    """The shared flash-crowd spike workload (regenerate per run — Request
+    objects mutate while served)."""
+    sc = FLASH_CROWD
+    return piecewise_rate_workload(list(sc["knots"]), mix=sc["mix"],
+                                   steps=sc["steps"],
+                                   slo_scale=sc["slo_scale"], seed=seed)
+
+
+def warmboot_tier_config(prefetch: bool = True,
+                         capacity_bytes: Optional[int] = None):
+    """The shared ``CacheTierConfig`` for the flash-crowd scenario.
+    ``l1_entries=12`` holds the whole ladder's step bands, so the regime
+    isolates cold-start warmup (not working-set thrash — that is the
+    ``--cachetier`` regime's axis); ``warmup_steps=160`` prices a
+    production-sized reuse predictor that needs seconds of loaded serving
+    before from-scratch reuse fires, which is exactly the ramp a tier
+    fetch (or boot prefetch) short-circuits. Size-dependent fetch pricing
+    is on (``fetch_cost_per_byte``): a High entry costs ~4x a Low one to
+    pull, and a full boot prefetch still transfers in tens of
+    milliseconds — far inside the 2 s cold start it overlaps.
+    ``prefetch=False`` is the ablation arm (tier on, spawns boot cold);
+    ``capacity_bytes=0`` the no-tier baseline."""
+    from repro.cluster.cachetier import CacheTierConfig
+    kw = {} if capacity_bytes is None else \
+        {"capacity_bytes": capacity_bytes}
+    return CacheTierConfig(fetch_cost=1e-3, fetch_cost_per_byte=5e-7,
+                           write_cost=1e-3, l1_entries=12, warmup_steps=160,
+                           prefetch_on_spawn=prefetch, **kw)
+
+
+def warmboot_autoscaler(warm_boot_factor: float = 0.5):
+    """The shared elastic controller for the flash-crowd scenario:
+    reactive + predictive spawning over ``FLASH_CROWD``'s fleet envelope,
+    with a short cooldown so the fleet can actually chase an 8 s spike.
+    ``warm_boot_factor`` only takes effect when the driver flags the fleet
+    warm-bootable (tier with ``prefetch_on_spawn``) — identical configs
+    can be passed to every benchmark arm."""
+    from repro.cluster.autoscaler import AutoscalerConfig
+    sc = FLASH_CROWD
+    return AutoscalerConfig(min_replicas=sc["n_replicas"],
+                            max_replicas=sc["max_replicas"],
+                            cold_start=sc["cold_start"],
+                            cooldown=sc["cooldown"],
+                            predictive=True,
+                            service_rate=sc["service_rate"],
+                            warm_boot_factor=warm_boot_factor)
+
+
+def warmboot_cluster_kwargs(arm: str) -> dict:
+    """``benchmarks.common.make_cluster`` kwargs for one flash-crowd arm:
+    ``"warm"`` (tier + spawn prefetch), ``"noprefetch"`` (tier, spawns
+    boot cold — the ablation), ``"cold"`` (no fleet L2 at all; identical
+    L1 warmth dynamics). Shared so the benchmark, the example and the
+    regression tests run literally the same fleets."""
+    if arm == "cold":
+        tier = warmboot_tier_config(prefetch=False, capacity_bytes=0)
+    elif arm == "noprefetch":
+        tier = warmboot_tier_config(prefetch=False)
+    elif arm == "warm":
+        tier = warmboot_tier_config(prefetch=True)
+    else:
+        raise ValueError(f"unknown warmboot arm {arm!r}")
+    sc = FLASH_CROWD
+    return dict(n_replicas=sc["n_replicas"], policy="cache_affinity",
+                autoscaler=warmboot_autoscaler(), steps=sc["steps"],
+                cache=True, cache_tier=tier)
+
+
 class PatchAwareLatency:
     """Adapter giving one engine's composition features to the patch-aware
     surrogate (plugs into ``PatchedServeEngine.latency_model``).

@@ -507,6 +507,18 @@ class Tracer:
             self._emit({"t": t, "kind": "tier_abort", "owner": owner,
                         "writes_dropped": dropped})
 
+    def tier_prefetch(self, t: float, rep, keys: int, nbytes: int,
+                      transfer: float, ready_at: float) -> None:
+        """Warm-boot spawn prefetch: a fleet-lifecycle event (one per
+        spawn, like replica_spawn — retained in every mode). The transfer
+        overlaps the cold start, so no request span is open on the new
+        replica yet and no ``tier_wait`` is charged: boot delay surfaces as
+        ``frontend_wait``/``replica_wait`` exactly like the cold start it
+        extends."""
+        self._emit({"t": t, "kind": "tier_prefetch", "replica": rep.rid,
+                    "zone": rep.zone, "keys": keys, "nbytes": nbytes,
+                    "transfer": transfer, "ready_at": ready_at})
+
     # ---------------- aggregates ----------------
 
     def conservation_errors(self) -> List[Tuple[int, float]]:

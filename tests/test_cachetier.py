@@ -3,7 +3,9 @@ two-phase commit, crash-abort exactly-once), per-replica L1 warmth
 dynamics, fetch/write cost charging on the sim clock, the two-level hit
 model, warmth-directed (``cache_affinity``) dispatch, the latent-size-aware
 checkpoint cost and blind-fleet zone rebalancing satellites, the checked-in
-``CacheHitModel`` calibration, and the benchmark's asserted headline win.
+``CacheHitModel`` calibration, the warm-boot spawn path (size-dependent
+fetch pricing, boot-time prefetch, evict-then-re-publish, autoscaler
+warm-boot pricing), and the benchmark's asserted headline win.
 
 Property-based coverage needs ``hypothesis`` (optional, see
 requirements-dev.txt); without it those cases report as skipped and the
@@ -14,8 +16,9 @@ from pathlib import Path
 
 import pytest
 
-from repro.cluster import (CacheTier, CacheTierConfig, CheckpointConfig,
-                           Cluster, ClusterConfig, FailureConfig, Replica,
+from repro.cluster import (Autoscaler, AutoscalerConfig, CacheTier,
+                           CacheTierConfig, CheckpointConfig, Cluster,
+                           ClusterConfig, FailureConfig, Replica,
                            TierClient, cachetier_config, cachetier_mean_mix,
                            cachetier_workload, latent_bytes, make_policy,
                            sim_engine_factory)
@@ -532,6 +535,317 @@ def test_cache_hit_model_defaults_match_calibration():
     assert refit.b_conc >= 0.0 and refit.b_step >= 0.0
     # and the stored fit matches what fit_cache_hit_model computes today
     assert refit.b0 == pytest.approx(data["fit"]["b0"], abs=1e-6)
+
+
+# ---------------- warm boot: size-dependent fetch pricing ----------------
+
+def test_fetch_time_size_dependent():
+    cfg = CacheTierConfig(fetch_cost=1e-3, fetch_cost_per_byte=1e-7)
+    assert cfg.fetch_time(LOW) \
+        == pytest.approx(1e-3 + 1e-7 * cfg.entry_bytes(LOW))
+    # a High entry holds 4x the bytes -> strictly pricier to pull
+    assert cfg.fetch_time(HIGH) - cfg.fetch_time(LOW) == pytest.approx(
+        1e-7 * (cfg.entry_bytes(HIGH) - cfg.entry_bytes(LOW)))
+    # default slope is zero: bit-identical to the legacy constant pricing
+    assert CacheTierConfig().fetch_time(HIGH) == CacheTierConfig().fetch_cost
+    with pytest.raises(ValueError, match="fetch_cost_per_byte"):
+        CacheTierConfig(fetch_cost_per_byte=-1e-9)
+
+
+def test_on_step_charges_size_dependent_fetch():
+    """The fetch branch prices each pulled entry by its bytes: one step
+    fetching a Low and a High entry pays two different transfer times,
+    both on the replica clock."""
+    cfg = CacheTierConfig(fetch_cost=0.1, fetch_cost_per_byte=1e-6,
+                          step_bands=1, warmup_steps=2)
+    tier = CacheTier(cfg)
+    for res in (LOW, HIGH):
+        tier.begin_write(_key(res), cfg.entry_bytes(res), commit_at=0.0,
+                         owner=9)
+    tier.settle(0.0)
+    c = TierClient(tier, rid=0, cfg=cfg, patch=8)
+    low, high = _req(0, LOW, steps=8), _req(1, HIGH, steps=8)
+    low.steps_done = high.steps_done = 1
+    extra = c.on_step([low, high], now=1.0, step_end=2.0)
+    assert extra == pytest.approx(cfg.fetch_time(LOW) + cfg.fetch_time(HIGH))
+    assert c.stats["fetch_time"] == pytest.approx(extra)
+    assert c.stats["l2_fetches"] == 2
+
+
+# ---------------- warm boot: evict-then-re-publish ----------------
+
+def test_warm_replica_republishes_evicted_entry():
+    """When the tier evicts an entry a replica is still warm for, the next
+    warm hit re-stages the publish (closing the evict-then-never-refill
+    hole) — exactly once while present or pending."""
+    cfg = CacheTierConfig(step_bands=1, warmup_steps=2)
+    eb = cfg.entry_bytes(LOW)
+    tier = _tier(capacity=eb)              # exactly one Low-sized slot
+    c = TierClient(tier, rid=0, cfg=cfg, patch=8)
+    req = _req(0, LOW, steps=40)
+    for step, now in ((1, 0.0), (2, 1.0)):  # self-warm -> publish staged
+        req.steps_done = step
+        c.on_step([req], now, now + 0.1)
+    tier.settle(2.0)
+    assert tier.contains(_key(LOW)) and c.stats["publishes"] == 1
+    # while the entry is present, warm hits stage nothing
+    req.steps_done = 3
+    assert c.on_step([req], 2.5, 2.6) == 0.0
+    assert c.stats["republishes"] == 0
+    # a sibling's publish (same bytes, different patch) evicts our entry
+    tier.begin_write((tuple(LOW), 16, 0), eb, commit_at=3.0, owner=7)
+    tier.settle(3.0)
+    assert not tier.contains(_key(LOW))
+    # next warm hit notices and re-publishes, paying one write cost
+    req.steps_done = 4
+    extra = c.on_step([req], 3.5, 3.6)
+    assert extra == pytest.approx(cfg.write_cost)
+    assert c.stats["republishes"] == 1 and c.stats["l1_hits"] >= 2
+    # while that re-publish is still in flight, no duplicate staging
+    req.steps_done = 5
+    assert c.on_step([req], 3.7, 3.8) == 0.0
+    assert c.stats["republishes"] == 1
+    tier.settle(10.0)
+    assert tier.contains(_key(LOW))
+    assert tier.stats["writes"] == 3       # ours + sibling + re-publish
+
+
+# ---------------- warm boot: spawn-time block prefetch ----------------
+
+def test_prefetch_block_filters_patch_and_resolutions():
+    cfg = CacheTierConfig(l1_entries=2, step_bands=1, warmup_steps=4,
+                          fetch_cost=0.01, fetch_cost_per_byte=1e-7)
+    tier = CacheTier(cfg)
+    for key in (_key(LOW), _key(MED), _key(HIGH), (tuple(LOW), 16, 0)):
+        tier.begin_write(key, cfg.entry_bytes(key[0]), commit_at=0.0,
+                         owner=9)
+    tier.settle(0.0)
+    c = TierClient(tier, rid=0, cfg=cfg, patch=8)
+    n, nbytes, transfer = c.prefetch_block([LOW, MED], now=1.0)
+    # only this block's resolutions at this replica's patch: HIGH (wrong
+    # resolution) and the patch-16 LOW entry are skipped
+    assert n == 2
+    assert nbytes == cfg.entry_bytes(LOW) + cfg.entry_bytes(MED)
+    assert transfer == pytest.approx(cfg.fetch_time(LOW)
+                                     + cfg.fetch_time(MED))
+    assert c.stats["prefetches"] == 2
+    assert c.stats["prefetch_time"] == pytest.approx(transfer)
+    # prefetched keys are instantly fully warm (no self-warm ramp)
+    assert c.warmth(LOW) == 1.0 and c.warmth(MED) == 1.0
+    # boot-time warming is counted apart from the steady-state hit stats
+    assert tier.stats["prefetches"] == 2
+    assert tier.stats["hits"] == 0 and tier.stats["misses"] == 0
+
+
+def test_prefetch_block_bounded_by_l1_capacity_newest_first():
+    cfg = CacheTierConfig(l1_entries=1, step_bands=1, warmup_steps=4)
+    tier = CacheTier(cfg)
+    for key in (_key(LOW), _key(MED)):     # MED committed last -> newest
+        tier.begin_write(key, cfg.entry_bytes(key[0]), commit_at=0.0,
+                         owner=9)
+    tier.settle(0.0)
+    c = TierClient(tier, rid=0, cfg=cfg, patch=8)
+    n, _, _ = c.prefetch_block([LOW, MED], now=1.0)
+    assert n == 1
+    assert c.warmth(MED) == 1.0 and c.warmth(LOW) == 0.0
+    assert len(c._l1) <= cfg.l1_entries
+
+
+def test_prefetch_block_noop_without_tier():
+    tier = _tier(capacity=0)
+    c = TierClient(tier, rid=0, patch=8)
+    assert c.prefetch_block([LOW, MED, HIGH], now=0.0) == (0, 0, 0.0)
+    assert c.stats["prefetches"] == 0 and len(c._l1) == 0
+
+
+def _warmboot_cluster(prefetch=True, fetch_cost_per_byte=1e-7):
+    factory = sim_engine_factory(DEFAULT_RES, cache=CacheHitModel())
+    cfg = CacheTierConfig(prefetch_on_spawn=prefetch, fetch_cost=1e-3,
+                          fetch_cost_per_byte=fetch_cost_per_byte)
+    return Cluster(factory, DEFAULT_RES,
+                   ClusterConfig(n_replicas=1, policy="cache_affinity",
+                                 cache_tier=cfg,
+                                 autoscaler=AutoscalerConfig(
+                                     min_replicas=1, max_replicas=4,
+                                     warm_boot_factor=0.5),
+                                 record_timeseries=False)), cfg
+
+
+def _seed_tier(cl, cfg):
+    patch = cl.replicas[0].patch
+    for res in DEFAULT_RES:
+        cl.cache_tier.begin_write((tuple(res), patch, 0),
+                                  cfg.entry_bytes(res), commit_at=0.0,
+                                  owner=99)
+    cl.cache_tier.settle(0.0)
+
+
+def test_spawn_prefetch_overlaps_boot():
+    """A scale-up spawn on a warm-bootable fleet pulls the tier's committed
+    entries for its block during cold start: the new replica boots warm and
+    the (small) transfer hides entirely inside the boot window."""
+    cl, cfg = _warmboot_cluster()
+    assert cl.autoscaler.warm_boot      # driver flagged the fleet
+    _seed_tier(cl, cfg)
+    rep = cl._spawn(DEFAULT_RES, now=10.0, cold=2.0)
+    assert rep.tier.stats["prefetches"] == len(DEFAULT_RES)
+    assert rep.cache_warmth(LOW) > 0.0
+    assert rep.ready_at == pytest.approx(12.0)   # transfer << cold start
+
+
+def test_spawn_prefetch_transfer_can_outlast_boot():
+    """Size-dependent pricing is honest: a transfer slower than the boot
+    extends ready_at — the replica is not magically warm for free."""
+    cl, cfg = _warmboot_cluster(fetch_cost_per_byte=1e-3)
+    _seed_tier(cl, cfg)
+    transfer = sum(cfg.fetch_time(res) for res in DEFAULT_RES)
+    assert transfer > 2.0
+    rep = cl._spawn(DEFAULT_RES, now=10.0, cold=2.0)
+    assert rep.ready_at == pytest.approx(10.0 + transfer)
+    assert rep.next_free >= rep.ready_at
+
+
+def test_spawn_without_prefetch_boots_cold():
+    cl, cfg = _warmboot_cluster(prefetch=False)
+    assert not cl.autoscaler.warm_boot
+    _seed_tier(cl, cfg)
+    rep = cl._spawn(DEFAULT_RES, now=10.0, cold=2.0)
+    assert rep.tier.stats["prefetches"] == 0
+    assert rep.cache_warmth(LOW) == 0.0
+    assert rep.ready_at == pytest.approx(12.0)
+
+
+# ---------------- warm boot: autoscaler pricing ----------------
+
+def test_autoscaler_effective_cold_start():
+    cfg = AutoscalerConfig(cold_start=4.0, warm_boot_factor=0.25)
+    a = Autoscaler(cfg)
+    assert a.effective_cold_start() == 4.0    # not flagged: full price
+    a.warm_boot = True
+    assert a.effective_cold_start() == pytest.approx(1.0)
+    # default factor 1.0 keeps warm-boot pricing bit-identical
+    b = Autoscaler(AutoscalerConfig(cold_start=4.0))
+    b.warm_boot = True
+    assert b.effective_cold_start() == 4.0
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="warm_boot_factor"):
+            AutoscalerConfig(warm_boot_factor=bad)
+
+
+def test_warm_boot_pricing_triggers_earlier_predictive_spawn():
+    """Same fleet, same forecast: the cold-priced controller counts a
+    still-booting replica as horizon capacity and stands pat; the
+    warm-priced one (shorter effective cold start -> tighter cutoff) sees
+    the gap and pre-spawns now."""
+    factory = sim_engine_factory(DEFAULT_RES)
+    now = 100.0
+
+    def pool():
+        ready = Replica(0, factory(DEFAULT_RES))
+        booting = Replica(1, factory(DEFAULT_RES))
+        booting.ready_at = now + 3.0   # inside the cold cutoff (now+5),
+        return [ready, booting]        # outside the warm one (now+2)
+
+    def scaler(warm):
+        a = Autoscaler(AutoscalerConfig(
+            min_replicas=1, max_replicas=4, cold_start=4.0, cooldown=0.0,
+            predictive=True, service_rate=10.0, headroom=1.0,
+            warm_boot_factor=0.25))
+        a.warm_boot = warm
+        a.forecaster.level, a.forecaster.trend = 12.0, 1.0
+        a.forecaster.bins_seen, a.forecaster.rel_err = 10, 0.0
+        a.forecaster._bin_start = now
+        return a
+
+    cold = scaler(False)
+    assert cold.decide(now, 0, pool()) == 0
+    assert cold.predictive_spawns == []
+    warm = scaler(True)
+    assert warm.decide(now, 0, pool()) == +1
+    assert warm.predictive_spawns == [now]
+
+
+# ---------------- warm boot: lifecycle interleaving invariants -----------
+
+def _drive_lifecycle(ops):
+    """Apply (slot, op, res_index) ops against one shared tier; assert the
+    byte-accounting + two-phase-commit invariants at every settle point.
+    Ops: spawn (fresh client, boot prefetch), step (serve one denoise
+    step — fetch/publish/re-publish as warmth dictates), crash (abort
+    in-flight writes), retire (graceful: staged writes still commit),
+    prefetch (re-warm one resolution)."""
+    cfg = CacheTierConfig(capacity_bytes=3 * 8192, step_bands=1,
+                          warmup_steps=1, write_cost=0.01, fetch_cost=0.01,
+                          fetch_cost_per_byte=1e-8, l1_entries=3,
+                          prefetch_on_spawn=True)
+    tier = CacheTier(cfg)
+    clients, reqs, rid = {}, {}, [0]
+    now = 0.0
+    for slot, op, ri in ops:
+        now += 1.0
+        res = DEFAULT_RES[ri]
+        if op == "spawn" or (slot not in clients
+                             and op in ("step", "prefetch")):
+            rid[0] += 1
+            clients[slot] = TierClient(tier, rid=rid[0], cfg=cfg, patch=8)
+            clients[slot].prefetch_block(DEFAULT_RES, now)
+        c = clients.get(slot)
+        if c is None:
+            continue
+        if op == "step":
+            r = reqs.get((slot, ri))
+            if r is None or r.steps_done >= r.total_steps:
+                r = _req(rid[0] * 100 + ri, res, steps=64)
+                reqs[(slot, ri)] = r
+            r.steps_done += 1
+            c.on_step([r], now, now + 0.05)
+        elif op == "crash":
+            c.on_crash(now)
+            del clients[slot]
+        elif op == "retire":
+            del clients[slot]
+        elif op == "prefetch":
+            c.prefetch_block([res], now)
+        tier.settle(now)
+        assert tier.bytes_stored == sum(tier._entries.values())
+        assert tier.bytes_stored <= cfg.capacity_bytes
+        assert tier.bytes_stored <= tier.bytes_peak
+    tier.settle(now + 100.0)
+    assert tier.bytes_stored == sum(tier._entries.values())
+    assert tier.bytes_stored <= cfg.capacity_bytes
+    assert tier.n_pending == 0
+
+
+@pytest.mark.skipif(st is None, reason="hypothesis not installed")
+def test_lifecycle_interleaving_property():
+    pytest.importorskip("hypothesis")
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(
+        st.integers(0, 3),
+        st.sampled_from(["spawn", "step", "crash", "retire", "prefetch"]),
+        st.integers(0, 2)), min_size=1, max_size=60))
+    def run(ops):
+        _drive_lifecycle(ops)
+
+    run()
+
+
+def test_lifecycle_interleaving_smoke():
+    """Deterministic fallback for the property above: walks every op kind,
+    including crash-mid-publish, retire-with-staged-writes, re-publish
+    after a capacity eviction, and prefetch into a bounded L1."""
+    script = []
+    for slot in range(3):
+        script.append((slot, "spawn", slot % 3))
+    for i in range(24):                    # steps publish + evict + refetch
+        script.append((i % 3, "step", (i // 3) % 3))
+    script += [(0, "crash", 0), (1, "retire", 1), (0, "spawn", 2),
+               (0, "prefetch", 0), (2, "step", 2), (2, "step", 1),
+               (1, "step", 0), (2, "crash", 1), (2, "spawn", 0)]
+    for i in range(12):
+        script.append((i % 2, "step", i % 3))
+    _drive_lifecycle(script)
 
 
 # ---------------- fleet metrics + headline ----------------

@@ -373,6 +373,51 @@ def test_retention_modes():
     assert len(viol_rids) <= live["missed"] + live["dropped"]
 
 
+# ---------------- warm-boot elastic fleet ----------------
+
+def test_conservation_warmboot_elastic_fleet():
+    """The 1e-9 decomposition conservation extends to the elastic
+    warm-boot fleet: spawn prefetch overlaps boot (no span is open on a
+    booting replica, so the transfer charges no component and leaks no
+    tier_wait), while the size-dependent fetches replicas pay mid-request
+    still land in tier_wait — and the prefetches surface as fleet
+    ``tier_prefetch`` events."""
+    from benchmarks.common import make_cluster
+    from repro.cluster.simtools import (flash_crowd_workload,
+                                        warmboot_cluster_kwargs)
+    cl = make_cluster(**warmboot_cluster_kwargs("warm"),
+                      trace=TraceConfig(), record_timeseries=False)
+    m = cl.run(flash_crowd_workload(seed=1))
+    n = _assert_conserved(cl)
+    assert n == m.completed + m.dropped
+    assert _component_totals(cl)["tier_wait"] > 0
+    pf = [e for e in cl.tracer.events() if e["kind"] == "tier_prefetch"]
+    assert pf, "no tier_prefetch events despite prefetch_on_spawn"
+    for e in pf:
+        assert e["keys"] > 0 and e["nbytes"] > 0
+        assert e["transfer"] > 0 and e["ready_at"] >= e["t"]
+    assert m.cache_tier["tier"]["prefetches"] > 0
+
+
+@pytest.mark.parametrize("mode", ("all", "violations", "sample"))
+def test_summary_and_jsonl_agree_on_event_counts(mode, tmp_path):
+    """``summary()`` and the JSONL exporter must report the same retained
+    event count in every retention mode: the shutdown-drain tier commits
+    are emitted before the summary snapshots the tracer counters, so
+    nothing lands on disk that the summary never counted."""
+    cl, m = _tier_cluster(trace=TraceConfig(mode=mode, seed=7))
+    # the snapshot took every event the tracer will ever hold
+    assert m.trace_events == cl.tracer.n_events
+    path = tmp_path / "trace.jsonl"
+    cl.tracer.write_jsonl(path)
+    tr = _load_trace_report()
+    meta, events, spans = tr.load_records(path)
+    assert m.summary()["trace_events"] == meta["events"] == len(events)
+    assert m.summary(full_timeseries=True)["trace_events"] == meta["events"]
+    if mode == "all":      # bulk events are retained only in "all"
+        assert any(e["kind"] == "tier_commit" for e in events)
+
+
 # ---------------- perf trajectory ----------------
 
 def test_perf_summary_record():
