@@ -43,6 +43,20 @@ fault-domain-aware ``zone_spread`` policy (zone-balanced placement that
 avoids down zones, least-loaded-zone dispatch) — zone_spread must win
 fleet SLO satisfaction. Both wins are asserted in CI.
 
+``--batching`` adds the router-side gang-batching axis (shared scenario
+``simtools.BATCH_MIX``): a steady hybrid-resolution Poisson stream near
+the fleet's knee, three arms at equal fleet size — ``per_request``
+(plain join_shortest_queue dispatch), ``nowait`` (the ablation: the
+batch former gangs only what is simultaneously queued, ``max_wait=0``,
+never deliberately waits) and ``gang`` (the full former: patch-
+compatible work held up to its eligibility window and dispatched as
+gangs under the marginal-patch step-cost budget). Gang-batched dispatch
+must beat per-request on fleet SLO satisfaction — asserted, together
+with structural guards: gangs actually formed, no held request's slack
+ever dipped below its max-wait (tight-SLO work is never delayed), no
+hold overshot its deadline, and the gang arm's traced latency
+decomposition (now including ``batch_wait``) still conserves to 1e-9.
+
 ``--trace-dir DIR`` runs one traced regime (the crash+checkpoint
 scenario — it exercises requeue, checkpoint and drop paths) with the
 per-request span tracer on and persists three artifacts into DIR:
@@ -93,8 +107,9 @@ from pathlib import Path
 from benchmarks.common import make_cluster
 from repro.cluster import (AutoscalerConfig, CheckpointConfig,
                            FailureConfig, RepartitionConfig, TraceConfig)
-from repro.cluster.simtools import (CACHE_TIER, CRASH_FAULTS, FLASH_CROWD,
-                                    UPDOWN_KNOTS, ZONE_FAULTS,
+from repro.cluster.simtools import (BATCH_MIX, CACHE_TIER, CRASH_FAULTS,
+                                    FLASH_CROWD, UPDOWN_KNOTS, ZONE_FAULTS,
+                                    batch_cluster_kwargs, batch_mix_workload,
                                     cachetier_config, cachetier_mean_mix,
                                     cachetier_workload, cluster_workload,
                                     flash_crowd_workload, phased_workload,
@@ -415,6 +430,56 @@ def warmboot_trace(seed, n_seeds=3):
     return out
 
 
+#: gang-batching arms, baseline first; ``batching_trace`` runs all three
+#: on the same workload so the ablation isolates the deliberate wait
+BATCHING_ARMS = ("per_request", "nowait", "gang")
+
+
+def batching_trace(seed):
+    """Router-side gang batching on the shared knee-load hybrid-resolution
+    stream (``simtools.BATCH_MIX``): per-request join_shortest_queue
+    dispatch spreads each resolution thin, so every replica steps small
+    mixed batches — full per-group overhead and weak patch-cache
+    concentration. The batch former stacks patch-compatible requests into
+    gangs instead (holding each at most its surplus admission slack, gangs
+    sized by the marginal-patch step-cost budget), so replicas step fewer,
+    fuller, single-resolution batches. Three arms at equal fleet size:
+    ``per_request``, ``nowait`` (former with ``max_wait=0`` — isolates
+    grouping-without-waiting; on Poisson arrivals it degenerates to
+    per-request, showing the win comes from the deliberate wait) and
+    ``gang``. The gang arm also runs traced so the span decomposition —
+    now including the ``batch_wait`` component — is checked for
+    conservation. The headline (gang beats per_request on fleet SLO
+    satisfaction) plus the structural guards are asserted in ``main``."""
+    out = {"scenario": {k: (list(v) if isinstance(v, tuple) else v)
+                        for k, v in BATCH_MIX.items()}, "runs": {}}
+    for arm in BATCHING_ARMS:
+        trace = TraceConfig(mode="all", seed=seed) if arm == "gang" else None
+        cl = make_cluster(**batch_cluster_kwargs(arm), trace=trace,
+                          record_timeseries=False)
+        m = cl.run(batch_mix_workload(seed=seed))
+        s = m.summary()
+        row = {"slo": s["slo_satisfaction"], "p95": s["latency_p95"],
+               "goodput": s["goodput"], "utilization": s["utilization"],
+               "cache_hit_rate": s["cache_hit_rate"],
+               "batching": s.get("batching", {})}
+        if trace is not None:
+            errs = cl.tracer.conservation_errors()
+            row["conservation_max_err"] = max(
+                (e for _, e in errs), default=0.0)
+            row["batch_wait_total_s"] = round(sum(
+                sp.comp["batch_wait"] for sp in cl.tracer.finished), 4)
+        out["runs"][arm] = row
+        b = row["batching"]
+        print(f"batch {arm:12s} slo={row['slo']:.3f} "
+              f"p95={row['p95']:.3f}s util={row['utilization']:.2f} "
+              f"hit={row['cache_hit_rate']:.3f} "
+              f"gangs={b.get('gangs', 0)} "
+              f"mean_gang={b.get('mean_gang_size', 0.0):.2f} "
+              f"holds={b.get('holds', 0)}")
+    return out
+
+
 def traced_run(trace_dir, mode, seed):
     """One traced regime for ``--trace-dir``: the crash+checkpoint
     scenario under ``least_slack`` dispatch, chosen because it walks the
@@ -507,6 +572,12 @@ def main() -> None:
                          "spawn prefetch from the cache tier vs tier-"
                          "without-prefetch vs no-tier on the flash-crowd "
                          "spike, >=3 seeds (per-seed win asserted)")
+    ap.add_argument("--batching", action="store_true",
+                    help="add the router-side gang-batching comparison: "
+                         "batch-former gang dispatch vs nowait ablation vs "
+                         "per-request dispatch on the knee-load hybrid-"
+                         "resolution stream (win + eligibility guards "
+                         "asserted, traced arm checked for conservation)")
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="run one traced regime (crash+checkpoint) and "
                          "write trace.jsonl / trace_chrome.json / "
@@ -561,6 +632,10 @@ def main() -> None:
     if args.warmboot:
         warmboot = warmboot_trace(seed=args.seed)
 
+    batching = None
+    if args.batching:
+        batching = batching_trace(seed=args.seed)
+
     traced = None
     if args.trace_dir:
         traced = traced_run(args.trace_dir, args.trace_mode,
@@ -599,6 +674,8 @@ def main() -> None:
         out["cachetier"] = cachetier
     if warmboot is not None:
         out["warmboot"] = warmboot
+    if batching is not None:
+        out["batching"] = batching
     if traced is not None:
         out["traced"] = traced
     Path(args.out).write_text(json.dumps(out, indent=1))
@@ -724,6 +801,41 @@ def main() -> None:
                     f"the cold elastic fleet ({c['slo']:.3f}) on the "
                     f"flash-crowd spike (seed {row['seed']}) — warm-boot "
                     "regression?")
+    if batching is not None:
+        gang = batching["runs"]["gang"]
+        pr = batching["runs"]["per_request"]
+        nw = batching["runs"]["nowait"]
+        gb = gang["batching"]
+        if gb.get("gangs", 0) <= 0:
+            raise SystemExit("gang arm never formed a gang — batch-former "
+                             "grouping regression?")
+        mhs = gb.get("min_hold_slack_s")
+        if mhs is not None and mhs < BATCH_MIX["max_wait"]:
+            raise SystemExit(
+                f"a request was held with only {mhs:.4f}s of slack "
+                f"(< max_wait={BATCH_MIX['max_wait']}) — tight-SLO work "
+                "must dispatch immediately (eligibility regression?)")
+        if gb.get("deadline_overshoot_max", 0.0) > 1e-6:
+            raise SystemExit(
+                f"a hold overshot its eligibility deadline by "
+                f"{gb['deadline_overshoot_max']:.2e}s — the driver is not "
+                "treating hold deadlines as sim events?")
+        if gang.get("conservation_max_err", 0.0) > 1e-9:
+            raise SystemExit(
+                f"traced gang-arm decomposition broke conservation "
+                f"(max err {gang['conservation_max_err']:.2e}) — "
+                "batch_wait span accounting regression?")
+        if gang.get("batch_wait_total_s", 0.0) <= 0.0:
+            raise SystemExit("traced gang arm charged no batch_wait — "
+                             "hold spans are not being labeled?")
+        if nw["batching"].get("holds", 0) != 0:
+            raise SystemExit("nowait ablation deliberately held a request "
+                             "— max_wait=0 gating regression?")
+        if gang["slo"] <= pr["slo"]:
+            raise SystemExit(
+                f"gang-batched dispatch ({gang['slo']:.3f}) lost to "
+                f"per-request dispatch ({pr['slo']:.3f}) at equal fleet "
+                "size on the knee-load stream — batch-former regression?")
 
 
 if __name__ == "__main__":

@@ -103,7 +103,7 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                  steps=10, scale=1.0, record_timeseries=True,
                  initial_mix=None, repartition=None, cache=None,
                  failures=None, checkpoint=None, cache_tier=None,
-                 trace=None):
+                 trace=None, batcher=None):
     """Multi-replica sim cluster over the benchmark resolution ladder.
     Engines are synthetic sim (no tensors) with the patch-aware latency
     surrogate; pair with ``repro.cluster.simtools.cluster_workload`` so
@@ -117,7 +117,11 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
     per-replica L1 warmth dynamics (capacity_bytes=0: warmth dynamics
     without a fleet L2 — the no-tier baseline); ``trace`` (a
     ``TraceConfig``) turns on the per-request span tracer + fleet event
-    bus (latency decomposition, SLO attribution, exporters)."""
+    bus (latency decomposition, SLO attribution, exporters); ``batcher``
+    (a ``BatchFormerConfig``) turns on router-side gang batching — the
+    former groups patch-compatible frontend work into gangs under
+    per-request eligibility windows and each gang's predicted step-cost
+    budget (None keeps per-request dispatch)."""
     from repro.cluster import Cluster, ClusterConfig, sim_engine_factory
     from repro.core.latency_model import CacheHitModel
     if cache is True:
@@ -133,4 +137,5 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                                  checkpoint=checkpoint,
                                  cache_tier=cache_tier,
                                  trace=trace,
+                                 batcher=batcher,
                                  record_timeseries=record_timeseries))

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Docs lint: keep the documentation suite structurally honest.
+
+Two checks, both cheap enough for the per-PR lint job:
+
+1. **Cross-links resolve.** Every relative markdown link in README.md and
+   docs/*.md must point at a file (or directory) that exists in the repo.
+   External URLs, pure #anchors, and GitHub-relative links that escape the
+   repo root (badge URLs like ``../../actions/...``) are skipped; fenced
+   code blocks and inline code spans are not scanned.
+
+2. **Benchmark flags are documented.** Every ``--flag`` registered by
+   ``benchmarks/cluster_sweep.py``'s argparse must appear literally in
+   docs/BENCHMARKS.md — a new sweep axis cannot land undocumented.
+
+Exit status 0 = clean; 1 = problems (each printed on its own line).
+Stdlib only, no PYTHONPATH needed: the sweep's flags are read from its
+source text, not by importing it.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\]\(([^)\s]+)\)")
+FLAG_RE = re.compile(r"add_argument\(\s*[\"'](--[A-Za-z0-9-]+)[\"']")
+
+
+def markdown_files() -> list[Path]:
+    return [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+
+def strip_code(text: str) -> str:
+    """Drop fenced blocks and inline code spans before link scanning."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(re.sub(r"`[^`]*`", "", line))
+    return "\n".join(out)
+
+
+def check_links(problems: list[str]) -> int:
+    checked = 0
+    for md in markdown_files():
+        for target in LINK_RE.findall(strip_code(md.read_text())):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = (md.parent / target.split("#", 1)[0]).resolve()
+            if not path.is_relative_to(REPO):
+                continue  # GitHub-relative (e.g. badge) link, not a file
+            checked += 1
+            if not path.exists():
+                problems.append(
+                    f"{md.relative_to(REPO)}: broken link -> {target}")
+    return checked
+
+
+def check_sweep_flags(problems: list[str]) -> list[str]:
+    sweep_src = (REPO / "benchmarks" / "cluster_sweep.py").read_text()
+    flags = FLAG_RE.findall(sweep_src)
+    if not flags:
+        problems.append("no argparse flags found in cluster_sweep.py "
+                        "(flag regex out of date?)")
+    bench = (REPO / "docs" / "BENCHMARKS.md").read_text()
+    for flag in flags:
+        if flag not in bench:
+            problems.append(f"docs/BENCHMARKS.md: missing sweep flag {flag}")
+    return flags
+
+
+def main() -> int:
+    problems: list[str] = []
+    n_links = check_links(problems)
+    flags = check_sweep_flags(problems)
+    if problems:
+        print("\n".join(problems))
+        return 1
+    print(f"docs OK: {n_links} cross-links resolve, "
+          f"{len(flags)} sweep flags documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,10 +13,18 @@ Layers:
                    attainment, plus an optional predictive path (Holt
                    arrival-rate forecaster) that pre-spawns ahead of ramps;
                    cold start charged honestly either way;
+- ``batcher``    — router-side batch former: groups patch-compatible
+                   frontend requests into gangs under per-request
+                   eligibility windows (admission slack) and a marginal-
+                   patch step-cost budget, dispatched atomically to one
+                   replica (the former picks *what* to batch, the dispatch
+                   policy picks *where*);
 - ``driver``     — the discrete-event loop interleaving all replicas on
-                   one sim clock; owns drift-triggered repartitioning
-                   (recompute affinity blocks when the resolution mix
-                   drifts, migrate replicas drain-before-switch);
+                   one sim clock (tick order: form gangs, then dispatch);
+                   owns drift-triggered repartitioning (recompute affinity
+                   blocks when the resolution mix drifts, migrate replicas
+                   drain-before-switch) and keeps the batch former's
+                   compatibility blocks in sync;
 - ``metrics``    — fleet + per-replica aggregation (SLO satisfaction,
                    goodput, utilization, patch-cache hit rates, queue and
                    repartition time series);
@@ -40,6 +48,7 @@ Quick start::
 """
 from repro.cluster.autoscaler import (ArrivalForecaster, Autoscaler,
                                       AutoscalerConfig)
+from repro.cluster.batcher import BatchFormer, BatchFormerConfig
 from repro.cluster.cachetier import (CacheTier, CacheTierConfig, TierClient,
                                      latent_bytes)
 from repro.cluster.driver import (Cluster, ClusterConfig, FailureConfig,
@@ -56,7 +65,9 @@ from repro.cluster.router import (POLICIES, CacheAffinity,
                                   mix_drift, partition_resolutions)
 from repro.cluster.trace import (COMPONENTS, NULL_TRACER, NullTracer,
                                  TraceConfig, Tracer)
-from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
+from repro.cluster.simtools import (BATCH_MIX, DEFAULT_RES,
+                                    PatchAwareLatency, batch_cluster_kwargs,
+                                    batch_former_config, batch_mix_workload,
                                     cachetier_config, cachetier_mean_mix,
                                     cachetier_workload, cluster_workload,
                                     flash_crowd_workload, phased_workload,
@@ -64,10 +75,13 @@ from repro.cluster.simtools import (DEFAULT_RES, PatchAwareLatency,
                                     sim_engine_factory,
                                     standalone_latencies,
                                     warmboot_autoscaler,
+                                    warmboot_cluster_kwargs,
                                     warmboot_tier_config)
 
 __all__ = [
     "ArrivalForecaster", "Autoscaler", "AutoscalerConfig",
+    "BatchFormer", "BatchFormerConfig", "BATCH_MIX",
+    "batch_cluster_kwargs", "batch_former_config", "batch_mix_workload",
     "CacheTier", "CacheTierConfig", "TierClient", "latent_bytes",
     "CheckpointConfig", "Cluster", "ClusterConfig", "FailureConfig",
     "RepartitionConfig", "ClusterMetrics", "ReplicaReport", "Replica",
@@ -79,6 +93,7 @@ __all__ = [
     "cachetier_config", "cachetier_mean_mix", "cachetier_workload",
     "cluster_workload", "flash_crowd_workload", "phased_workload",
     "piecewise_rate_workload", "ramp_workload", "sim_engine_factory",
-    "standalone_latencies", "warmboot_autoscaler", "warmboot_tier_config",
+    "standalone_latencies", "warmboot_autoscaler", "warmboot_cluster_kwargs",
+    "warmboot_tier_config",
     "COMPONENTS", "NULL_TRACER", "NullTracer", "TraceConfig", "Tracer",
 ]

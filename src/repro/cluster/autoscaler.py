@@ -128,27 +128,36 @@ class ArrivalForecaster:
 
 @dataclass
 class AutoscalerConfig:
-    min_replicas: int = 1
-    max_replicas: int = 8
+    """Elasticity knobs: reactive thresholds, the predictive (Holt
+    forecast) pre-spawn/early-retire path, and warm-boot spawn pricing.
+    Mechanism walk-through: docs/ARCHITECTURE.md section 8."""
+    min_replicas: int = 1            # fleet floor (replicas)
+    max_replicas: int = 8            # fleet ceiling (replicas)
     cold_start: float = 2.0          # seconds before a new replica serves
-    scale_up_backlog: float = 1.5    # mean drain-seconds per replica
-    scale_up_frontend: float = 2.0   # frontend requests per replica
-    scale_down_backlog: float = 0.2
-    slo_target: float = 0.95
+    scale_up_backlog: float = 1.5    # spawn above this mean backlog
+    #                                  (drain-seconds per replica)
+    scale_up_frontend: float = 2.0   # spawn above this frontend depth
+    #                                  (queued requests per replica)
+    scale_down_backlog: float = 0.2  # "idle" below this mean backlog
+    #                                  (drain-seconds per replica)
+    slo_target: float = 0.95         # windowed attainment below this
+    #                                  fraction also triggers a spawn
     # hysteresis: retiring needs near-perfect recent attainment AND the idle
     # condition to hold continuously, else constant load oscillates
     # (capacity drops -> SLO dips -> scale back up, forever)
-    scale_down_attainment: float = 0.99
-    scale_down_hold: float = 8.0
+    scale_down_attainment: float = 0.99  # retire-eligible attainment floor
+    scale_down_hold: float = 8.0     # seconds the idle condition must hold
     window: float = 10.0             # attainment sliding window (seconds)
     cooldown: float = 4.0            # min seconds between actions
     # -- predictive pre-spawning (off by default: pure reactive) ----------
-    predictive: bool = False
+    predictive: bool = False         # enable the Holt forecast pre-spawn path
     forecast_bin: float = 1.0        # forecaster bin width (seconds)
-    forecast_horizon: Optional[float] = None   # default: cold_start + bin
+    forecast_horizon: Optional[float] = None   # look-ahead (seconds);
+    #                                  default: effective cold start + bin
     forecast_min_bins: int = 4       # bins before the forecast is trusted
     forecast_max_err: float = 0.5    # EWMA one-bin-ahead rel. error gate
-    headroom: float = 1.15           # provision above the forecast
+    #                                  (fraction; above it: stand down)
+    headroom: float = 1.15           # provision factor above the forecast
     # per-replica sustainable throughput (req/s); None = learn online from
     # the completion rate while the fleet is under pressure
     service_rate: Optional[float] = None
@@ -163,13 +172,14 @@ class AutoscalerConfig:
     # keep firing while mid-boot replicas would otherwise look like
     # horizon capacity they cannot cash in cold. 1.0 (default) keeps the
     # original pricing bit-identical.
-    warm_boot_factor: float = 1.0
+    warm_boot_factor: float = 1.0    # fraction of cold_start priced for
+    #                                  warm-bootable spawns, in (0, 1]
     # -- predictive scale-down (elastic controller; needs predictive) ------
-    predictive_down: bool = False
+    predictive_down: bool = False    # enable forecast-gated early retirement
     # retire only while forecast * down_headroom still fits in n-1 replicas;
     # down_headroom > headroom keeps a hysteresis band between the spawn and
     # retire thresholds so forecast noise cannot flap the fleet
-    down_headroom: float = 1.4
+    down_headroom: float = 1.4       # retirement provision factor
     down_hold: float = 5.0           # seconds the over-provision must persist
 
     def __post_init__(self) -> None:

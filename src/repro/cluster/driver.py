@@ -3,10 +3,14 @@ one discrete-event sim clock.
 
 The driver owns global time. Per event it: (1) delivers Poisson arrivals to
 the router frontend, (2) finalizes drained retiring replicas, (3) lets the
-autoscaler add/retire replicas, (4) dispatches the frontend queue via the
-configured policy, (5) ticks every ready, free replica that has work (one
-non-preemptible denoising step each, exactly the single-engine iteration),
-then advances to the next arrival / step-completion / warm-up instant.
+autoscaler add/retire replicas, (4) dispatches the frontend queue —
+form-then-dispatch when a batch former is configured
+(``ClusterConfig.batcher``): the former picks *what* ships (patch-
+compatible gangs under per-request eligibility windows), the policy picks
+*where*, and each gang is admitted atomically — (5) ticks every ready,
+free replica that has work (one non-preemptible denoising step each,
+exactly the single-engine iteration), then advances to the next arrival /
+step-completion / warm-up / hold-release instant.
 
 Replica construction is policy-aware: under the affinity policies
 (``resolution_affinity`` and its zone-spread variant) the fleet's
@@ -103,6 +107,7 @@ import numpy as np
 
 from repro.core.requests import Request
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.batcher import BatchFormer, BatchFormerConfig
 from repro.cluster.cachetier import (CacheTier, CacheTierConfig, TierClient,
                                      aggregate_client_stats)
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
@@ -121,11 +126,13 @@ EngineFactory = Callable[[Sequence[Resolution]], "object"]
 class RepartitionConfig:
     """Drift- and resize-triggered affinity repartitioning
     (resolution_affinity / resolution_affinity_spread only)."""
-    drift_threshold: float = 0.3     # L1(observed mix, built-for mix)
+    drift_threshold: float = 0.3     # L1(observed mix, built-for mix), in
+    #                                  [0, 2]; drift fires above it
     window: float = 10.0             # arrival-mix histogram window (s)
     min_samples: int = 30            # arrivals before drift is trusted
     cooldown: float = 8.0            # min seconds between repartitions
-    switch_cost: float = 1.0         # charged when a replica swaps blocks
+    switch_cost: float = 1.0         # sim-seconds a replica is unavailable
+    #                                  while swapping blocks (post-drain)
     max_concurrent: int = 1          # replicas draining-to-migrate at once
     # recompute the block structure whenever the dispatchable fleet size
     # changes (autoscaler spawn/retire, crash) — the elastic controller's
@@ -162,18 +169,31 @@ class FailureConfig:
     #                                      per zone (None: no outages)
     zone_downtime: float = 6.0       # seconds a zone stays down per outage
     max_zone_outages: Optional[int] = None   # stop injecting after this many
-    seed: int = 0
+    seed: int = 0                    # RNG seed for every failure draw
 
 
 @dataclass
 class ClusterConfig:
-    n_replicas: int = 2
-    policy: str = "round_robin"
+    """Top-level fleet configuration. Scalar knobs live here; each
+    optional subsystem is switched on by handing its config object
+    (every ``None`` default keeps the corresponding layer off with the
+    simpler behavior bit-identical). Overview + knob table:
+    docs/ARCHITECTURE.md."""
+    n_replicas: int = 2              # initial fleet size (replicas)
+    policy: str = "round_robin"      # dispatch policy name (router.py
+    #                                  POLICIES: round_robin /
+    #                                  join_shortest_queue / least_slack /
+    #                                  resolution_affinity / zone_spread /
+    #                                  resolution_affinity_spread /
+    #                                  cache_affinity[_spread])
+    # elasticity: reactive + predictive scaling (None: fixed fleet)
     autoscaler: Optional[AutoscalerConfig] = None
     # resolution mix the initial affinity partition is provisioned for
     # (uniform if None — the paper's workload assumption)
     initial_mix: Optional[Sequence[float]] = None
+    # drift-/resize-triggered affinity repartitioning (None: frozen blocks)
     repartition: Optional[RepartitionConfig] = None
+    # crash / zone-outage injection (None: failure-free fleet)
     failures: Optional[FailureConfig] = None
     # partial-progress checkpointing of in-flight requests (None: crash
     # orphans restart from denoise step 0)
@@ -186,8 +206,13 @@ class ClusterConfig:
     # sim-clock event bus + per-request span tracer (trace.py). None keeps
     # tracing disabled — a guarded no-op with bit-identical metrics.
     trace: Optional[TraceConfig] = None
-    record_timeseries: bool = True
-    max_events: int = 2_000_000        # runaway-loop backstop
+    # router-side batch former (batcher.py): gang-dispatch patch-compatible
+    # frontend work under per-request eligibility windows and the target
+    # replica's batch-latency budget. None keeps per-request dispatch.
+    batcher: Optional[BatchFormerConfig] = None
+    record_timeseries: bool = True     # keep per-event queue/fleet series
+    #                                    (off saves memory on long sweeps)
+    max_events: int = 2_000_000        # runaway-loop backstop (sim events)
 
 
 class Cluster:
@@ -281,6 +306,19 @@ class Cluster:
         else:
             self._blocks = [list(self.resolutions)]
             counts = [cfg.n_replicas]
+        # batch former: gang compatibility is keyed by the same GCD-patch
+        # partition affinity placement uses. Non-affinity fleets serve the
+        # full ladder per replica, so the former cuts its *own* max-GCD
+        # partition over the ladder (per-resolution blocks on the default
+        # one) purely as the gang key; affinity fleets share the driver's
+        # live blocks, re-synced on every repartition.
+        self.former: Optional[BatchFormer] = None
+        if cfg.batcher is not None:
+            self.former = BatchFormer(cfg.batcher)
+            self.former.set_blocks(
+                self._blocks if self._affinity else partition_resolutions(
+                    self.resolutions, len(self.resolutions)))
+            self.router.former = self.former
         for block, c in zip(self._blocks, counts):
             for _ in range(c):
                 self._spawn(block, now=0.0, cold=0.0)
@@ -678,6 +716,10 @@ class Cluster:
         self._blocks = blocks
         self._built_mix = mix
         self._built_k = k
+        if self.former is not None and self._affinity:
+            # gang compatibility must track the live partition, or a gang
+            # cut for the old blocks could straddle the new ones
+            self.former.set_blocks(blocks)
         self._last_repartition = now
         self._migration_queue = deque(zip(moving, remaining))
         entry = {
@@ -825,6 +867,11 @@ class Cluster:
                     nxt.append(max(
                         self.autoscaler._last_action
                         + self.autoscaler.cfg.cooldown, now))
+                if self.former is not None:
+                    # held-for-batching requests release at their
+                    # eligibility deadlines — sim events, so a hold can
+                    # never be overshot by a quiet stretch of the clock
+                    nxt.extend(self.former.deadlines(now))
             # scheduled crashes and zone outages are sim events too — but
             # only while real future work exists (a crash never un-sticks a
             # dead queue, so it must not keep the loop alive past the drop
@@ -875,6 +922,8 @@ class Cluster:
             mts.attribution = self.tracer.attribution_summary()
             mts.predictor = self.tracer.predictor_summary()
             mts.trace_events = self.tracer.n_events
+        if self.former is not None:
+            mts.batching = self.former.stats()
         mts.repartitions = list(self.repartition_log)
         mts.failures = list(self.failure_log)
         mts.replicas_failed = sum(1 for r in self.replicas

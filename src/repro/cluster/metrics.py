@@ -74,6 +74,11 @@ class ClusterMetrics:
     # entries, evictions, aborted in-flight writes). Empty dict when no
     # tier is configured.
     cache_tier: dict = field(default_factory=dict)
+    # batch former (ClusterConfig.batcher): gang counts/sizes, hold
+    # decisions, and the two structural guards the --batching benchmark
+    # asserts (min_hold_slack_s, deadline_overshoot_max). Empty dict when
+    # no former is configured.
+    batching: dict = field(default_factory=dict)
     # driver event-loop iterations this run took — the sim-throughput
     # denominator for the nightly perf trajectory (always recorded)
     sim_events: int = 0
@@ -209,6 +214,8 @@ class ClusterMetrics:
                     "zone": rep.zone,
                 } for rid, rep in sorted(self.per_replica.items())},
         }
+        if self.batching:
+            out["batching"] = self.batching
         if self.attribution:
             out["attribution"] = self.attribution
         if self.predictor:

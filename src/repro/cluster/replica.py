@@ -121,6 +121,10 @@ class Replica:
         # fleet patch-cache tier: per-replica L1 warmth + L2 protocol
         # (attached by the driver when ClusterConfig.cache_tier is set)
         self.tier = None
+        # gang admissions (cluster.batcher): pre-formed patch batches
+        # accepted atomically via submit_gang
+        self.gangs_admitted = 0
+        self.gang_requests = 0
 
     # -- identity / coverage ----------------------------------------------
     @property
@@ -208,6 +212,26 @@ class Replica:
             # so a second crash never restores below it
             self._ckpt[req.rid] = (req.steps_done, req.latent)
         self.engine.submit(req)
+
+    def submit_gang(self, reqs: List[Request]) -> None:
+        """Atomically admit a pre-formed patch gang (``cluster.batcher``):
+        every member is validated against this replica's coverage *before*
+        any is accepted, so a bad gang leaves the engine untouched. Members
+        enter the engine wait queue together — the scheduler sees the whole
+        gang in its next admission pass, and a crash orphans it whole
+        (``fail`` returns everything the engine held, so the driver
+        requeues the gang exactly once, together)."""
+        bad = [tuple(r.resolution) for r in reqs
+               if not self.supports(r.resolution)]
+        if bad:
+            raise ValueError(
+                f"replica {self.rid} serves {sorted(self._res_set)}, "
+                f"gang contains {sorted(set(bad))}")
+        for r in reqs:
+            self.submit(r)
+        if len(reqs) >= 2:
+            self.gangs_admitted += 1
+            self.gang_requests += len(reqs)
 
     def tick(self, now: float) -> TickEvents:
         ev = self.engine.tick(now)

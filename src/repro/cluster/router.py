@@ -350,7 +350,15 @@ def make_policy(name: str) -> DispatchPolicy:
 
 class Router:
     """FIFO frontend queue feeding the dispatch policy. Requests that no
-    ready replica covers stay queued and are retried every round."""
+    ready replica covers stay queued and are retried every round.
+
+    With a batch former attached (``former``, wired by the driver from
+    ``ClusterConfig.batcher``) dispatch becomes form-then-dispatch: the
+    former scans the queue and decides *what* ships now — patch-compatible
+    gangs, released under per-request eligibility windows and the target
+    replica's batch-latency budget — while the policy still decides
+    *where* each gang lands. Gangs are admitted atomically via
+    ``Replica.submit_gang``."""
 
     #: no-op by default; the cluster driver swaps in a live tracer
     tracer = NULL_TRACER
@@ -360,6 +368,8 @@ class Router:
         self.queue: List[Request] = []
         self.dispatched = 0
         self.requeued = 0
+        #: batch former (repro.cluster.batcher.BatchFormer) or None
+        self.former = None
 
     @property
     def depth(self) -> int:
@@ -381,6 +391,8 @@ class Router:
 
     def dispatch(self, replicas: Sequence[Replica],
                  now: float) -> List[Tuple[Request, Replica]]:
+        if self.former is not None:
+            return self._dispatch_gangs(replicas, now)
         sent, kept = [], []
         tr = self.tracer
         for req in self.queue:
@@ -395,5 +407,27 @@ class Router:
             rep.submit(req)
             self.dispatched += 1
             sent.append((req, rep))
+        self.queue = kept
+        return sent
+
+    def _dispatch_gangs(self, replicas: Sequence[Replica],
+                        now: float) -> List[Tuple[Request, Replica]]:
+        """Form-then-dispatch: the former picks what ships (and what keeps
+        waiting — charged to ``batch_wait``), the policy already picked
+        where inside ``plan``; each gang is admitted atomically."""
+        tr = self.tracer
+        plan, kept = self.former.plan(self.queue, replicas, now,
+                                      self.policy, tr)
+        sent: List[Tuple[Request, Replica]] = []
+        for rep, gang in plan:
+            if tr.enabled:
+                # prediction sampled before submit so it prices the batch
+                # the dispatch decision saw (admission_slack's view)
+                for req in gang:
+                    tr.dispatch(req, rep, now,
+                                rep.predicted_finish(req, now))
+            rep.submit_gang(gang)
+            self.dispatched += len(gang)
+            sent.extend((req, rep) for req in gang)
         self.queue = kept
         return sent

@@ -198,6 +198,64 @@ def warmboot_cluster_kwargs(arm: str) -> dict:
                 cache=True, cache_tier=tier)
 
 
+#: gang-batching reference scenario, shared by the ``--batching`` sweep
+#: section and the tests. A steady hybrid-resolution Poisson stream near
+#: the fleet's knee: per-request dispatch (``join_shortest_queue``)
+#: spreads each resolution thin across the replicas, so every step is a
+#: small mixed batch — full per-group overhead, low resolution
+#: concentration, weak cache hits. The batch former stacks same-patch
+#: work into gangs instead: each replica steps fewer, fuller,
+#: single-resolution batches (amortized base + group cost, concentrated
+#: patch cache), which is the paper's patches-are-the-batching-unit
+#: insight applied at fleet scale. ``max_wait`` spends only surplus
+#: admission slack (``slo_scale`` leaves several step-times of headroom);
+#: ``max_step_cost`` caps how much one gang may slow the shared step.
+BATCH_MIX = {"qps": 105.0, "duration": 25.0, "n_replicas": 4, "steps": 10,
+             "slo_scale": 8.0, "mix": (1 / 3, 1 / 3, 1 / 3),
+             "policy": "join_shortest_queue",
+             "max_wait": 0.06, "max_step_cost": 0.060}
+
+
+def batch_mix_workload(seed: int = 0) -> List[Request]:
+    """The shared gang-batching hybrid-resolution workload (regenerate per
+    run — Request objects mutate while served)."""
+    sc = BATCH_MIX
+    return cluster_workload(sc["qps"], sc["duration"], steps=sc["steps"],
+                            slo_scale=sc["slo_scale"], mix=sc["mix"],
+                            seed=seed)
+
+
+def batch_former_config(max_wait: Optional[float] = None):
+    """The shared ``BatchFormerConfig`` for the gang-batching scenario.
+    ``max_wait=0.0`` is the ablation arm: the former still gang-dispatches
+    whatever is simultaneously queued but never deliberately holds a
+    request."""
+    from repro.cluster.batcher import BatchFormerConfig
+    sc = BATCH_MIX
+    return BatchFormerConfig(
+        max_wait=sc["max_wait"] if max_wait is None else max_wait,
+        max_step_cost=sc["max_step_cost"])
+
+
+def batch_cluster_kwargs(arm: str) -> dict:
+    """``benchmarks.common.make_cluster`` kwargs for one gang-batching arm:
+    ``per_request`` (no former), ``nowait`` (former with ``max_wait=0.0`` —
+    gangs only what is simultaneously queued, never deliberately waits) or
+    ``gang`` (the full former). Shared so the benchmark and the regression
+    tests run literally the same fleets."""
+    if arm == "per_request":
+        former = None
+    elif arm == "nowait":
+        former = batch_former_config(max_wait=0.0)
+    elif arm == "gang":
+        former = batch_former_config()
+    else:
+        raise ValueError(f"unknown batching arm {arm!r}")
+    sc = BATCH_MIX
+    return dict(n_replicas=sc["n_replicas"], policy=sc["policy"],
+                steps=sc["steps"], cache=True, batcher=former)
+
+
 class PatchAwareLatency:
     """Adapter giving one engine's composition features to the patch-aware
     surrogate (plugs into ``PatchedServeEngine.latency_model``).
@@ -268,6 +326,37 @@ class PatchAwareLatency:
         self._last_hit = self.cache.two_level_hit_rate(
             conc, frac, l1, l2, l2_discount=self.tier.cfg.l2_discount)
         return self._latency(counts, self._last_hit)
+
+    # -- gang sizing (cluster batch former) -----------------------------
+
+    def _batch_counts(self, reqs) -> List[float]:
+        counts = [0.0] * len(self.resolutions)
+        idx = {r: i for i, r in enumerate(self.resolutions)}
+        for r in reqs:
+            i = idx.get(tuple(r.resolution))
+            if i is not None:
+                counts[i] += 1.0
+        return counts
+
+    def batch_step_cost(self, reqs) -> float:
+        """Predicted one-step latency (sim-seconds) of ``reqs`` served as a
+        single batch — the batch-latency *curve* point the cluster batch
+        former prices gangs on (``repro.cluster.batcher``)."""
+        return self.predict_batch(self._batch_counts(reqs), list(reqs))
+
+    def marginal_patch_cost(self, reqs, req) -> float:
+        """Step-latency increase *per patch* (sim-seconds/patch) from
+        appending ``req`` to the batch ``reqs``. The step curve is
+        sublinear in patches, so this falls as the batch grows — which is
+        why the former bounds gangs by marginal-patch-priced total step
+        cost instead of request count (``BatchFormerConfig.max_step_cost``
+        budgets ``batch_step_cost``; each candidate is admitted at its own
+        marginal price)."""
+        base = self.batch_step_cost(reqs) if reqs else 0.0
+        extra = self.batch_step_cost(list(reqs) + [req]) - base
+        h, w = req.resolution
+        n = max((h // self.patch) * (w // self.patch), 1)
+        return extra / n
 
 
 def standalone_latencies(resolutions: Sequence[Resolution] = None,

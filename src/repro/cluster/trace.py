@@ -7,7 +7,8 @@ migration drain, or taxed by checkpoint writes and tier fetches? This
 module adds that answer without touching the simulation's semantics:
 
 - **Event bus** (``Tracer``): every lifecycle transition — submit,
-  dispatch, admit, denoise step, checkpoint write, tier fetch/publish,
+  batch-former hold / gang dispatch, dispatch, admit, denoise step,
+  checkpoint write, tier fetch/publish,
   migration drain, crash/requeue/resume, complete/drop — plus the fleet
   events the driver previously kept in ad-hoc lists (``failure_log``,
   ``repartition_log``, ``zone_outage_log``, autoscaler actions) becomes a
@@ -71,6 +72,7 @@ Resolution = Tuple[int, int]
 COMPONENTS = (
     "frontend_wait",     # in the router queue, never yet dispatched
     "requeue_wait",      # back in the router queue after a crash requeue
+    "batch_wait",        # queued but deliberately held by the batch former
     "replica_wait",      # in a replica's wait queue (admission pending)
     "migration_drain",   # waiting on a replica that is draining to migrate
     "denoise",           # executing denoise steps that counted
@@ -90,9 +92,10 @@ class TraceConfig:
     events; batch step events elided) | ``sample`` (Bernoulli per-request
     subset at ``sample_rate``). Aggregates (attribution, predictor,
     conservation spans) always cover every request."""
-    mode: str = "all"
-    sample_rate: float = 0.05
-    seed: int = 0
+    mode: str = "all"                # retained-event policy (see above)
+    sample_rate: float = 0.05        # ``sample`` mode keep probability,
+    #                                  per request, in (0, 1]
+    seed: int = 0                    # ``sample`` mode Bernoulli RNG seed
     # predictor drift: flag when |rolling mean residual| over the last
     # ``predictor_window`` completions exceeds ``drift_bias_frac`` x the
     # window's mean actual latency
@@ -301,6 +304,31 @@ class Tracer:
         self._emit({"t": now, "kind": "dispatch", "rid": req.rid,
                     "replica": rep.rid,
                     "predicted_finish": predicted_finish}, rid=req.rid)
+
+    def batch_hold(self, req, now: float) -> None:
+        """The batch former deliberately deferred a dispatchable request to
+        grow a gang: from here until dispatch its queue time is charged to
+        ``batch_wait`` instead of ``frontend_wait``/``requeue_wait`` —
+        chosen delay, not capacity starvation. Emitted once per hold
+        decision (conservation is untouched: the label switch closes the
+        open interval first)."""
+        span = self.spans.get(req.rid)
+        if span is None or span.phase != _FRONTEND:
+            return
+        span.charge(now)
+        span.label = "batch_wait"
+        self._emit({"t": now, "kind": "batch_hold", "rid": req.rid},
+                   rid=req.rid)
+
+    def gang_dispatch(self, now: float, rep, reqs: Sequence,
+                      step_cost: float) -> None:
+        """One former gang shipped to ``rep`` (batch-level event, like
+        ``step``); the per-request ``dispatch`` events follow it on the
+        bus."""
+        self._emit({"t": now, "kind": "gang", "replica": rep.rid,
+                    "zone": rep.zone, "batch": len(reqs),
+                    "rids": [r.rid for r in reqs],
+                    "predicted_step_cost": step_cost}, bulk=True)
 
     def admit(self, req, rep, now: float) -> None:
         span = self.spans.get(req.rid)

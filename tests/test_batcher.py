@@ -1,0 +1,282 @@
+"""Batch former — router-side gang scheduling: eligibility-window
+semantics (a request whose slack is exactly at its max-wait dispatches
+immediately, alone if need be; surplus-slack work is held and always
+released by its deadline), marginal-patch gang sizing against the
+batch-latency curve, gang atomicity under mid-gang replica crashes
+(whole-gang orphaning, exactly-once requeue), the ``max_wait=0``
+pass-through ablation, batch_wait span conservation, and a
+hypothesis-optional property test that no hold ever overshoots its
+eligibility deadline."""
+import pytest
+
+from repro.cluster import (BatchFormer, BatchFormerConfig, Cluster,
+                           ClusterConfig, FailureConfig, NULL_TRACER,
+                           TraceConfig, batch_cluster_kwargs,
+                           batch_former_config, batch_mix_workload,
+                           cluster_workload, make_policy,
+                           sim_engine_factory)
+from repro.cluster.simtools import BATCH_MIX, DEFAULT_RES, CacheHitModel
+from repro.core.requests import Request
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                  # pragma: no cover
+    st = None
+
+
+def _cluster(batcher=None, n=2, policy="join_shortest_queue", cache=False,
+             failures=None, trace=None, record=False):
+    return Cluster(sim_engine_factory(
+        DEFAULT_RES, cache=CacheHitModel() if cache else None),
+        DEFAULT_RES,
+        ClusterConfig(n_replicas=n, policy=policy, batcher=batcher,
+                      failures=failures, trace=trace,
+                      record_timeseries=record))
+
+
+def _req(rid, res=(16, 16), arrival=0.0, slo=10.0, steps=10):
+    return Request(rid=rid, resolution=res, arrival=arrival, slo=slo,
+                   total_steps=steps)
+
+
+# ---------------- config -------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        BatchFormerConfig(max_wait=-0.1)
+    with pytest.raises(ValueError):
+        BatchFormerConfig(max_step_cost=0.0)
+    BatchFormerConfig(max_wait=0.0)          # pass-through ablation is legal
+
+
+# ---------------- eligibility window -------------------------------------
+
+def _boundary_setup(max_wait=0.25):
+    cl = _cluster(batcher=BatchFormerConfig(max_wait=max_wait,
+                                            max_step_cost=1.0))
+    rep = cl.replicas[0]
+    policy = make_policy("join_shortest_queue")
+    return cl, rep, policy
+
+
+def _pin_slack(former, rep, req, now, target):
+    """Shift ``req.slo`` until its recomputed slack on ``rep`` equals
+    ``target`` exactly — slack is linear in the deadline with unit
+    coefficient, so a couple of fixed-point iterations absorb float
+    rounding."""
+    for _ in range(4):
+        req.slo -= former._slack_seconds(rep, req, now) - target
+    return former._slack_seconds(rep, req, now)
+
+
+def test_slack_exactly_at_max_wait_dispatches_immediately_alone():
+    """The boundary case the window is specified by: ``slack_s ==
+    max_wait`` is *not* holdable — the request ships now, alone."""
+    cl, rep, policy = _boundary_setup()
+    former = cl.former
+    req = _req(0)
+    s = _pin_slack(former, rep, req, 0.0, former.cfg.max_wait)
+    assert s == pytest.approx(former.cfg.max_wait, abs=1e-12)
+    dispatches, kept = former.plan([req], cl.replicas, 0.0, policy,
+                                   NULL_TRACER)
+    assert [len(g) for _, g in dispatches] == [1]
+    assert kept == [] and former.holds == 0 and former.singles == 1
+
+
+def test_surplus_slack_is_held_then_released_at_deadline():
+    cl, rep, policy = _boundary_setup()
+    former = cl.former
+    req = _req(0, slo=10.0)                  # oceans of slack
+    dispatches, kept = former.plan([req], cl.replicas, 0.0, policy,
+                                   NULL_TRACER)
+    assert dispatches == [] and kept == [req] and former.holds == 1
+    assert former.deadlines(0.0) == [pytest.approx(former.cfg.max_wait)]
+    # still inside the window: stays held
+    d2, k2 = former.plan([req], cl.replicas, 0.1, policy, NULL_TRACER)
+    assert d2 == [] and k2 == [req]
+    # exactly at the deadline: released, and never counted as an overshoot
+    d3, k3 = former.plan([req], cl.replicas, former.cfg.max_wait, policy,
+                         NULL_TRACER)
+    assert [len(g) for _, g in d3] == [1] and k3 == []
+    assert former.stats()["deadline_overshoot_max"] <= 1e-9
+    assert former.stats()["min_hold_slack_s"] > former.cfg.max_wait
+
+
+def test_held_work_fills_an_urgent_gang():
+    """An urgent arrival flushes compatible held work with it — the hold
+    ends early when a gang forms, not only at the deadline."""
+    cl, rep, policy = _boundary_setup()
+    former = cl.former
+    held = _req(0, slo=10.0)
+    former.plan([held], cl.replicas, 0.0, policy, NULL_TRACER)
+    urgent = _req(1)
+    _pin_slack(former, rep, urgent, 0.05, former.cfg.max_wait)
+    dispatches, kept = former.plan([held, urgent], cl.replicas, 0.05,
+                                   policy, NULL_TRACER)
+    assert len(dispatches) == 1 and kept == []
+    _, gang = dispatches[0]
+    assert {r.rid for r in gang} == {0, 1}
+    assert former.gangs == 1 and former.gang_requests == 2
+
+
+def test_incompatible_resolutions_never_gang():
+    """Resolutions from different partition blocks stay in separate
+    dispatches even when both ship in the same round."""
+    cl, rep, policy = _boundary_setup(max_wait=0.0)
+    former = cl.former
+    a, b = _req(0, res=(16, 16)), _req(1, res=(32, 32))
+    former.set_blocks([[(16, 16)], [(24, 24), (32, 32)]])
+    dispatches, kept = former.plan([a, b], cl.replicas, 0.0, policy,
+                                   NULL_TRACER)
+    assert kept == []
+    assert sorted(len(g) for _, g in dispatches) == [1, 1]
+
+
+# ---------------- gang sizing against the batch-latency curve ------------
+
+def test_marginal_patch_pricing_matches_batch_curve():
+    """``marginal_patch_cost`` is exact against the curve: base +
+    marginal * patches reproduces the full-batch prediction, so the
+    ``max_step_cost`` budget prices the true shared step."""
+    cl, rep, _ = _boundary_setup()
+    lm = rep.engine.latency_model
+    gang = [_req(0), _req(1)]
+    cand = _req(2, res=(32, 32))
+    whole = lm.batch_step_cost(gang + [cand])
+    marginal = lm.batch_step_cost(gang) \
+        + lm.marginal_patch_cost(gang, cand) * cand.patches(rep.patch)
+    assert whole == pytest.approx(marginal, rel=1e-12)
+
+
+def test_step_cost_budget_bounds_non_urgent_gangs():
+    cl, rep, policy = _boundary_setup()
+    former = cl.former
+    former.cfg.max_step_cost = 0.008      # fits ~2 Low requests, not 6
+    reqs = [_req(i, slo=10.0) for i in range(6)]
+    former.plan(reqs, cl.replicas, 0.0, policy, NULL_TRACER)  # start holds
+    dispatches, _ = former.plan(reqs, cl.replicas, 0.01, policy,
+                                NULL_TRACER)
+    assert dispatches, "cost-full gang should release without urgency"
+    for rp, gang in dispatches:
+        assert former._gang_cost(rp, gang) <= former.cfg.max_step_cost
+    assert former.stats()["max_gang_size"] < 6
+
+
+def test_urgent_requests_exempt_from_step_cost_budget():
+    """Urgency wins over the budget: an urgent set alone may exceed
+    ``max_step_cost`` — splitting it would only delay some of it more."""
+    cl, rep, policy = _boundary_setup()
+    former = cl.former
+    former.cfg.max_step_cost = 1e-6          # nothing "fits"
+    reqs = []
+    for i in range(3):
+        r = _req(i)
+        _pin_slack(former, rep, r, 0.0, former.cfg.max_wait)
+        reqs.append(r)
+    dispatches, kept = former.plan(reqs, cl.replicas, 0.0, policy,
+                                   NULL_TRACER)
+    assert kept == [] and len(dispatches) == 1
+    assert len(dispatches[0][1]) == 3
+
+
+# ---------------- gang atomicity -----------------------------------------
+
+def test_submit_gang_validates_before_admitting_anything():
+    cl = _cluster()
+    rep = cl.replicas[0]
+    gang = [_req(0), _req(1, res=(999, 999))]
+    with pytest.raises(ValueError):
+        rep.submit_gang(gang)
+    assert rep.engine.wait == [] and rep.engine.active == []
+    assert rep.gangs_admitted == 0
+
+
+def test_crash_orphans_whole_gang_exactly_once():
+    cl = _cluster()
+    rep = cl.replicas[0]
+    gang = [_req(i) for i in range(3)]
+    rep.submit_gang(gang)
+    assert rep.gangs_admitted == 1 and rep.gang_requests == 3
+    orphans = rep.fail(1.0)
+    assert {r.rid for r in orphans} == {0, 1, 2}
+    assert rep.engine.wait == [] and rep.engine.active == []
+    assert rep.fail(2.0) == []               # nothing to orphan twice
+
+
+def test_crash_requeue_accounting_is_exactly_once_end_to_end():
+    """Gang dispatch under Poisson crashes: every request is counted
+    exactly once fleet-wide (completed + dropped == offered)."""
+    cl = _cluster(batcher=batch_former_config(), n=3,
+                  failures=FailureConfig(mtbf=6.0, recover=True, seed=3))
+    wl = cluster_workload(qps=30.0, duration=10.0, seed=3)
+    m = cl.run(wl)
+    assert m.replicas_failed > 0
+    assert m.completed + m.dropped == len(wl)
+    assert m.batching["gangs"] + m.batching["singles"] > 0
+
+
+# ---------------- ablation + observability -------------------------------
+
+def test_nowait_former_never_holds():
+    cl = _cluster(batcher=BatchFormerConfig(max_wait=0.0), n=3)
+    m = cl.run(cluster_workload(qps=40.0, duration=8.0, seed=2))
+    b = m.batching
+    assert b["holds"] == 0 and b["min_hold_slack_s"] is None
+    assert b["deadline_overshoot_max"] == 0.0
+
+
+def test_batch_wait_spans_conserve():
+    """The gang arm's traced decomposition — including the new
+    ``batch_wait`` component — still sums to end-to-end latency."""
+    cl = _cluster(batcher=batch_former_config(), n=3, cache=True,
+                  policy=BATCH_MIX["policy"],
+                  trace=TraceConfig(mode="all", seed=1))
+    m = cl.run(cluster_workload(qps=70.0, duration=6.0,
+                                slo_scale=BATCH_MIX["slo_scale"], seed=1))
+    assert m.batching["holds"] > 0
+    waited = sum(s.comp["batch_wait"] for s in cl.tracer.finished)
+    assert waited > 0.0
+    worst = max(e for _, e in cl.tracer.conservation_errors())
+    assert worst <= 1e-9
+
+
+def test_batch_cluster_kwargs_arms():
+    assert batch_cluster_kwargs("per_request")["batcher"] is None
+    assert batch_cluster_kwargs("nowait")["batcher"].max_wait == 0.0
+    assert batch_cluster_kwargs("gang")["batcher"].max_wait \
+        == BATCH_MIX["max_wait"]
+    with pytest.raises(ValueError):
+        batch_cluster_kwargs("warm")
+
+
+def test_batch_mix_workload_is_reproducible():
+    a, b = batch_mix_workload(seed=7), batch_mix_workload(seed=7)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert [tuple(r.resolution) for r in a] == \
+        [tuple(r.resolution) for r in b]
+
+
+# ---------------- property: holds never overshoot their deadline ---------
+
+@pytest.mark.skipif(st is None, reason="hypothesis not installed")
+def test_no_dispatch_delayed_past_eligibility_deadline_property():
+    """Property over random workloads and windows: the former never holds
+    a request past ``first_held + max_wait`` (the driver folds hold
+    deadlines into its next-event time), and never holds anything whose
+    slack could not afford the full window."""
+    pytest.importorskip("hypothesis")
+
+    @settings(max_examples=10, deadline=None)
+    @given(qps=st.floats(20.0, 80.0), seed=st.integers(0, 50),
+           max_wait=st.floats(0.02, 0.3))
+    def run(qps, seed, max_wait):
+        cl = _cluster(batcher=BatchFormerConfig(max_wait=max_wait,
+                                                max_step_cost=0.06), n=2)
+        m = cl.run(cluster_workload(qps=qps, duration=4.0, seed=seed))
+        b = m.batching
+        assert b["deadline_overshoot_max"] <= 1e-9
+        if b["holds"]:
+            assert b["min_hold_slack_s"] > max_wait
+
+    run()

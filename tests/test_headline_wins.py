@@ -20,6 +20,8 @@ Headlines locked in:
   repeat-heavy hybrid regime.
 - PR 7: the warm-boot elastic fleet beats the cold elastic fleet on the
   flash-crowd spike (spawn prefetch + warm-boot autoscaler pricing).
+- PR 8: gang-batched dispatch (the router-side batch former) beats
+  per-request dispatch at equal fleet size on the knee-load stream.
 """
 import pytest
 
@@ -30,7 +32,9 @@ from benchmarks.cluster_sweep import (checkpoint_recovery_trace,
 from benchmarks.common import make_cluster
 from repro.cluster import (cachetier_config, cachetier_mean_mix,
                            cachetier_workload)
-from repro.cluster.simtools import (CACHE_TIER, flash_crowd_workload,
+from repro.cluster.simtools import (CACHE_TIER, batch_cluster_kwargs,
+                                    batch_mix_workload,
+                                    flash_crowd_workload,
                                     warmboot_cluster_kwargs)
 
 pytestmark = pytest.mark.slow
@@ -112,3 +116,22 @@ def test_warm_boot_beats_cold_elastic_on_flash_crowd(seed):
                                                 results["cold"])
     assert warm_pf > 0 and cold_pf == 0  # the mechanism actually engaged
     assert warm_slo > cold_slo
+
+
+# ---------------- PR 8: router-side gang batching ----------------
+
+@pytest.mark.parametrize("seed", [1, 3, 7])
+def test_gang_batching_beats_per_request_dispatch(seed):
+    results = {}
+    for arm in ("gang", "per_request"):
+        cl = make_cluster(**batch_cluster_kwargs(arm),
+                          record_timeseries=False)
+        m = cl.run(batch_mix_workload(seed=seed))
+        results[arm] = m
+    gang, pr = results["gang"], results["per_request"]
+    b = gang.batching
+    assert b["gangs"] > 0 and b["holds"] > 0  # the former actually formed
+    assert b["deadline_overshoot_max"] <= 1e-9
+    assert b["min_hold_slack_s"] > batch_cluster_kwargs("gang")[
+        "batcher"].max_wait
+    assert gang.slo_satisfaction > pr.slo_satisfaction
