@@ -57,6 +57,27 @@ ever dipped below its max-wait (tight-SLO work is never delayed), no
 hold overshot its deadline, and the gang arm's traced latency
 decomposition (now including ``batch_wait``) still conserves to 1e-9.
 
+``--cascade`` adds the query-aware model-cascade axis (shared scenario
+``simtools.CASCADE_MIX``): a hybrid-resolution stream where each request
+carries a hidden difficulty (the minimum model quality that makes its
+output acceptable), served by four fleets at equal tier-weighted GPU
+cost. The ``cascade`` arm is heterogeneous (mostly lite replicas plus
+one base and one max) under ``cascade`` dispatch — every request starts
+on the cheapest tier whose predicted latency fits its slack, and a
+confidence gate escalates under-quality completions to the next tier up
+when the *remaining* slack can still pay for the bigger model (giving up
+and accepting the cheap output otherwise). The homogeneous arms are
+``always_cheap`` (all lite — raw SLO looks perfect, 40% of outputs come
+back under quality), ``always_base`` (the strongest homogeneous
+competitor — still gives up the hard tail) and ``always_big`` (all max —
+every output is good but the fleet drowns at this cost). The headline —
+the cascade beats every homogeneous arm on *quality-adjusted* SLO
+attainment (``slo_quality_attainment``: deadline met AND difficulty
+met) on every seed (>=3 seeds) — is asserted, with structural guards:
+equal fleet cost across arms, escalations actually happened, every tier
+completed work, and the traced cascade arm's latency decomposition (now
+including the ``escalation`` component) conserves to 1e-9.
+
 ``--trace-dir DIR`` runs one traced regime (the crash+checkpoint
 scenario — it exercises requeue, checkpoint and drop paths) with the
 per-request span tracer on and persists three artifacts into DIR:
@@ -107,14 +128,12 @@ from pathlib import Path
 from benchmarks.common import make_cluster
 from repro.cluster import (AutoscalerConfig, CheckpointConfig,
                            FailureConfig, RepartitionConfig, TraceConfig)
-from repro.cluster.simtools import (BATCH_MIX, CACHE_TIER, CRASH_FAULTS,
-                                    FLASH_CROWD, UPDOWN_KNOTS, ZONE_FAULTS,
-                                    batch_cluster_kwargs, batch_mix_workload,
-                                    cachetier_config, cachetier_mean_mix,
-                                    cachetier_workload, cluster_workload,
-                                    flash_crowd_workload, phased_workload,
-                                    piecewise_rate_workload, ramp_workload,
-                                    warmboot_cluster_kwargs)
+from repro.cluster.simtools import (BATCH_MIX, CACHE_TIER, CASCADE_MIX,
+                                    CRASH_FAULTS, FLASH_CROWD, UPDOWN_KNOTS,
+                                    ZONE_FAULTS, cachetier_config,
+                                    cachetier_mean_mix, cascade_fleet_cost,
+                                    cluster_workload, phased_workload,
+                                    piecewise_rate_workload, ramp_workload)
 
 POLICIES = ("round_robin", "join_shortest_queue", "least_slack",
             "resolution_affinity")
@@ -359,7 +378,7 @@ def cachetier_trace(seed):
                           steps=sc["steps"], cache=True, initial_mix=mix0,
                           cache_tier=cachetier_config(cap),
                           record_timeseries=False)
-        m = cl.run(cachetier_workload(seed=seed))
+        m = cl.run(CACHE_TIER.workload(seed))
         s = m.summary()
         out["runs"][tag] = s
         ct = s["cache_tier"]
@@ -400,9 +419,9 @@ def warmboot_trace(seed, n_seeds=3):
     for s in range(seed, seed + n_seeds):
         row = {"seed": s}
         for arm in WARMBOOT_ARMS:
-            cl = make_cluster(**warmboot_cluster_kwargs(arm),
+            cl = make_cluster(**FLASH_CROWD.cluster_kwargs(arm),
                               record_timeseries=False)
-            m = cl.run(flash_crowd_workload(seed=s))
+            m = cl.run(FLASH_CROWD.workload(s))
             summ = m.summary()
             ct = summ["cache_tier"]
             tier = ct.get("tier", {})
@@ -455,9 +474,9 @@ def batching_trace(seed):
                         for k, v in BATCH_MIX.items()}, "runs": {}}
     for arm in BATCHING_ARMS:
         trace = TraceConfig(mode="all", seed=seed) if arm == "gang" else None
-        cl = make_cluster(**batch_cluster_kwargs(arm), trace=trace,
+        cl = make_cluster(**BATCH_MIX.cluster_kwargs(arm), trace=trace,
                           record_timeseries=False)
-        m = cl.run(batch_mix_workload(seed=seed))
+        m = cl.run(BATCH_MIX.workload(seed))
         s = m.summary()
         row = {"slo": s["slo_satisfaction"], "p95": s["latency_p95"],
                "goodput": s["goodput"], "utilization": s["utilization"],
@@ -477,6 +496,74 @@ def batching_trace(seed):
               f"gangs={b.get('gangs', 0)} "
               f"mean_gang={b.get('mean_gang_size', 0.0):.2f} "
               f"holds={b.get('holds', 0)}")
+    return out
+
+
+#: model-cascade arms, homogeneous baselines first; ``cascade_trace``
+#: runs every arm on every seed so the win is per-seed, not an average
+CASCADE_ARMS = ("always_cheap", "always_base", "always_big", "cascade")
+
+
+def cascade_trace(seed, n_seeds=3):
+    """Query-aware model cascade on the shared difficulty-tagged stream
+    (``simtools.CASCADE_MIX``): four fleets at equal tier-weighted GPU
+    cost — three homogeneous (all-lite / all-base / all-max) and the
+    heterogeneous cascade (``cascade`` dispatch + confidence-gated
+    escalation, escalated work re-entering the frontend priced against
+    its remaining slack). Every arm runs under the ``cascade`` policy so
+    the only axis is the fleet shape; the homogeneous fleets simply have
+    no tier to escalate to. The headline — the cascade beats every
+    homogeneous arm on quality-adjusted SLO attainment on *every* seed —
+    is asserted in ``main`` with structural guards (equal cost,
+    escalations happened, every tier served, traced decomposition with
+    the ``escalation`` component conserved)."""
+    sc = CASCADE_MIX
+    fleets = {"cascade": sc["tiers"], **sc["homogeneous"]}
+    out = {"scenario": {
+               "qps": sc["qps"], "duration": sc["duration"],
+               "steps": sc["steps"], "slo_scale": sc["slo_scale"],
+               "difficulties": [list(d) for d in sc["difficulties"]],
+               "fleets": {a: dict(f) for a, f in fleets.items()}},
+           "fleet_cost": {a: cascade_fleet_cost(f)
+                          for a, f in fleets.items()},
+           "seeds": []}
+    for s in range(seed, seed + n_seeds):
+        row = {"seed": s}
+        for arm in CASCADE_ARMS:
+            # trace one cascade run so the escalation span component is
+            # checked for conservation end to end
+            trace = TraceConfig(mode="all", seed=s) \
+                if arm == "cascade" and s == seed else None
+            cl = make_cluster(**CASCADE_MIX.cluster_kwargs(arm),
+                              trace=trace, record_timeseries=False)
+            m = cl.run(CASCADE_MIX.workload(s))
+            summ = m.summary()
+            c = summ["cascade"]
+            row[arm] = {"slo": summ["slo_satisfaction"],
+                        "quality_slo": summ["slo_quality_attainment"],
+                        "p95": summ["latency_p95"],
+                        "goodput": summ["goodput"],
+                        "escalations": c["escalations"],
+                        "give_ups": c["give_ups"],
+                        "escalation_rate": c["escalation_rate"],
+                        "per_tier": c["per_tier"]}
+            if trace is not None:
+                errs = cl.tracer.conservation_errors()
+                row[arm]["conservation_max_err"] = max(
+                    (e for _, e in errs), default=0.0)
+                row[arm]["escalation_total_s"] = round(sum(
+                    sp.comp["escalation"] for sp in cl.tracer.finished), 4)
+            print(f"cascade seed={s} {arm:12s} "
+                  f"quality_slo={row[arm]['quality_slo']:.3f} "
+                  f"slo={row[arm]['slo']:.3f} "
+                  f"esc={row[arm]['escalations']} "
+                  f"giveup={row[arm]['give_ups']}")
+        out["seeds"].append(row)
+    for arm in CASCADE_ARMS:
+        out[f"mean_quality_slo_{arm}"] = round(
+            sum(r[arm]["quality_slo"] for r in out["seeds"]) / n_seeds, 4)
+    print("cascade mean quality slo: " + " ".join(
+        f"{a}={out[f'mean_quality_slo_{a}']:.4f}" for a in CASCADE_ARMS))
     return out
 
 
@@ -578,6 +665,12 @@ def main() -> None:
                          "per-request dispatch on the knee-load hybrid-"
                          "resolution stream (win + eligibility guards "
                          "asserted, traced arm checked for conservation)")
+    ap.add_argument("--cascade", action="store_true",
+                    help="add the query-aware model-cascade comparison: "
+                         "heterogeneous tiered fleet with confidence-gated "
+                         "escalation vs all-lite / all-base / all-max "
+                         "fleets at equal tier-weighted GPU cost, >=3 "
+                         "seeds (per-seed quality-adjusted win asserted)")
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="run one traced regime (crash+checkpoint) and "
                          "write trace.jsonl / trace_chrome.json / "
@@ -636,6 +729,10 @@ def main() -> None:
     if args.batching:
         batching = batching_trace(seed=args.seed)
 
+    cascade = None
+    if args.cascade:
+        cascade = cascade_trace(seed=args.seed)
+
     traced = None
     if args.trace_dir:
         traced = traced_run(args.trace_dir, args.trace_mode,
@@ -676,6 +773,8 @@ def main() -> None:
         out["warmboot"] = warmboot
     if batching is not None:
         out["batching"] = batching
+    if cascade is not None:
+        out["cascade"] = cascade
     if traced is not None:
         out["traced"] = traced
     Path(args.out).write_text(json.dumps(out, indent=1))
@@ -836,6 +935,47 @@ def main() -> None:
                 f"gang-batched dispatch ({gang['slo']:.3f}) lost to "
                 f"per-request dispatch ({pr['slo']:.3f}) at equal fleet "
                 "size on the knee-load stream — batch-former regression?")
+    if cascade is not None:
+        costs = set(cascade["fleet_cost"].values())
+        if len(costs) != 1:
+            raise SystemExit(
+                f"cascade arms are not cost-matched ({cascade['fleet_cost']})"
+                " — the comparison is only fair at equal tier-weighted "
+                "GPU cost (fleet spec regression?)")
+        for row in cascade["seeds"]:
+            cs = row["cascade"]
+            if cs["escalations"] <= 0:
+                raise SystemExit(
+                    f"cascade arm (seed {row['seed']}) never escalated — "
+                    "confidence-gate regression?")
+            if not 0.0 < cs["escalation_rate"] < 1.0:
+                raise SystemExit(
+                    f"cascade escalation rate {cs['escalation_rate']} out "
+                    f"of (0, 1) (seed {row['seed']}) — gate accounting "
+                    "regression?")
+            idle = [t for t, pt in cs["per_tier"].items()
+                    if pt["completed"] <= 0]
+            if idle:
+                raise SystemExit(
+                    f"cascade tiers {idle} completed nothing (seed "
+                    f"{row['seed']}) — tiered dispatch regression?")
+            if cs.get("conservation_max_err", 0.0) > 1e-9:
+                raise SystemExit(
+                    f"traced cascade decomposition broke conservation "
+                    f"(max err {cs['conservation_max_err']:.2e}) — "
+                    "escalation span accounting regression?")
+            for arm in ("always_cheap", "always_base", "always_big"):
+                if cs["quality_slo"] <= row[arm]["quality_slo"]:
+                    raise SystemExit(
+                        f"cascade ({cs['quality_slo']:.3f}) lost to "
+                        f"{arm} ({row[arm]['quality_slo']:.3f}) on "
+                        f"quality-adjusted SLO attainment at equal fleet "
+                        f"cost (seed {row['seed']}) — cascade regression?")
+        tr = cascade["seeds"][0]["cascade"]
+        if tr.get("escalation_total_s", 0.0) <= 0.0:
+            raise SystemExit("traced cascade arm charged no escalation "
+                             "time — escalation spans are not being "
+                             "labeled?")
 
 
 if __name__ == "__main__":

@@ -103,7 +103,7 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                  steps=10, scale=1.0, record_timeseries=True,
                  initial_mix=None, repartition=None, cache=None,
                  failures=None, checkpoint=None, cache_tier=None,
-                 trace=None, batcher=None):
+                 trace=None, batcher=None, tiers=None):
     """Multi-replica sim cluster over the benchmark resolution ladder.
     Engines are synthetic sim (no tensors) with the patch-aware latency
     surrogate; pair with ``repro.cluster.simtools.cluster_workload`` so
@@ -121,7 +121,10 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
     (a ``BatchFormerConfig``) turns on router-side gang batching — the
     former groups patch-compatible frontend work into gangs under
     per-request eligibility windows and each gang's predicted step-cost
-    budget (None keeps per-request dispatch)."""
+    budget (None keeps per-request dispatch); ``tiers`` (a ``{name:
+    count}`` dict over ``repro.cluster.replica.MODEL_TIERS``) builds a
+    heterogeneous model-cascade fleet — replica count comes from the tier
+    counts and ``n_replicas`` is ignored."""
     from repro.cluster import Cluster, ClusterConfig, sim_engine_factory
     from repro.core.latency_model import CacheHitModel
     if cache is True:
@@ -138,4 +141,5 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                                  cache_tier=cache_tier,
                                  trace=trace,
                                  batcher=batcher,
+                                 tiers=tiers,
                                  record_timeseries=record_timeseries))

@@ -12,8 +12,11 @@ per-replica L1 warmth with a shared L2 store and warmth-directed
 ``cache_affinity`` dispatch on a repeat-heavy hybrid-resolution workload —
 the warm-boot elastic fleet: spawns pre-fetch the tier during cold start
 (autoscaler-priced shorter effective cold start) on a flash-crowd spike —
-and fleet tracing: per-request latency decomposition with SLO-violation
-attribution and dispatch-predictor calibration on a crashy regime.
+fleet tracing: per-request latency decomposition with SLO-violation
+attribution and dispatch-predictor calibration on a crashy regime — and
+the query-aware model cascade: a heterogeneous tiered fleet (lite/base/
+max replicas) under ``cascade`` dispatch with confidence-gated
+escalation, against homogeneous fleets at equal tier-weighted GPU cost.
 
 Shows the cluster-level levers on top of the single-engine paper
 reproduction: SLO-aware routing (least_slack), resolution-partitioned
@@ -31,11 +34,11 @@ from repro.cluster import (AutoscalerConfig, CheckpointConfig, Cluster,
                            TraceConfig, cachetier_config,
                            cachetier_mean_mix, cachetier_workload,
                            sim_engine_factory)
-from repro.cluster.simtools import (CACHE_TIER, CRASH_FAULTS, DEFAULT_RES,
-                                    FLASH_CROWD, UPDOWN_KNOTS, ZONE_FAULTS,
-                                    cluster_workload, flash_crowd_workload,
-                                    phased_workload, piecewise_rate_workload,
-                                    ramp_workload, warmboot_cluster_kwargs)
+from repro.cluster.simtools import (CACHE_TIER, CASCADE_MIX, CRASH_FAULTS,
+                                    DEFAULT_RES, FLASH_CROWD, UPDOWN_KNOTS,
+                                    ZONE_FAULTS, cascade_fleet_cost,
+                                    cluster_workload, phased_workload,
+                                    piecewise_rate_workload, ramp_workload)
 from repro.core.latency_model import CacheHitModel
 
 QPS, DURATION, SEED = 48.0, 30.0, 1
@@ -206,7 +209,7 @@ for tag, pol, cap, mix0 in (
                  ClusterConfig(n_replicas=sc["n_replicas"], policy=pol,
                                initial_mix=mix0,
                                cache_tier=cachetier_config(cap)))
-    m = cl.run(cachetier_workload(seed=SEED + 6))
+    m = cl.run(CACHE_TIER.workload(seed=SEED + 6))
     ct = m.summary()["cache_tier"]
     print(f"{tag:30s} slo={m.slo_satisfaction:.3f} "
           f"goodput={m.goodput:6.1f} l1-hit={ct['l1_hit_rate']:.3f} "
@@ -224,12 +227,12 @@ print(f"\nwarm-boot elastic fleet on the flash-crowd spike "
 for tag, arm in (("cold elastic (no tier)", "cold"),
                  ("tier, no spawn prefetch", "noprefetch"),
                  ("warm-boot elastic", "warm")):
-    kw = warmboot_cluster_kwargs(arm)
+    kw = FLASH_CROWD.cluster_kwargs(arm)
     wb_factory = sim_engine_factory(
         DEFAULT_RES, steps=kw.pop("steps"),
         cache=CacheHitModel() if kw.pop("cache") else None)
     cl = Cluster(wb_factory, DEFAULT_RES, ClusterConfig(**kw))
-    m = cl.run(flash_crowd_workload(seed=SEED))
+    m = cl.run(FLASH_CROWD.workload(seed=SEED))
     ct = m.summary()["cache_tier"]
     tier = ct.get("tier", {})
     print(f"{tag:26s} slo={m.slo_satisfaction:.3f} "
@@ -238,6 +241,32 @@ for tag, arm in (("cold elastic (no tier)", "cold"),
           f"prefetches={tier.get('prefetches', 0)} "
           f"l2-writes={tier.get('writes', 0)} "
           f"warm-priced={cl.autoscaler.warm_boot}")
+
+# ---- query-aware model cascade: tiered fleet + escalation ----------------
+sc = CASCADE_MIX
+fleets = {"cascade": sc["tiers"], **sc["homogeneous"]}
+print(f"\nquery-aware model cascade at {sc['qps']:.0f} qps (difficulty mix "
+      f"{[f'{p:.0%}@{d}' for d, p in sc['difficulties']]}): heterogeneous "
+      "tiered fleet + confidence-gated escalation vs homogeneous fleets, "
+      "all at equal tier-weighted GPU cost; quality-slo counts a request "
+      "only if it met its deadline AND its difficulty:")
+casc_factory = sim_engine_factory(DEFAULT_RES, steps=sc["steps"])
+for tag, arm in (("always lite (cheap)", "always_cheap"),
+                 ("always base", "always_base"),
+                 ("always max (big)", "always_big"),
+                 ("cascade + escalation", "cascade")):
+    kw = sc.cluster_kwargs(arm)
+    kw.pop("steps")
+    cl = Cluster(casc_factory, DEFAULT_RES, ClusterConfig(**kw))
+    m = cl.run(sc.workload(seed=SEED))
+    s = m.summary()
+    c = s["cascade"]
+    per_tier = {t: p["completed"] for t, p in c["per_tier"].items()}
+    print(f"{tag:22s} quality-slo={s['slo_quality_attainment']:.3f} "
+          f"slo={m.slo_satisfaction:.3f} "
+          f"cost={cascade_fleet_cost(fleets[arm]):.1f} "
+          f"esc={c['escalations']} give-ups={c['give_ups']} "
+          f"per-tier-completed={per_tier}")
 
 # ---- fleet tracing: where do the SLO misses come from? -------------------
 print("\nfleet tracing on a crashy checkpointed regime (per-request "

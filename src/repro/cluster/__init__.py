@@ -4,11 +4,15 @@ engine (ROADMAP: "serves heavy traffic from millions of users").
 Layers:
 
 - ``replica``    — one engine + cluster-side state (cold start, busy
-                   horizon, utilization, drain-before-switch migration);
+                   horizon, utilization, drain-before-switch migration),
+                   plus the ``ModelTier`` zoo for heterogeneous fleets
+                   (per-tier step cost / output quality / cold start);
 - ``router``     — frontend queue with pluggable dispatch policies
-                   (round_robin / join_shortest_queue / least_slack /
-                   resolution_affinity), the affinity partitioner, and the
-                   windowed arrival-mix tracker for drift detection;
+                   (declarative ``@register_policy`` registry:
+                   round_robin / join_shortest_queue / least_slack /
+                   resolution_affinity / ... / cascade), the affinity
+                   partitioner, and the windowed arrival-mix tracker for
+                   drift detection;
 - ``autoscaler`` — reactive replica scaling from queue-slack and SLO
                    attainment, plus an optional predictive path (Holt
                    arrival-rate forecaster) that pre-spawns ahead of ramps;
@@ -51,26 +55,32 @@ from repro.cluster.autoscaler import (ArrivalForecaster, Autoscaler,
 from repro.cluster.batcher import BatchFormer, BatchFormerConfig
 from repro.cluster.cachetier import (CacheTier, CacheTierConfig, TierClient,
                                      latent_bytes)
-from repro.cluster.driver import (Cluster, ClusterConfig, FailureConfig,
-                                  RepartitionConfig)
+from repro.cluster.driver import (Cluster, ClusterConfig, Escalator,
+                                  FailureConfig, RepartitionConfig)
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
-from repro.cluster.replica import CheckpointConfig, Replica
+from repro.cluster.replica import (MODEL_TIERS, CheckpointConfig, ModelTier,
+                                   Replica, tier_ladder)
 from repro.cluster.router import (POLICIES, CacheAffinity,
-                                  CacheAffinitySpread, DispatchPolicy,
-                                  JoinShortestQueue, LeastSlack, MixTracker,
+                                  CacheAffinitySpread, Cascade,
+                                  DispatchPolicy, JoinShortestQueue,
+                                  LeastSlack, MixTracker,
                                   ResolutionAffinity,
                                   ResolutionAffinitySpread, RoundRobin,
                                   Router, ZoneSpread,
                                   allocate_replica_counts, make_policy,
-                                  mix_drift, partition_resolutions)
+                                  mix_drift, partition_resolutions,
+                                  register_policy)
 from repro.cluster.trace import (COMPONENTS, NULL_TRACER, NullTracer,
                                  TraceConfig, Tracer)
-from repro.cluster.simtools import (BATCH_MIX, DEFAULT_RES,
-                                    PatchAwareLatency, batch_cluster_kwargs,
+from repro.cluster.simtools import (BATCH_MIX, CACHE_TIER, CASCADE_MIX,
+                                    DEFAULT_RES, FLASH_CROWD,
+                                    PatchAwareLatency, Scenario,
+                                    batch_cluster_kwargs,
                                     batch_former_config, batch_mix_workload,
                                     cachetier_config, cachetier_mean_mix,
-                                    cachetier_workload, cluster_workload,
-                                    flash_crowd_workload, phased_workload,
+                                    cachetier_workload, cascade_fleet_cost,
+                                    cluster_workload, flash_crowd_workload,
+                                    phased_workload,
                                     piecewise_rate_workload, ramp_workload,
                                     sim_engine_factory,
                                     standalone_latencies,
@@ -83,14 +93,19 @@ __all__ = [
     "BatchFormer", "BatchFormerConfig", "BATCH_MIX",
     "batch_cluster_kwargs", "batch_former_config", "batch_mix_workload",
     "CacheTier", "CacheTierConfig", "TierClient", "latent_bytes",
-    "CheckpointConfig", "Cluster", "ClusterConfig", "FailureConfig",
+    "CheckpointConfig", "Cluster", "ClusterConfig", "Escalator",
+    "FailureConfig",
     "RepartitionConfig", "ClusterMetrics", "ReplicaReport", "Replica",
+    "ModelTier", "MODEL_TIERS", "tier_ladder",
     "Router", "DispatchPolicy", "RoundRobin", "JoinShortestQueue",
     "LeastSlack", "ResolutionAffinity", "ResolutionAffinitySpread",
-    "ZoneSpread", "CacheAffinity", "CacheAffinitySpread", "POLICIES",
+    "ZoneSpread", "CacheAffinity", "CacheAffinitySpread", "Cascade",
+    "POLICIES", "register_policy",
     "make_policy", "MixTracker", "mix_drift", "partition_resolutions",
     "allocate_replica_counts", "DEFAULT_RES", "PatchAwareLatency",
+    "Scenario", "CACHE_TIER", "CASCADE_MIX", "FLASH_CROWD",
     "cachetier_config", "cachetier_mean_mix", "cachetier_workload",
+    "cascade_fleet_cost",
     "cluster_workload", "flash_crowd_workload", "phased_workload",
     "piecewise_rate_workload", "ramp_workload", "sim_engine_factory",
     "standalone_latencies", "warmboot_autoscaler", "warmboot_cluster_kwargs",

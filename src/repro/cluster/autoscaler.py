@@ -57,9 +57,9 @@ from __future__ import annotations
 import math
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
-from repro.cluster.replica import Replica
+from repro.cluster.replica import ModelTier, Replica
 from repro.cluster.trace import NULL_TRACER
 from repro.core.serving import TickEvents
 
@@ -203,7 +203,12 @@ class Autoscaler:
         self.warm_boot = False
         self._last_action = -1e18
         self._idle_since: Optional[float] = None
-        self._outcomes: Deque[Tuple[float, bool, bool]] = deque()
+        # (t, slo_met, completed, tier name — "" on homogeneous fleets)
+        self._outcomes: Deque[Tuple[float, bool, bool, str]] = deque()
+        # (t, difficulty) of recent arrivals — the cross-tier demand mix
+        self._difficulties: Deque[Tuple[float, float]] = deque()
+        self._mu_tier: Dict[str, float] = {}   # learned req/s/replica, per tier
+        self._tiered = False         # saw tier-tagged outcomes/arrivals
         self.actions: list = []      # (now, +1 | -1) decision log
         self.forecaster = ArrivalForecaster(bin_s=cfg.forecast_bin)
         self.predictive_spawns: List[float] = []   # pre-spawn times
@@ -213,21 +218,37 @@ class Autoscaler:
         self._mu: Optional[float] = None           # learned req/s/replica
 
     # -- signals -----------------------------------------------------------
-    def observe_arrival(self, t: float) -> None:
+    def observe_arrival(self, t: float,
+                        difficulty: Optional[float] = None) -> None:
         """Feed one frontend arrival (its arrival timestamp) to the
-        forecaster. The driver calls this as it delivers arrivals."""
+        forecaster. The driver calls this as it delivers arrivals; on a
+        tiered fleet it also passes the request's ``difficulty`` so the
+        cross-tier split can track the demand mix."""
         self.forecaster.observe(t)
+        if difficulty is not None:
+            self._tiered = True
+            self._difficulties.append((t, difficulty))
+            horizon = t - self.cfg.window
+            while self._difficulties and self._difficulties[0][0] < horizon:
+                self._difficulties.popleft()
 
-    def observe(self, now: float, events: Sequence[TickEvents]) -> None:
+    def observe(self, now: float, events: Sequence[TickEvents],
+                tiers: Optional[Sequence[str]] = None) -> None:
         """Fold a tick's completions/drops into the attainment window.
-        Entries are (t, slo_met, completed): drops count against attainment
-        but are not served throughput."""
-        for ev in events:
+        Entries are (t, slo_met, completed, tier): drops count against
+        attainment but are not served throughput. ``tiers`` (driver-passed
+        on tiered fleets) tags each event with its replica's tier name so
+        per-tier service rates can be learned."""
+        for i, ev in enumerate(events):
+            tag = tiers[i] if tiers is not None else ""
+            if tag:
+                self._tiered = True
             for r in ev.completed:
                 self._outcomes.append(
-                    (now, r.finish is not None and r.finish <= r.slo, True))
+                    (now, r.finish is not None and r.finish <= r.slo, True,
+                     tag))
             for r in ev.dropped:
-                self._outcomes.append((now, False, False))
+                self._outcomes.append((now, False, False, tag))
         horizon = now - self.cfg.window
         while self._outcomes and self._outcomes[0][0] < horizon:
             self._outcomes.popleft()
@@ -235,7 +256,8 @@ class Autoscaler:
     def attainment(self) -> Optional[float]:
         if not self._outcomes:
             return None
-        return sum(met for _, met, _ in self._outcomes) / len(self._outcomes)
+        return sum(met for _, met, _, _ in self._outcomes) \
+            / len(self._outcomes)
 
     # -- capacity estimate (predictive path) -------------------------------
     def service_rate(self) -> Optional[float]:
@@ -261,7 +283,7 @@ class Autoscaler:
         capacity, not demand)."""
         if not ready or backlog < 0.5 * self.cfg.scale_up_backlog:
             return
-        done = sum(1 for _, _, completed in self._outcomes if completed)
+        done = sum(1 for _, _, completed, _ in self._outcomes if completed)
         if not done:
             return
         span = now - self._outcomes[0][0]
@@ -269,6 +291,109 @@ class Autoscaler:
             return                # too little evidence: rate would explode
         rate = done / min(span, self.cfg.window) / ready
         self._mu = rate if self._mu is None else 0.7 * self._mu + 0.3 * rate
+
+    def _learn_tier_rates(self, now: float, backlog: float,
+                          pool: Sequence[Replica]) -> None:
+        """Per-tier EWMA of completions/s per ready replica of that tier —
+        the same saturation-gated estimator as ``_learn_service_rate``,
+        split by the tier tag ``observe`` recorded with each outcome."""
+        if backlog < 0.5 * self.cfg.scale_up_backlog or not self._outcomes:
+            return
+        span = now - self._outcomes[0][0]
+        if span < self.cfg.forecast_bin:
+            return
+        ready: Dict[str, int] = {}
+        for r in pool:
+            if r.model_tier is not None and r.ready_at <= now:
+                ready[r.model_tier.name] = ready.get(r.model_tier.name,
+                                                     0) + 1
+        done: Dict[str, int] = {}
+        for _, _, completed, tag in self._outcomes:
+            if completed and tag:
+                done[tag] = done.get(tag, 0) + 1
+        for name, d in done.items():
+            n = ready.get(name, 0)
+            if not n:
+                continue
+            rate = d / min(span, self.cfg.window) / n
+            prev = self._mu_tier.get(name)
+            self._mu_tier[name] = rate if prev is None \
+                else 0.7 * prev + 0.3 * rate
+
+    # -- cross-tier split (heterogeneous fleets) ---------------------------
+    def _tier_rate(self, tier: ModelTier) -> float:
+        """Best per-replica throughput estimate for ``tier``: learned
+        per-tier rate, else the fleet rate scaled by the tier's step cost,
+        else the step-cost reciprocal (right *relative* weights even with
+        no throughput evidence at all)."""
+        mu = self._mu_tier.get(tier.name)
+        if mu:
+            return mu
+        base = self.service_rate()
+        if base:
+            return base / tier.step_cost
+        return 1.0 / tier.step_cost
+
+    def _demand_weights(self, ladder: Sequence[ModelTier]
+                        ) -> Dict[str, float]:
+        """Replica-demand weight per tier: the windowed arrival-difficulty
+        mix mapped to the cheapest satisfying tier, divided by that tier's
+        service rate (a tier serving 20% of arrivals at half speed needs as
+        many replicas as one serving 40% at full speed). Uniform shares
+        when no difficulties have been observed yet."""
+        shares = {t.name: 0.0 for t in ladder}
+        if self._difficulties:
+            for _, d in self._difficulties:
+                tier = next((t for t in ladder if t.quality >= d),
+                            ladder[-1])
+                shares[tier.name] += 1.0
+            total = sum(shares.values())
+            shares = {n: s / total for n, s in shares.items()}
+        else:
+            shares = {t.name: 1.0 / len(ladder) for t in ladder}
+        return {t.name: shares[t.name] / max(self._tier_rate(t), 1e-9)
+                for t in ladder}
+
+    def spawn_tier(self, now: float, ladder: Sequence[ModelTier],
+                   replicas: Sequence[Replica]) -> ModelTier:
+        """Which tier the +1 the driver is about to execute should spawn
+        into: the tier whose demand-weighted target count exceeds its
+        current count by the most (ties: cheaper tier — a wrong cheap
+        spawn costs less)."""
+        pool = [r for r in replicas
+                if not r.retiring and r.retired_at is None
+                and r.model_tier is not None]
+        counts = {t.name: 0 for t in ladder}
+        for r in pool:
+            counts[r.model_tier.name] = counts.get(r.model_tier.name, 0) + 1
+        weights = self._demand_weights(ladder)
+        total_w = sum(weights.values()) or 1.0
+        target = len(pool) + 1
+        deficits = {t.name: weights[t.name] / total_w * target
+                    - counts[t.name] for t in ladder}
+        return max(ladder, key=lambda t: (deficits[t.name], -t.step_cost))
+
+    def retire_tier(self, now: float, ladder: Sequence[ModelTier],
+                    replicas: Sequence[Replica]) -> Optional[ModelTier]:
+        """Which tier the -1 should retire from: the tier most
+        over-provisioned against the demand mix, among tiers that can lose
+        a replica without emptying (the driver enforces the last-of-tier
+        guard regardless). None when no tier has two replicas."""
+        pool = [r for r in replicas
+                if not r.retiring and r.retired_at is None
+                and r.model_tier is not None]
+        counts = {t.name: 0 for t in ladder}
+        for r in pool:
+            counts[r.model_tier.name] = counts.get(r.model_tier.name, 0) + 1
+        cands = [t for t in ladder if counts[t.name] >= 2]
+        if not cands:
+            return None
+        weights = self._demand_weights(ladder)
+        total_w = sum(weights.values()) or 1.0
+        target = max(len(pool) - 1, 1)
+        surplus = {t.name: counts[t.name]
+                   - weights[t.name] / total_w * target for t in ladder}
+        return max(cands, key=lambda t: (surplus[t.name], t.step_cost))
 
     def effective_cold_start(self) -> float:
         """The cold start the predictive path prices spawns with: the
@@ -295,6 +420,8 @@ class Autoscaler:
         if cfg.predictive:
             n_ready = sum(1 for r in pool if r.ready_at <= now)
             self._learn_service_rate(now, backlog, n_ready)
+        if self._tiered:
+            self._learn_tier_rates(now, backlog, pool)
 
         idle = (backlog < cfg.scale_down_backlog and frontend_depth == 0
                 and (att is None or att >= cfg.scale_down_attainment))

@@ -64,8 +64,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.cluster.trace import NULL_TRACER
 
 Resolution = Tuple[int, int]
-#: (resolution, gcd patch size, step band) — the unit of transferable warmth
-CacheKey = Tuple[Resolution, int, int]
+#: (resolution, gcd patch size, step band, model-tier tag) — the unit of
+#: transferable warmth. The tier tag ("" on homogeneous fleets) keeps
+#: warmth per-(tier, resolution): a lite replica's warm patch content says
+#: nothing about the max model's activations, so entries only ever flow
+#: between replicas running the same model tier.
+CacheKey = Tuple[Resolution, int, int, str]
 
 
 def latent_bytes(resolution: Resolution, channels: int = 4,
@@ -340,6 +344,10 @@ class TierClient:
         self.cfg = cfg or tier.cfg
         self.rid = rid
         self.patch = patch              # kept in sync by the owning Replica
+        # model-tier tag in every key this client touches ("" when the
+        # fleet is homogeneous); set by Replica.attach_tier on tiered
+        # fleets so warmth never crosses tiers
+        self.model_tier = ""
         self._l1: "OrderedDict[CacheKey, _L1State]" = OrderedDict()
         self.stats = {"l1_hits": 0, "l2_fetches": 0, "cold_misses": 0,
                       "publishes": 0, "fetch_time": 0.0, "write_time": 0.0,
@@ -355,7 +363,8 @@ class TierClient:
 
     def _key(self, req) -> CacheKey:
         return (tuple(req.resolution), self.patch,
-                self.band_of(req.steps_done, req.total_steps))
+                self.band_of(req.steps_done, req.total_steps),
+                self.model_tier)
 
     def _weight(self, key: CacheKey) -> float:
         """Warmth in [0, 1] of one key: fraction of the warmup served."""
@@ -394,7 +403,7 @@ class TierClient:
         """Mean warmth across this resolution's step bands at the current
         patch — the ``cache_affinity`` dispatch signal."""
         res = tuple(resolution)
-        return sum(self._weight((res, self.patch, b))
+        return sum(self._weight((res, self.patch, b, self.model_tier))
                    for b in range(self.cfg.step_bands)) / self.cfg.step_bands
 
     # ---------------- effectful transition (one executed step) -----------
@@ -419,7 +428,8 @@ class TierClient:
         keys: "OrderedDict[CacheKey, None]" = OrderedDict()
         for r in stepped_reqs:
             band = self.band_of(max(r.steps_done - 1, 0), r.total_steps)
-            keys.setdefault((tuple(r.resolution), self.patch, band))
+            keys.setdefault((tuple(r.resolution), self.patch, band,
+                             self.model_tier))
         extra = 0.0
         publishes: List[CacheKey] = []
         self.stats["steps_priced"] += 1
@@ -494,8 +504,9 @@ class TierClient:
         want = {tuple(r) for r in resolutions}
         picked: List[CacheKey] = []
         for key in self.tier.committed_keys():
-            res, patch, _band = key
-            if patch == self.patch and tuple(res) in want:
+            res, patch, _band, tag = key
+            if patch == self.patch and tag == self.model_tier \
+                    and tuple(res) in want:
                 picked.append(key)
                 if len(picked) >= cfg.l1_entries:
                     break

@@ -99,6 +99,7 @@ sweeps build them with ``sim_synthetic=True`` (see
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
@@ -106,14 +107,15 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.requests import Request
+from repro.core.serving import TickEvents
 from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
 from repro.cluster.batcher import BatchFormer, BatchFormerConfig
 from repro.cluster.cachetier import (CacheTier, CacheTierConfig, TierClient,
                                      aggregate_client_stats)
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
-from repro.cluster.replica import CheckpointConfig, Replica
-from repro.cluster.router import (AFFINITY_POLICIES, ZONE_AWARE_POLICIES,
-                                  MixTracker, Router,
+from repro.cluster.replica import (MODEL_TIERS, CheckpointConfig, ModelTier,
+                                   Replica, tier_ladder)
+from repro.cluster.router import (MixTracker, Router,
                                   allocate_replica_counts, make_policy,
                                   mix_drift, partition_resolutions)
 from repro.cluster.trace import NULL_TRACER, TraceConfig, Tracer
@@ -169,6 +171,12 @@ class FailureConfig:
     #                                      per zone (None: no outages)
     zone_downtime: float = 6.0       # seconds a zone stays down per outage
     max_zone_outages: Optional[int] = None   # stop injecting after this many
+    # probability that a due zone outage is a *partial degradation* instead
+    # of a wipe: replicas in the zone keep serving their in-flight work but
+    # accept no new dispatches until the zone recovers (think: network
+    # brown-out / control-plane loss, not host death). 0.0 (default) keeps
+    # every outage a full wipe, bit-identical with earlier behavior.
+    zone_degrade_prob: float = 0.0
     seed: int = 0                    # RNG seed for every failure draw
 
 
@@ -185,7 +193,16 @@ class ClusterConfig:
     #                                  join_shortest_queue / least_slack /
     #                                  resolution_affinity / zone_spread /
     #                                  resolution_affinity_spread /
-    #                                  cache_affinity[_spread])
+    #                                  cache_affinity[_spread] / cascade)
+    # heterogeneous model cascade: tier name -> replica count, each name a
+    # ``replica.MODEL_TIERS`` entry (e.g. {"lite": 2, "base": 1, "max": 1}).
+    # When set, the fleet size is the sum of the counts (``n_replicas`` is
+    # ignored), every replica serves the full resolution ladder at its
+    # tier's step cost, and the driver installs the escalation gate: an
+    # under-quality completion re-enters the frontend targeted at the next
+    # tier up when its remaining slack can cover the re-run. None (default)
+    # keeps the homogeneous fleet bit-identical.
+    tiers: Optional[Dict[str, int]] = None
     # elasticity: reactive + predictive scaling (None: fixed fleet)
     autoscaler: Optional[AutoscalerConfig] = None
     # resolution mix the initial affinity partition is provisioned for
@@ -215,6 +232,102 @@ class ClusterConfig:
     max_events: int = 2_000_000        # runaway-loop backstop (sim events)
 
 
+class Escalator:
+    """Confidence gate for tiered fleets (the cascade's second half; the
+    ``cascade`` dispatch policy is the first). Installed by the driver into
+    every replica: ``Replica.tick`` hands it each tick's completions, and
+    any completion whose tier quality falls short of the request's
+    difficulty is either **escalated** — pulled back out of the completed
+    set (its engine-metrics completion retracted), reset to step 0, floored
+    at the next tier up (``Request.min_quality``), and scheduled to
+    re-enter the frontend at the completion instant — or **given up on**:
+    the cheap output is accepted as-is when no higher tier exists or the
+    request's *remaining* slack cannot cover a full re-run anywhere
+    upstream. Escalation is priced against remaining slack honestly: the
+    re-run is predicted with the target replicas' own tier-scaled latency
+    surrogates plus their current backlogs.
+
+    Runs tracer-independent (it never emits events itself), so headline
+    metrics are bit-identical with tracing on or off."""
+
+    def __init__(self, cluster: "Cluster"):
+        self.cluster = cluster
+        self.escalations = 0         # completions sent up a tier
+        self.give_ups = 0            # had a tier above, but slack too tight
+        self.quality_unmet = 0       # under-quality outputs accepted as-is
+        self.slo_met_low_quality = 0  # ...of which met their latency SLO
+        self.gate_checks = 0         # completions the gate inspected
+        self._seq = 0                # heap tie-break (stable FIFO order)
+
+    def _next_tier(self, tier: ModelTier) -> Optional[ModelTier]:
+        ladder = self.cluster._tier_ladder
+        for i, t in enumerate(ladder):
+            if t.name == tier.name:
+                return ladder[i + 1] if i + 1 < len(ladder) else None
+        return None
+
+    def _fits(self, req: Request, floor: ModelTier, end: float) -> bool:
+        """Can any live replica of quality >= ``floor`` finish a full
+        re-run of ``req`` inside its remaining slack? Priced exactly like
+        ``Replica.predicted_finish`` — backlog ahead of it plus its steps
+        at the candidate's own (tier-scaled) predicted step latency — but
+        from the escalation instant and for the full denoise (escalation
+        restarts at step 0 on the bigger model)."""
+        best = None
+        for rep in self.cluster.replicas:
+            if rep.retired_at is not None or rep.retiring:
+                continue
+            t = rep.model_tier
+            if t is None or t.quality < floor.quality \
+                    or not rep.supports(req.resolution):
+                continue
+            eng = rep.engine
+            t0 = max(end, rep.ready_at)
+            pf = t0 + rep.backlog(end) \
+                + eng._predict_step_latency(eng.active + [req]) \
+                * req.total_steps
+            if best is None or pf < best:
+                best = pf
+        return best is not None and best <= req.slo
+
+    def intercept(self, rep: Replica, ev: TickEvents) -> List[Request]:
+        """Gate ``ev.completed`` in place; returns the requests escalated
+        this tick (already scheduled for frontend re-entry)."""
+        tier = rep.model_tier
+        if tier is None:
+            return []
+        end = ev.end
+        out: List[Request] = []
+        for req in list(ev.completed):
+            self.gate_checks += 1
+            if tier.quality >= req.difficulty:
+                continue             # confident: output accepted
+            nxt = self._next_tier(tier)
+            if nxt is not None and self._fits(req, nxt, end):
+                ev.completed.remove(req)
+                rep._retract_completion(req, end)
+                req.state = "waiting"
+                req.steps_done = 0
+                req.latent = None
+                req.text = None
+                req.finish = None
+                req.min_quality = nxt.quality
+                self.escalations += 1
+                self._seq += 1
+                heapq.heappush(self.cluster._esc_pending,
+                               (end, self._seq, req))
+                out.append(req)
+            else:
+                # no tier above, or remaining slack cannot cover the
+                # re-run: accept the under-quality output as final
+                self.quality_unmet += 1
+                if end <= req.slo:
+                    self.slo_met_low_quality += 1
+                if nxt is not None:
+                    self.give_ups += 1
+        return out
+
+
 class Cluster:
     def __init__(self, engine_factory: EngineFactory,
                  resolutions: Sequence[Resolution], cfg: ClusterConfig):
@@ -222,8 +335,36 @@ class Cluster:
         self.resolutions = sorted({tuple(r) for r in resolutions})
         self.cfg = cfg
         self.policy = make_policy(cfg.policy)
-        self._affinity = self.policy.name in AFFINITY_POLICIES
-        self._zone_aware = self.policy.name in ZONE_AWARE_POLICIES
+        # capability flags come from the policy registry (declared by
+        # @register_policy), not string-set membership
+        self._affinity = self.policy.affinity
+        self._zone_aware = self.policy.zone_aware
+        # heterogeneous model cascade: resolve zoo names -> ModelTier, keep
+        # the ladder (cheap-to-expensive) as the escalation order
+        self.tiers: Dict[str, int] = dict(cfg.tiers) if cfg.tiers else {}
+        self._tier_ladder: List[ModelTier] = []
+        self._escalator: Optional[Escalator] = None
+        self._esc_pending: List[Tuple[float, int, Request]] = []
+        if self.tiers:
+            unknown = sorted(n for n in self.tiers if n not in MODEL_TIERS)
+            if unknown:
+                raise ValueError(
+                    f"unknown model tier(s) {unknown}; available: "
+                    f"{sorted(MODEL_TIERS)}")
+            if any(c < 1 for c in self.tiers.values()):
+                raise ValueError("every tier count must be >= 1")
+            if self._affinity:
+                raise ValueError(
+                    "model tiers and resolution-affinity partitioning are "
+                    "mutually exclusive (tiered replicas serve the full "
+                    "ladder so any tier can take any resolution)")
+            self._tier_ladder = tier_ladder(
+                MODEL_TIERS[n] for n in self.tiers)
+            self._escalator = Escalator(self)
+        if self.policy.needs_tier and not self.tiers:
+            raise ValueError(
+                f"policy {self.policy.name!r} requires a tiered fleet — "
+                "set ClusterConfig.tiers")
         # event bus / span tracer (must exist before the first _spawn and
         # before router/autoscaler/tier wiring below). Denoise-band
         # sub-decomposition aligns with the tier's step bands when a tier
@@ -250,6 +391,8 @@ class Cluster:
                 raise ValueError(
                     "zone outages need zones >= 2 (a 1-zone outage is just "
                     "a fleet wipe; set mtbf for independent crashes)")
+            if not 0.0 <= fcfg.zone_degrade_prob <= 1.0:
+                raise ValueError("zone_degrade_prob must be in [0, 1]")
         self._failure_rng = np.random.default_rng(
             fcfg.seed) if fcfg else None
         # fleet patch-cache tier (must exist before the first _spawn below
@@ -274,6 +417,10 @@ class Cluster:
         # down-until horizon, and the recurrent outage schedule
         self._zone_counter = 0
         self._zone_down_until: Dict[int, float] = {}
+        # partial degradation: zone -> recovery instant. A degraded zone's
+        # replicas stay alive and finish in-flight work but take no new
+        # dispatches (Replica.dispatchable, refreshed each event).
+        self._zone_degraded_until: Dict[int, float] = {}
         self._zone_outage_at: Dict[int, float] = {}
         self._n_zone_outages = 0
         self.zone_outage_log: List[dict] = []
@@ -319,11 +466,19 @@ class Cluster:
                 self._blocks if self._affinity else partition_resolutions(
                     self.resolutions, len(self.resolutions)))
             self.router.former = self.former
-        for block, c in zip(self._blocks, counts):
-            for _ in range(c):
-                self._spawn(block, now=0.0, cold=0.0)
+        if self.tiers:
+            # tiered fleets: every replica serves the full ladder at its
+            # tier's step cost; spawn cheap-to-expensive for stable rids
+            for tier in self._tier_ladder:
+                for _ in range(self.tiers[tier.name]):
+                    self._spawn(list(self.resolutions), now=0.0, cold=0.0,
+                                tier=tier)
+        else:
+            for block, c in zip(self._blocks, counts):
+                for _ in range(c):
+                    self._spawn(block, now=0.0, cold=0.0)
         # drift-/resize-triggered repartitioning state
-        self._built_k = cfg.n_replicas   # fleet size the blocks were cut for
+        self._built_k = len(self.replicas)  # fleet size blocks were cut for
         self.mix_tracker: Optional[MixTracker] = None
         self._migration_queue: Deque[Tuple[Replica, List[Resolution]]] = \
             deque()
@@ -340,6 +495,9 @@ class Cluster:
 
     def _zone_down(self, zone: int, now: float) -> bool:
         return self._zone_down_until.get(zone, -1e18) > now
+
+    def _zone_degraded(self, zone: int, now: float) -> bool:
+        return self._zone_degraded_until.get(zone, -1e18) > now
 
     def _assign_zone(self, block: Sequence[Resolution], now: float) -> int:
         """Fault domain for a new replica. Blind (default): round-robin over
@@ -362,7 +520,8 @@ class Cluster:
             occ = {z: 0 for z in range(zones)}
             for r in self._dispatchable():
                 occ[r.zone] += 1
-            live = [z for z in range(zones) if not self._zone_down(z, now)]
+            live = [z for z in range(zones) if not self._zone_down(z, now)
+                    and not self._zone_degraded(z, now)]
             if live and max(occ.values()) - min(occ[z] for z in live) >= 2:
                 # drifted lopsided: place where live occupancy is lowest
                 # (round-robin drift is at most 1, so a gap of 2+ is real)
@@ -370,7 +529,8 @@ class Cluster:
             z = self._zone_counter % zones
             self._zone_counter += 1
             return z
-        live = [z for z in range(zones) if not self._zone_down(z, now)]
+        live = [z for z in range(zones) if not self._zone_down(z, now)
+                and not self._zone_degraded(z, now)]
         cand = live or list(range(zones))
         want = {tuple(r) for r in block}
         in_block: Dict[int, int] = {z: 0 for z in cand}
@@ -383,18 +543,34 @@ class Cluster:
         return min(cand, key=lambda z: (in_block[z], total[z], z))
 
     def _spawn(self, resolutions: Sequence[Resolution], now: float,
-               cold: float, cause: str = "init") -> Replica:
+               cold: float, cause: str = "init",
+               tier: Optional[ModelTier] = None) -> Replica:
         eng = self.make_engine(list(resolutions))
         if eng.cfg.clock != "sim":
             raise ValueError("cluster driver requires sim-clock engines")
+        if tier is not None:
+            # tier the engine's latency surrogate: every predicted AND
+            # executed step costs step_cost x the baseline. Standalone
+            # latencies (SLO normalizers) stay baseline on purpose — an
+            # SLO means the same thing on every tier.
+            lm = getattr(eng, "latency_model", None)
+            if lm is not None and hasattr(lm, "scale"):
+                lm.scale = lm.scale * tier.step_cost
+            else:
+                base = eng._predict_step_latency
+                eng._predict_step_latency = \
+                    lambda reqs, _b=base, _c=tier.step_cost: _b(reqs) * _c
         zone = self._assign_zone(resolutions, now)
         if self._zone_down(zone, now):
             # blindly placed into a dead zone: the instance cannot boot
             # until the zone recovers, so cold start only begins then
             cold += self._zone_down_until[zone] - now
         rep = Replica(self._next_rid, eng, spawn_at=now, cold_start=cold,
-                      zone=zone, checkpoint=self.cfg.checkpoint)
+                      zone=zone, checkpoint=self.cfg.checkpoint,
+                      model_tier=tier)
         rep.tracer = self.tracer
+        rep.escalator = self._escalator
+        rep.dispatchable = not self._zone_degraded(zone, now)
         if self.cache_tier is not None:
             client = TierClient(self.cache_tier, rep.rid)
             rep.attach_tier(client)
@@ -429,6 +605,17 @@ class Cluster:
 
     def _scale_up(self, now: float) -> None:
         cold = self.autoscaler.cfg.cold_start if self.autoscaler else 0.0
+        if self.tiers:
+            # cross-tier split: the autoscaler picks the tier with the
+            # largest demand deficit from the windowed arrival-difficulty
+            # mix and the learned per-tier service rates; the spawn pays
+            # that tier's own cold start (weight load scales with size)
+            tier = self.autoscaler.spawn_tier(
+                now, self._tier_ladder, self._dispatchable()) \
+                if self.autoscaler else self._tier_ladder[0]
+            self._spawn(list(self.resolutions), now=now,
+                        cold=tier.cold_start, cause="scale_up", tier=tier)
+            return
         if self._affinity:
             # join the partition block with the worst backlog per server
             # (uncovered blocks first)
@@ -464,6 +651,25 @@ class Cluster:
                     frozenset(tuple(x) for x in r.resolutions), []).append(r)
             cands = [r for grp in by_block.values() if len(grp) > 1
                      for r in grp]
+        if self.tiers:
+            # never retire a tier's last replica: the cascade ladder would
+            # lose a rung (escalations above it become give-ups, and the
+            # arrival mix it serves has nowhere cheaper to go)
+            by_tier: Dict[str, List[Replica]] = {}
+            for r in cands:
+                if r.model_tier is not None:
+                    by_tier.setdefault(r.model_tier.name, []).append(r)
+            cands = [r for grp in by_tier.values() if len(grp) > 1
+                     for r in grp]
+            if cands and self.autoscaler is not None:
+                # retire from the tier the difficulty mix says is most
+                # over-provisioned, when it has a legal victim
+                pick = self.autoscaler.retire_tier(
+                    now, self._tier_ladder, self._dispatchable())
+                if pick is not None:
+                    narrowed = [r for r in cands
+                                if r.model_tier.name == pick.name]
+                    cands = narrowed or cands
         if not cands:
             return False
         victim = min(cands, key=lambda r: (r.queue_depth, r.backlog(now),
@@ -495,6 +701,24 @@ class Cluster:
                 del self._zone_outage_at[z]
                 continue
             self._n_zone_outages += 1
+            if fcfg.zone_degrade_prob > 0.0 and float(
+                    self._zone_rng.uniform()) < fcfg.zone_degrade_prob:
+                # partial degradation: the zone's replicas stay alive and
+                # finish what they hold, but take no new dispatches until
+                # recovery (Replica.dispatchable, refreshed per event).
+                # The draw only happens when the knob is on, so the
+                # default outage stream stays bit-identical.
+                self._zone_degraded_until[z] = t + fcfg.zone_downtime
+                self._zone_outage_at[z] = t + fcfg.zone_downtime + float(
+                    self._zone_rng.exponential(fcfg.zone_mtbf))
+                self.zone_outage_log.append({
+                    "t": round(t, 3), "zone": z, "killed": 0,
+                    "degraded": True,
+                    "down_until": round(t + fcfg.zone_downtime, 3)})
+                if self.tracer.enabled:
+                    self.tracer.zone_outage(t, z, 0, t + fcfg.zone_downtime,
+                                            degraded=True)
+                continue
             self._zone_down_until[z] = t + fcfg.zone_downtime
             # next outage only after the zone is back up — a down zone
             # cannot fail again, and non-overlapping intervals keep the
@@ -588,12 +812,19 @@ class Cluster:
             if fcfg.recover and not was_retiring:
                 cold = fcfg.cold_start
                 if cold is None:
-                    cold = self.autoscaler.cfg.cold_start \
-                        if self.autoscaler else 2.0
+                    # tier-specific boot when the dead replica was tiered
+                    # (a bigger model reloads slower); explicit
+                    # FailureConfig.cold_start always wins
+                    if rep.model_tier is not None:
+                        cold = rep.model_tier.cold_start
+                    else:
+                        cold = self.autoscaler.cfg.cold_start \
+                            if self.autoscaler else 2.0
                 cap = self.autoscaler.cfg.max_replicas \
                     if self.autoscaler else None
                 if cap is None or len(self._dispatchable()) < cap:
-                    self._spawn(block, now=t, cold=cold, cause="recovery")
+                    self._spawn(block, now=t, cold=cold, cause="recovery",
+                                tier=rep.model_tier)
                     self._recoveries += 1
                     replaced = True
             cause = "zone" if zone_kill else "crash"
@@ -776,7 +1007,7 @@ class Cluster:
         now = start
         events = 0
 
-        while pending or self.router.queue \
+        while pending or self.router.queue or self._esc_pending \
                 or any(r.has_work for r in self.replicas):
             events += 1
             if events > self.cfg.max_events:
@@ -789,11 +1020,32 @@ class Cluster:
                 if self.mix_tracker is not None:
                     self.mix_tracker.observe(req.arrival, req.resolution)
                 if self.autoscaler:
-                    self.autoscaler.observe_arrival(req.arrival)
+                    self.autoscaler.observe_arrival(
+                        req.arrival,
+                        difficulty=req.difficulty if self.tiers else None)
+                progress = True
+
+            # escalations re-enter the frontend at their completion
+            # instant (straight into the queue — their trace span is still
+            # open, so no second enqueue event; re-entries are not new
+            # arrivals for the forecaster or the mix tracker either)
+            while self._esc_pending and self._esc_pending[0][0] <= now:
+                _, _, req = heapq.heappop(self._esc_pending)
+                self.router.queue.append(req)
                 progress = True
 
             if self._maybe_fail(now):
                 progress = True
+
+            if self._zone_degraded_until:
+                # refresh per-replica dispatchability against the degraded
+                # zones; pruning expired entries last means recovery still
+                # gets one refresh pass that re-opens the zone's replicas
+                for rep in self.replicas:
+                    rep.dispatchable = not self._zone_degraded(rep.zone, now)
+                for z in [z for z, u in self._zone_degraded_until.items()
+                          if u <= now]:
+                    del self._zone_degraded_until[z]
 
             if self.cache_tier is not None:
                 # commit due in-flight L2 writes — after the crash pass, so
@@ -834,15 +1086,21 @@ class Cluster:
                 progress = True
 
             ticked = []
+            ticked_tiers: List[str] = []
             for rep in self.replicas:
                 if (rep.retired_at is None and rep.ready_at <= now
                         and rep.next_free <= now and rep.has_work):
                     ev = rep.tick(now)
                     ticked.append(ev)
+                    ticked_tiers.append(rep.model_tier.name
+                                        if rep.model_tier else "")
                     if ev.stepped or ev.admitted or ev.dropped:
                         progress = True
             if self.autoscaler and ticked:
-                self.autoscaler.observe(now, ticked)
+                if self.tiers:
+                    self.autoscaler.observe(now, ticked, tiers=ticked_tiers)
+                else:
+                    self.autoscaler.observe(now, ticked)
 
             if self.cfg.record_timeseries:
                 mts.queue_ts.append((
@@ -857,12 +1115,17 @@ class Cluster:
             nxt = []
             if pending:
                 nxt.append(pending[0].arrival)
+            if self._esc_pending:
+                nxt.append(self._esc_pending[0][0])
             for rep in self.replicas:
                 if rep.retired_at is None and rep.has_work:
                     nxt.append(max(rep.next_free, rep.ready_at))
             if self.router.queue:
                 nxt.extend(rep.ready_at for rep in self._dispatchable()
                            if rep.ready_at > now)
+                # a degraded zone re-opening may unblock parked dispatches
+                nxt.extend(u for u in self._zone_degraded_until.values()
+                           if u > now)
                 if self.autoscaler:
                     nxt.append(max(
                         self.autoscaler._last_action
@@ -943,7 +1206,34 @@ class Cluster:
                 resolutions=[tuple(r) for r in rep.resolutions],
                 busy_time=rep.busy_time, alive_time=rep.alive_span(now),
                 migrations=rep.migrations,
-                failed=rep.failed_at is not None, zone=rep.zone)
+                failed=rep.failed_at is not None, zone=rep.zone,
+                tier=rep.model_tier.name if rep.model_tier else None)
+        if self._escalator is not None:
+            esc = self._escalator
+            per_tier = {}
+            for tier in self._tier_ladder:
+                reps = [r for r in self.replicas if r.model_tier is not None
+                        and r.model_tier.name == tier.name]
+                alive = sum(r.alive_span(now) for r in reps)
+                busy = sum(r.busy_time for r in reps)
+                per_tier[tier.name] = {
+                    "replicas": len(reps),
+                    "completed": sum(r.merged_metrics.completed
+                                     for r in reps),
+                    "utilization": round(busy / alive, 4) if alive else 0.0,
+                    "quality": tier.quality,
+                    "step_cost": tier.step_cost,
+                }
+            mts.cascade = {
+                "escalations": esc.escalations,
+                "give_ups": esc.give_ups,
+                "quality_unmet": esc.quality_unmet,
+                "slo_met_low_quality": esc.slo_met_low_quality,
+                "gate_checks": esc.gate_checks,
+                "escalation_rate": round(
+                    esc.escalations / max(esc.gate_checks, 1), 4),
+                "per_tier": per_tier,
+            }
         return mts
 
     def _zone_availability(self, start: float, end: float) -> Dict[int, float]:
@@ -954,6 +1244,9 @@ class Cluster:
             return {}
         down = {z: 0.0 for z in range(fcfg.zones)}
         for e in self.zone_outage_log:
+            if e.get("degraded"):
+                continue             # degraded zones are up (just closed
+                #                      to new dispatches), not down
             t0 = max(e["t"], start)
             t1 = min(e["down_until"], end)
             if t1 > t0:

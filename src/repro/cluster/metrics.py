@@ -10,7 +10,7 @@ thrashes replicas shows up as poor utilization rather than being hidden.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -27,6 +27,7 @@ class ReplicaReport:
     migrations: int = 0                # affinity-block switches survived
     failed: bool = False               # killed by failure injection
     zone: int = 0                      # fault domain (driver-assigned)
+    tier: Optional[str] = None         # model tier name (tiered fleets)
 
     @property
     def utilization(self) -> float:
@@ -87,6 +88,10 @@ class ClusterMetrics:
     attribution: dict = field(default_factory=dict)
     predictor: dict = field(default_factory=dict)
     trace_events: int = 0
+    # heterogeneous model cascade (ClusterConfig.tiers): escalation gate
+    # counters + per-tier replica/throughput/utilization breakdown
+    # (driver-built). None when the fleet is homogeneous.
+    cascade: Optional[dict] = None
 
     # -- fleet aggregates --------------------------------------------------
     @property
@@ -106,6 +111,17 @@ class ClusterMetrics:
     def slo_satisfaction(self) -> float:
         total = self.completed + self.dropped
         return self.slo_met / total if total else 1.0
+
+    @property
+    def slo_quality_attainment(self) -> float:
+        """Fraction of requests that met their latency SLO *with* output
+        quality at or above their difficulty. On a homogeneous fleet this
+        equals ``slo_satisfaction``; on a cascade it discounts completions
+        the confidence gate gave up on (cheap output accepted under
+        quality) — the headline an always-cheap fleet cannot game."""
+        low_q = self.cascade["slo_met_low_quality"] if self.cascade else 0
+        total = self.completed + self.dropped
+        return (self.slo_met - low_q) / total if total else 1.0
 
     @property
     def goodput(self) -> float:
@@ -212,8 +228,13 @@ class ClusterMetrics:
                     "migrations": rep.migrations,
                     "failed": rep.failed,
                     "zone": rep.zone,
+                    **({"tier": rep.tier} if rep.tier is not None else {}),
                 } for rid, rep in sorted(self.per_replica.items())},
         }
+        if self.cascade is not None:
+            out["cascade"] = self.cascade
+            out["slo_quality_attainment"] = round(
+                self.slo_quality_attainment, 4)
         if self.batching:
             out["batching"] = self.batching
         if self.attribution:

@@ -41,6 +41,53 @@ from repro.core.serving import Metrics, PatchedServeEngine, TickEvents
 from repro.cluster.trace import NULL_TRACER
 
 
+@dataclass(frozen=True)
+class ModelTier:
+    """One rung of the heterogeneous-fleet model ladder (DiffServe-style
+    cascade, PAPERS.md) — the same named-instance zoo shape as
+    ``repro.configs`` (``SHAPES`` / ``SCHEDULES``).
+
+    - ``step_cost``  — denoise step latency multiplier vs. the baseline
+      model the SLOs are normalized against; it is also the tier's GPU-cost
+      weight (a 2x-slower model is a 2x-bigger model), which is what the
+      cascade benchmark's equal-cost fleets are balanced in.
+    - ``quality``    — output quality score in (0, 1]; a completion
+      satisfies a request iff ``quality >= request.difficulty``. The
+      driver's confidence gate escalates the rest.
+    - ``cold_start`` — tier-specific boot (weight load + compile) charged
+      to scale-up spawns and crash replacements of this tier."""
+    name: str
+    step_cost: float
+    quality: float
+    cold_start: float
+
+    def __post_init__(self) -> None:
+        if self.step_cost <= 0:
+            raise ValueError("step_cost must be > 0")
+        if not 0.0 < self.quality <= 1.0:
+            raise ValueError("quality must be in (0, 1]")
+        if self.cold_start < 0:
+            raise ValueError("cold_start must be >= 0")
+
+
+#: the model-tier zoo: a distilled/turbo cheap tier, the baseline, and a
+#: large high-fidelity tier. step_cost doubles per rung (the usual
+#: parameter-count spread); quality is the tier's CLIP/FID-style score
+#: rescaled to (0, 1] so it composes with Request.difficulty directly.
+MODEL_TIERS: Dict[str, ModelTier] = {
+    "lite": ModelTier("lite", step_cost=0.5, quality=0.55, cold_start=1.0),
+    "base": ModelTier("base", step_cost=1.0, quality=0.80, cold_start=2.0),
+    "max": ModelTier("max", step_cost=2.0, quality=1.00, cold_start=4.0),
+}
+
+
+def tier_ladder(tiers) -> List[ModelTier]:
+    """Distinct tiers sorted cheap-to-expensive (by quality, then cost) —
+    the escalation order: 'next tier up' is the next entry."""
+    return sorted({t for t in tiers},
+                  key=lambda t: (t.quality, t.step_cost, t.name))
+
+
 @dataclass
 class CheckpointConfig:
     """Partial-progress checkpointing of in-flight requests.
@@ -90,13 +137,24 @@ class Replica:
     def __init__(self, rid: int, engine: PatchedServeEngine,
                  spawn_at: float = 0.0, cold_start: float = 0.0,
                  zone: int = 0,
-                 checkpoint: Optional[CheckpointConfig] = None):
+                 checkpoint: Optional[CheckpointConfig] = None,
+                 model_tier: Optional[ModelTier] = None):
         self.rid = rid
         self.engine = engine
         self.spawn_at = spawn_at
         self.ready_at = spawn_at + cold_start
         self.next_free = self.ready_at
         self.zone = zone                      # fault domain (driver-assigned)
+        #: model tier on a heterogeneous fleet (None = untiered). The
+        #: engine's latency model is already tier-scaled by the driver;
+        #: this records identity for dispatch/escalation/metrics.
+        self.model_tier = model_tier
+        #: cleared by the driver while this replica's zone is partially
+        #: degraded (serves in-flight work, receives no new dispatches)
+        self.dispatchable = True
+        #: driver-installed confidence gate (tiered fleets): intercepts
+        #: engine completions in tick() for escalation to the next tier up
+        self.escalator = None
         self.retiring = False                 # drains, accepts nothing new
         self.retired_at: Optional[float] = None
         self.crash_at: Optional[float] = None  # scheduled failure injection
@@ -148,6 +206,9 @@ class Replica:
         client's warmth."""
         self.tier = client
         client.patch = self.patch
+        # L1/L2 warmth is keyed per-(model tier, resolution): a lite
+        # replica's warm patches say nothing about a max replica's
+        client.model_tier = self.model_tier.name if self.model_tier else ""
         self._attach_tier_to_engine()
 
     def _attach_tier_to_engine(self) -> None:
@@ -263,6 +324,15 @@ class Replica:
                 dt += tier_cost
             self.busy_time += dt
             self.next_free = now + dt
+            escalated: List[Request] = []
+            if self.escalator is not None and ev.completed:
+                # confidence gate: under-quality completions whose
+                # remaining slack covers a re-run at the next tier up are
+                # pulled out of ev.completed (their completion retracted
+                # from the engine's metrics) and re-enter the frontend at
+                # the step end. Runs tracer-independent — headline metrics
+                # are bit-identical with tracing on or off.
+                escalated = self.escalator.intercept(self, ev)
             if tr.enabled:
                 for r in ev.dropped:
                     tr.drop(r, now, "replica", rep=self)
@@ -271,6 +341,8 @@ class Replica:
                 tr.step(self, now, ev.dt, ckpt_cost, tier_cost, stepped)
                 if ckpt_wrote:
                     tr.checkpoint_write(self, now, ckpt_wrote, ckpt_cost)
+                for r in escalated:
+                    tr.escalate(r, ev.end, self.rid, r.min_quality)
                 for r in ev.completed:
                     # finish is the engine step end (ckpt/tier cost extends
                     # the replica's busy horizon, not the request's finish)
@@ -283,6 +355,23 @@ class Replica:
             for r in ev.completed:
                 tr.complete(r, self, ev.end)
         return ev
+
+    def _retract_completion(self, req: Request, end: float) -> None:
+        """Reverse the completion the engine just recorded for ``req`` at
+        ``end`` (escalation: the cheap-tier output was rejected, so the
+        request is still in flight for every fleet metric). The engine
+        appended this completion's latency on this very tick, so removal
+        is exact — latency values for equal (end, arrival) are
+        interchangeable."""
+        m = self.engine.metrics
+        m.completed -= 1
+        if end <= req.slo:
+            m.slo_met -= 1
+        lat = end - req.arrival
+        for i in range(len(m.latencies) - 1, -1, -1):
+            if m.latencies[i] == lat:
+                del m.latencies[i]
+                break
 
     def _write_checkpoints(self) -> float:
         """Snapshot every active request whose progress since its last

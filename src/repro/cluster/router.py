@@ -22,6 +22,12 @@ resolution-aware placement — see PAPERS.md):
                            in-flight work. The driver also places this
                            policy's replicas (and crash replacements)
                            zone-balanced, avoiding zones that are down.
+- ``cascade``            — query-aware model cascade over a tiered fleet
+                           (``ClusterConfig.tiers``): each request goes to
+                           the cheapest model tier whose predicted finish
+                           fits its SLO slack; confidence-gated cheap-tier
+                           completions re-enter the queue targeted at the
+                           next tier up (see ``docs/CASCADE.md``).
 - ``resolution_affinity_spread`` — affinity partitioning *plus* the zone
                            spreading above: each resolution block's
                            replicas land in distinct zones where possible,
@@ -175,21 +181,59 @@ def allocate_replica_counts(blocks: Sequence[Sequence[Resolution]], k: int,
 
 # ---------------- dispatch policies --------------------------------------
 
+#: name -> policy class; populated by ``@register_policy``. The driver and
+#: ``make_policy`` consume this — adding a policy is one decorator, no
+#: parallel string sets to keep in sync.
+POLICIES: Dict[str, type] = {}
+
+
+def register_policy(name: str, *, zone_aware: bool = False,
+                    affinity: bool = False, needs_tier: bool = False):
+    """Class decorator registering a dispatch policy under ``name`` with
+    its capability flags:
+
+    - ``affinity``   — the driver builds this policy's replicas over
+      partitioned resolution blocks (one engine per block -> larger GCD
+      patch).
+    - ``zone_aware`` — the driver places replicas zone-balanced and steers
+      crash replacements away from down zones.
+    - ``needs_tier`` — the policy dispatches on per-replica ``ModelTier``
+      state; the driver refuses to build it without a tiered fleet
+      (``ClusterConfig.tiers``).
+
+    The string API stays: ``ClusterConfig.policy`` / ``make_policy(name)``
+    resolve through the registry, and the legacy ``AFFINITY_POLICIES`` /
+    ``ZONE_AWARE_POLICIES`` sets below are derived views of it."""
+    def deco(cls):
+        cls.name = name
+        cls.zone_aware = zone_aware
+        cls.affinity = affinity
+        cls.needs_tier = needs_tier
+        POLICIES[name] = cls
+        return cls
+    return deco
+
+
 class DispatchPolicy:
     name = "base"
+    # capability flags consulted by the driver (set by @register_policy)
+    zone_aware = False
+    affinity = False
+    needs_tier = False
 
     def _candidates(self, req: Request, replicas: Sequence[Replica],
                     now: float) -> List[Replica]:
         return [r for r in replicas
-                if r.ready(now) and r.supports(req.resolution)]
+                if r.ready(now) and r.dispatchable
+                and r.supports(req.resolution)]
 
     def select(self, req: Request, replicas: Sequence[Replica],
                now: float) -> Optional[Replica]:
         raise NotImplementedError
 
 
+@register_policy("round_robin")
 class RoundRobin(DispatchPolicy):
-    name = "round_robin"
 
     def __init__(self) -> None:
         self._i = 0
@@ -203,8 +247,8 @@ class RoundRobin(DispatchPolicy):
         return rep
 
 
+@register_policy("join_shortest_queue")
 class JoinShortestQueue(DispatchPolicy):
-    name = "join_shortest_queue"
 
     def select(self, req, replicas, now):
         cands = self._candidates(req, replicas, now)
@@ -214,11 +258,11 @@ class JoinShortestQueue(DispatchPolicy):
                                          r.rid))
 
 
+@register_policy("least_slack")
 class LeastSlack(DispatchPolicy):
     """Max-remaining-slack placement: each candidate replica prices the
     request with its own latency predictor (scheduler.admission_slack) and
     the request goes where it keeps the most slack."""
-    name = "least_slack"
 
     def select(self, req, replicas, now):
         cands = self._candidates(req, replicas, now)
@@ -228,22 +272,24 @@ class LeastSlack(DispatchPolicy):
                                          -r.queue_depth, -r.rid))
 
 
+@register_policy("resolution_affinity", affinity=True)
 class ResolutionAffinity(JoinShortestQueue):
     """Placement is decided at replica-construction time (the driver builds
     replicas over ``partition_resolutions`` blocks), so ``supports`` already
     restricts candidates to the request's block; within the block this is
     shortest-queue."""
-    name = "resolution_affinity"
 
 
+@register_policy("zone_spread", zone_aware=True)
 class ZoneSpread(DispatchPolicy):
     """Fault-domain-aware dispatch: candidates are ranked by how much
     outstanding work their *zone* already holds (queued + active across
     every live replica in it, candidate or not), then shortest-queue within
     the zone. Spreading outstanding work across fault domains bounds what a
     single correlated zone outage can orphan; the driver pairs this with
-    zone-balanced placement so capacity itself is spread too."""
-    name = "zone_spread"
+    zone-balanced placement so capacity itself is spread too. Candidates
+    inherit the base ``dispatchable`` filter, so a partially degraded zone
+    (serving in-flight work, rejecting new dispatches) is skipped."""
 
     def select(self, req, replicas, now):
         cands = self._candidates(req, replicas, now)
@@ -258,6 +304,7 @@ class ZoneSpread(DispatchPolicy):
                                          r.rid))
 
 
+@register_policy("cache_affinity")
 class CacheAffinity(DispatchPolicy):
     """Cache-warmth-directed dispatch for fleets running the shared patch
     cache tier (``repro.cluster.cachetier``): among candidates whose queue
@@ -268,7 +315,6 @@ class CacheAffinity(DispatchPolicy):
     locality from herding a burst onto one warm replica; without tier state
     (or when every candidate is equally cold) warmth ties and the policy
     degrades to join-shortest-queue exactly."""
-    name = "cache_affinity"
     max_imbalance = 2                   # queue-depth slack traded for warmth
 
     def _pool(self, cands: Sequence[Replica]) -> List[Replica]:
@@ -285,6 +331,7 @@ class CacheAffinity(DispatchPolicy):
                                   -r.queue_depth, -r.backlog(now), -r.rid))
 
 
+@register_policy("cache_affinity_spread", zone_aware=True)
 class CacheAffinitySpread(CacheAffinity):
     """Cache-warmth dispatch composed with fault-domain spreading: warmth
     still leads (it is the tier's whole point), but ties — a burst of a
@@ -292,7 +339,6 @@ class CacheAffinitySpread(CacheAffinity):
     break toward the zone holding the least outstanding work, then
     shortest-queue. The driver places this policy's spawns and crash
     replacements zone-balanced like ``zone_spread``."""
-    name = "cache_affinity_spread"
 
     def select(self, req, replicas, now):
         cands = self._candidates(req, replicas, now)
@@ -308,6 +354,8 @@ class CacheAffinitySpread(CacheAffinity):
                                   -r.queue_depth, -r.backlog(now), -r.rid))
 
 
+@register_policy("resolution_affinity_spread", affinity=True,
+                 zone_aware=True)
 class ResolutionAffinitySpread(ZoneSpread):
     """Affinity partitioning with fault-domain spreading: ``supports``
     restricts candidates to the request's resolution block (the driver
@@ -316,26 +364,49 @@ class ResolutionAffinitySpread(ZoneSpread):
     least-loaded zone. The driver additionally places each block's replicas
     across distinct zones, so an outage degrades every resolution a little
     instead of silencing one entirely."""
-    name = "resolution_affinity_spread"
 
 
-POLICIES = {p.name: p for p in
-            (RoundRobin, JoinShortestQueue, LeastSlack, ResolutionAffinity,
-             ZoneSpread, ResolutionAffinitySpread, CacheAffinity,
-             CacheAffinitySpread)}
+@register_policy("cascade", needs_tier=True)
+class Cascade(DispatchPolicy):
+    """Query-aware model cascade over a heterogeneous (tiered) fleet
+    (DiffServe, PAPERS.md): every replica carries a ``ModelTier`` (step
+    cost multiplier x quality score) and the request goes to the cheapest
+    tier whose predicted finish fits its SLO — within that tier,
+    shortest-queue. When no tier fits, the request goes wherever it is
+    predicted to finish soonest (best effort beats queueing forever).
 
-#: policies whose replicas the driver builds over partitioned resolution
-#: blocks (one engine per block -> larger GCD patch). cache_affinity is
-#: deliberately NOT here: its replicas stay uniform (full ladder, full
-#: flexibility) and specialization emerges from warmth-directed dispatch
-#: instead of a frozen partition.
-AFFINITY_POLICIES = frozenset({"resolution_affinity",
-                               "resolution_affinity_spread"})
+    Escalated requests (``req.min_quality`` > 0, set by the driver's
+    confidence gate when a cheap-tier completion was not good enough) only
+    consider tiers of at least that quality, so the re-run lands at the
+    next tier up — or any tier above it, if the next one is saturated and
+    a bigger one fits the remaining slack."""
 
-#: policies for which the driver places replicas zone-balanced and steers
-#: crash replacements away from zones that are currently down
-ZONE_AWARE_POLICIES = frozenset({"zone_spread", "resolution_affinity_spread",
-                                 "cache_affinity_spread"})
+    def select(self, req, replicas, now):
+        cands = [r for r in self._candidates(req, replicas, now)
+                 if r.model_tier is not None
+                 and r.model_tier.quality >= req.min_quality]
+        if not cands:
+            return None
+        by_tier: Dict[Tuple[float, float, str], List[Replica]] = {}
+        for r in cands:
+            t = r.model_tier
+            by_tier.setdefault((t.step_cost, t.quality, t.name),
+                               []).append(r)
+        for key in sorted(by_tier):
+            best = min(by_tier[key],
+                       key=lambda r: (r.queue_depth, r.backlog(now), r.rid))
+            if best.predicted_finish(req, now) <= req.slo:
+                return best
+        return min(cands,
+                   key=lambda r: (r.predicted_finish(req, now), r.rid))
+
+
+#: legacy derived views of the registry, kept for back-compat — the driver
+#: now consults the capability flags on the policy instance instead
+AFFINITY_POLICIES = frozenset(
+    n for n, p in POLICIES.items() if p.affinity)
+ZONE_AWARE_POLICIES = frozenset(
+    n for n, p in POLICIES.items() if p.zone_aware)
 
 
 def make_policy(name: str) -> DispatchPolicy:

@@ -13,7 +13,10 @@ thing fleet-wide regardless of how replicas are partitioned.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, Iterator, KeysView, List, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -37,6 +40,74 @@ DEFAULT_RES: List[Resolution] = [(16, 16), (24, 24), (32, 32)]
 #: tuning notes: predictive wins need a visible trend, not a step).
 UPDOWN_KNOTS: List[Tuple[float, float]] = [(0.0, 8.0), (35.0, 140.0),
                                            (65.0, 6.0)]
+
+
+@dataclass
+class Scenario:
+    """One shared benchmark regime as a single object: the scenario
+    constants, the workload builder, the per-arm fleet configurations
+    (``benchmarks.common.make_cluster`` kwargs), the seeds the win is
+    asserted on, and a one-line statement of what the headline arm must
+    beat. Consolidates the helper *pairs* that used to grow alongside
+    each regime dict (``<regime>_workload`` + ``<regime>_cluster_kwargs``)
+    so the benchmark, the example and the regression tests keep running
+    literally the same fleets by construction.
+
+    A ``Scenario`` also speaks the mapping protocol over ``params``
+    (``sc["qps"]``, ``sc.items()``, ``{**sc}`` ...), so code written
+    against the old plain-dict regimes keeps working unchanged.
+    """
+    name: str
+    params: Dict[str, object]
+    workload_fn: Callable[[int], List[Request]]
+    arm_fns: Dict[str, Callable[[], dict]] = field(default_factory=dict)
+    seeds: Tuple[int, ...] = (0, 1, 2)
+    win: str = ""
+
+    # -- the consolidated helper pair -----------------------------------
+    def workload(self, seed: int = 0) -> List[Request]:
+        """The shared workload (regenerate per run — ``Request`` objects
+        mutate while served)."""
+        return self.workload_fn(seed)
+
+    def cluster_kwargs(self, arm: str) -> dict:
+        """``benchmarks.common.make_cluster`` kwargs for one arm."""
+        try:
+            fn = self.arm_fns[arm]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.name} arm {arm!r} "
+                f"(have {sorted(self.arm_fns)})") from None
+        return fn()
+
+    @property
+    def arms(self) -> List[str]:
+        return list(self.arm_fns)
+
+    # -- mapping protocol over params (plain-dict back-compat) ----------
+    def __getitem__(self, key: str):
+        return self.params[key]
+
+    def __contains__(self, key: object) -> bool:
+        return key in self.params
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.params)
+
+    def __len__(self) -> int:
+        return len(self.params)
+
+    def keys(self) -> KeysView[str]:
+        return self.params.keys()
+
+    def values(self):
+        return self.params.values()
+
+    def items(self):
+        return self.params.items()
+
+    def get(self, key: str, default=None):
+        return self.params.get(key, default)
 
 #: fault-tolerance reference scenarios, shared by the ``--faults`` sweep,
 #: the example and the tests so the regimes they validate cannot silently
@@ -66,18 +137,42 @@ ZONE_FAULTS = {"qps": 104.0, "duration": 40.0, "n_replicas": 6,
 #: (``cache_affinity``) retargets the whole uniform fleet each phase,
 #: cold recruits warming instantly from the fleet tier instead of from
 #: scratch.
-CACHE_TIER = {"phases": [(15.0, 160.0, (0.9, 0.05, 0.05)),
-                         (15.0, 75.0, (0.075, 0.075, 0.85)),
-                         (15.0, 160.0, (0.9, 0.05, 0.05))],
-              "n_replicas": 4, "steps": 12, "slo_scale": 5.0}
-
-
-def cachetier_workload(seed: int = 0) -> List[Request]:
-    """The shared repeat-heavy hybrid-resolution workload (regenerate per
-    run — Request objects mutate while served)."""
+def _cachetier_workload(seed: int = 0) -> List[Request]:
     sc = CACHE_TIER
     return phased_workload(list(sc["phases"]), steps=sc["steps"],
                            slo_scale=sc["slo_scale"], seed=seed)
+
+
+def _cachetier_arm(arm: str) -> dict:
+    """Headline pair of the cachetier regime: ``no_tier`` (cache_affinity
+    dispatch, identical L1 warmth dynamics, no fleet L2 — the dispatch-only
+    ablation) vs ``tier`` (the full fleet patch-cache tier)."""
+    cap = {"no_tier": 0, "tier": None}[arm]
+    sc = CACHE_TIER
+    return dict(n_replicas=sc["n_replicas"], policy="cache_affinity",
+                steps=sc["steps"], cache=True,
+                cache_tier=cachetier_config(cap))
+
+
+CACHE_TIER = Scenario(
+    name="cachetier",
+    params={"phases": [(15.0, 160.0, (0.9, 0.05, 0.05)),
+                       (15.0, 75.0, (0.075, 0.075, 0.85)),
+                       (15.0, 160.0, (0.9, 0.05, 0.05))],
+            "n_replicas": 4, "steps": 12, "slo_scale": 5.0},
+    workload_fn=_cachetier_workload,
+    arm_fns={"no_tier": lambda: _cachetier_arm("no_tier"),
+             "tier": lambda: _cachetier_arm("tier")},
+    win="fleet patch-cache tier + cache_affinity dispatch beats the best "
+        "no-tier PR-4 policy on fleet SLO satisfaction")
+
+
+def cachetier_workload(seed: int = 0) -> List[Request]:
+    """Deprecated thin wrapper — use ``CACHE_TIER.workload(seed)``."""
+    warnings.warn("cachetier_workload() is deprecated; use "
+                  "CACHE_TIER.workload(seed)", DeprecationWarning,
+                  stacklevel=2)
+    return CACHE_TIER.workload(seed)
 
 
 def cachetier_mean_mix() -> Tuple[float, ...]:
@@ -121,21 +216,50 @@ def cachetier_config(capacity_bytes: Optional[int] = None):
 #: request is equally dead in all arms and warmth cannot move attainment).
 #: Duplicate-time knots express the step edges
 #: (``piecewise_rate_workload`` keeps their order).
-FLASH_CROWD = {"knots": [(0.0, 14.0), (10.0, 14.0), (10.0, 200.0),
-                         (25.0, 200.0), (25.0, 14.0), (35.0, 14.0)],
-               "mix": (0.85, 0.10, 0.05),
-               "steps": 12, "slo_scale": 12.0,
-               "n_replicas": 2, "max_replicas": 6, "cold_start": 2.0,
-               "cooldown": 1.0, "service_rate": 35.0}
-
-
-def flash_crowd_workload(seed: int = 0) -> List[Request]:
-    """The shared flash-crowd spike workload (regenerate per run — Request
-    objects mutate while served)."""
+def _flash_crowd_workload(seed: int = 0) -> List[Request]:
     sc = FLASH_CROWD
     return piecewise_rate_workload(list(sc["knots"]), mix=sc["mix"],
                                    steps=sc["steps"],
                                    slo_scale=sc["slo_scale"], seed=seed)
+
+
+def _warmboot_arm(arm: str) -> dict:
+    if arm == "cold":
+        tier = warmboot_tier_config(prefetch=False, capacity_bytes=0)
+    elif arm == "noprefetch":
+        tier = warmboot_tier_config(prefetch=False)
+    elif arm == "warm":
+        tier = warmboot_tier_config(prefetch=True)
+    else:
+        raise ValueError(f"unknown warmboot arm {arm!r}")
+    sc = FLASH_CROWD
+    return dict(n_replicas=sc["n_replicas"], policy="cache_affinity",
+                autoscaler=warmboot_autoscaler(), steps=sc["steps"],
+                cache=True, cache_tier=tier)
+
+
+FLASH_CROWD = Scenario(
+    name="warmboot",
+    params={"knots": [(0.0, 14.0), (10.0, 14.0), (10.0, 200.0),
+                      (25.0, 200.0), (25.0, 14.0), (35.0, 14.0)],
+            "mix": (0.85, 0.10, 0.05),
+            "steps": 12, "slo_scale": 12.0,
+            "n_replicas": 2, "max_replicas": 6, "cold_start": 2.0,
+            "cooldown": 1.0, "service_rate": 35.0},
+    workload_fn=_flash_crowd_workload,
+    arm_fns={"cold": lambda: _warmboot_arm("cold"),
+             "noprefetch": lambda: _warmboot_arm("noprefetch"),
+             "warm": lambda: _warmboot_arm("warm")},
+    win="tier-warmed elastic fleet beats the cold elastic fleet on fleet "
+        "SLO satisfaction on every seed")
+
+
+def flash_crowd_workload(seed: int = 0) -> List[Request]:
+    """Deprecated thin wrapper — use ``FLASH_CROWD.workload(seed)``."""
+    warnings.warn("flash_crowd_workload() is deprecated; use "
+                  "FLASH_CROWD.workload(seed)", DeprecationWarning,
+                  stacklevel=2)
+    return FLASH_CROWD.workload(seed)
 
 
 def warmboot_tier_config(prefetch: bool = True,
@@ -179,23 +303,13 @@ def warmboot_autoscaler(warm_boot_factor: float = 0.5):
 
 
 def warmboot_cluster_kwargs(arm: str) -> dict:
-    """``benchmarks.common.make_cluster`` kwargs for one flash-crowd arm:
-    ``"warm"`` (tier + spawn prefetch), ``"noprefetch"`` (tier, spawns
-    boot cold — the ablation), ``"cold"`` (no fleet L2 at all; identical
-    L1 warmth dynamics). Shared so the benchmark, the example and the
-    regression tests run literally the same fleets."""
-    if arm == "cold":
-        tier = warmboot_tier_config(prefetch=False, capacity_bytes=0)
-    elif arm == "noprefetch":
-        tier = warmboot_tier_config(prefetch=False)
-    elif arm == "warm":
-        tier = warmboot_tier_config(prefetch=True)
-    else:
-        raise ValueError(f"unknown warmboot arm {arm!r}")
-    sc = FLASH_CROWD
-    return dict(n_replicas=sc["n_replicas"], policy="cache_affinity",
-                autoscaler=warmboot_autoscaler(), steps=sc["steps"],
-                cache=True, cache_tier=tier)
+    """Deprecated thin wrapper — use ``FLASH_CROWD.cluster_kwargs(arm)``
+    (arms: ``"warm"`` tier + spawn prefetch, ``"noprefetch"`` tier with
+    cold-booting spawns — the ablation, ``"cold"`` no fleet L2 at all)."""
+    warnings.warn("warmboot_cluster_kwargs() is deprecated; use "
+                  "FLASH_CROWD.cluster_kwargs(arm)", DeprecationWarning,
+                  stacklevel=2)
+    return FLASH_CROWD.cluster_kwargs(arm)
 
 
 #: gang-batching reference scenario, shared by the ``--batching`` sweep
@@ -210,19 +324,47 @@ def warmboot_cluster_kwargs(arm: str) -> dict:
 #: insight applied at fleet scale. ``max_wait`` spends only surplus
 #: admission slack (``slo_scale`` leaves several step-times of headroom);
 #: ``max_step_cost`` caps how much one gang may slow the shared step.
-BATCH_MIX = {"qps": 105.0, "duration": 25.0, "n_replicas": 4, "steps": 10,
-             "slo_scale": 8.0, "mix": (1 / 3, 1 / 3, 1 / 3),
-             "policy": "join_shortest_queue",
-             "max_wait": 0.06, "max_step_cost": 0.060}
-
-
-def batch_mix_workload(seed: int = 0) -> List[Request]:
-    """The shared gang-batching hybrid-resolution workload (regenerate per
-    run — Request objects mutate while served)."""
+def _batch_mix_workload(seed: int = 0) -> List[Request]:
     sc = BATCH_MIX
     return cluster_workload(sc["qps"], sc["duration"], steps=sc["steps"],
                             slo_scale=sc["slo_scale"], mix=sc["mix"],
                             seed=seed)
+
+
+def _batch_arm(arm: str) -> dict:
+    if arm == "per_request":
+        former = None
+    elif arm == "nowait":
+        former = batch_former_config(max_wait=0.0)
+    elif arm == "gang":
+        former = batch_former_config()
+    else:
+        raise ValueError(f"unknown batching arm {arm!r}")
+    sc = BATCH_MIX
+    return dict(n_replicas=sc["n_replicas"], policy=sc["policy"],
+                steps=sc["steps"], cache=True, batcher=former)
+
+
+BATCH_MIX = Scenario(
+    name="batching",
+    params={"qps": 105.0, "duration": 25.0, "n_replicas": 4, "steps": 10,
+            "slo_scale": 8.0, "mix": (1 / 3, 1 / 3, 1 / 3),
+            "policy": "join_shortest_queue",
+            "max_wait": 0.06, "max_step_cost": 0.060},
+    workload_fn=_batch_mix_workload,
+    arm_fns={"per_request": lambda: _batch_arm("per_request"),
+             "nowait": lambda: _batch_arm("nowait"),
+             "gang": lambda: _batch_arm("gang")},
+    win="batch-former gang dispatch beats per-request dispatch at equal "
+        "fleet size on fleet SLO satisfaction")
+
+
+def batch_mix_workload(seed: int = 0) -> List[Request]:
+    """Deprecated thin wrapper — use ``BATCH_MIX.workload(seed)``."""
+    warnings.warn("batch_mix_workload() is deprecated; use "
+                  "BATCH_MIX.workload(seed)", DeprecationWarning,
+                  stacklevel=2)
+    return BATCH_MIX.workload(seed)
 
 
 def batch_former_config(max_wait: Optional[float] = None):
@@ -238,22 +380,81 @@ def batch_former_config(max_wait: Optional[float] = None):
 
 
 def batch_cluster_kwargs(arm: str) -> dict:
-    """``benchmarks.common.make_cluster`` kwargs for one gang-batching arm:
-    ``per_request`` (no former), ``nowait`` (former with ``max_wait=0.0`` —
-    gangs only what is simultaneously queued, never deliberately waits) or
-    ``gang`` (the full former). Shared so the benchmark and the regression
-    tests run literally the same fleets."""
-    if arm == "per_request":
-        former = None
-    elif arm == "nowait":
-        former = batch_former_config(max_wait=0.0)
-    elif arm == "gang":
-        former = batch_former_config()
-    else:
-        raise ValueError(f"unknown batching arm {arm!r}")
-    sc = BATCH_MIX
-    return dict(n_replicas=sc["n_replicas"], policy=sc["policy"],
-                steps=sc["steps"], cache=True, batcher=former)
+    """Deprecated thin wrapper — use ``BATCH_MIX.cluster_kwargs(arm)``
+    (arms: ``"per_request"`` no former, ``"nowait"`` former with
+    ``max_wait=0.0`` — the ablation, ``"gang"`` the full former)."""
+    warnings.warn("batch_cluster_kwargs() is deprecated; use "
+                  "BATCH_MIX.cluster_kwargs(arm)", DeprecationWarning,
+                  stacklevel=2)
+    return BATCH_MIX.cluster_kwargs(arm)
+
+
+# -- query-aware model cascade ------------------------------------------
+#
+# Hybrid-resolution Poisson stream where each request carries a hidden
+# *difficulty* (the minimum model quality that makes its output
+# acceptable): most requests are easy enough for a distilled cheap model,
+# a quarter need the base model, a hard tail needs the largest one. Four
+# fleets at equal tier-weighted GPU cost (fleet cost = sum of replica
+# ``ModelTier.step_cost``): the cascade (mostly-lite fleet with one base
+# and one max replica, ``cascade`` dispatch + confidence-gated
+# escalation), ``always_cheap`` (all lite — huge raw capacity, but 40% of
+# requests come back under quality), ``always_base`` (the strongest
+# homogeneous competitor — still gives up on the hard tail) and
+# ``always_big`` (all max — every output is good, but at this cost the
+# fleet drowns in its own service time). The headline metric is
+# *quality-adjusted* SLO attainment (``slo_quality_attainment``): met the
+# deadline AND met the request's difficulty — the number an always-cheap
+# fleet cannot game. ``slo_scale`` leaves room for an escalated request
+# to pay two (or three) passes plus queueing; the qps sits inside the
+# cascade's work capacity but ~2x over always_big's.
+def _cascade_workload(seed: int = 0) -> List[Request]:
+    sc = CASCADE_MIX
+    reqs = cluster_workload(sc["qps"], sc["duration"], steps=sc["steps"],
+                            slo_scale=sc["slo_scale"], seed=seed)
+    levels, probs = zip(*sc["difficulties"])
+    # separate stream so difficulty is i.i.d. of arrival order/resolution
+    rng = np.random.default_rng(seed + 7919)
+    for req, i in zip(reqs, rng.choice(len(levels), size=len(reqs),
+                                       p=np.asarray(probs, np.float64))):
+        req.difficulty = float(levels[i])
+    return reqs
+
+
+def _cascade_arm(arm: str) -> dict:
+    sc = CASCADE_MIX
+    fleets = {"cascade": sc["tiers"], **sc["homogeneous"]}
+    if arm not in fleets:
+        raise ValueError(f"unknown cascade arm {arm!r}")
+    return dict(policy="cascade", tiers=dict(fleets[arm]),
+                steps=sc["steps"])
+
+
+def cascade_fleet_cost(tiers: Dict[str, int]) -> float:
+    """Tier-weighted GPU cost of a fleet spec: replica count times the
+    tier's ``step_cost`` (the bigger model occupies the bigger GPU). The
+    ``--cascade`` sweep asserts every arm prices out identically."""
+    from repro.cluster.replica import MODEL_TIERS
+    return float(sum(MODEL_TIERS[name].step_cost * count
+                     for name, count in tiers.items()))
+
+
+CASCADE_MIX = Scenario(
+    name="cascade",
+    params={"qps": 45.0, "duration": 25.0, "steps": 10, "slo_scale": 10.0,
+            # (difficulty, probability): easy / medium / hard tail
+            "difficulties": ((0.3, 0.60), (0.7, 0.25), (0.95, 0.15)),
+            "tiers": {"lite": 2, "base": 1, "max": 1},
+            "homogeneous": {"always_cheap": {"lite": 8},
+                            "always_base": {"base": 4},
+                            "always_big": {"max": 2}}},
+    workload_fn=_cascade_workload,
+    arm_fns={"cascade": lambda: _cascade_arm("cascade"),
+             "always_cheap": lambda: _cascade_arm("always_cheap"),
+             "always_base": lambda: _cascade_arm("always_base"),
+             "always_big": lambda: _cascade_arm("always_big")},
+    win="cascade dispatch + confidence-gated escalation beats every "
+        "equal-cost homogeneous fleet on quality-adjusted SLO attainment")
 
 
 class PatchAwareLatency:

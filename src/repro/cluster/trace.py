@@ -8,7 +8,7 @@ module adds that answer without touching the simulation's semantics:
 
 - **Event bus** (``Tracer``): every lifecycle transition — submit,
   batch-former hold / gang dispatch, dispatch, admit, denoise step,
-  checkpoint write, tier fetch/publish,
+  checkpoint write, tier fetch/publish, tier escalation,
   migration drain, crash/requeue/resume, complete/drop — plus the fleet
   events the driver previously kept in ad-hoc lists (``failure_log``,
   ``repartition_log``, ``zone_outage_log``, autoscaler actions) becomes a
@@ -80,6 +80,9 @@ COMPONENTS = (
     "checkpoint_wait",   # active but stalled behind checkpoint writes
     "tier_wait",         # active but stalled behind tier fetch/publish
     "batch_stall",       # active residual (should be ~0; conservation net)
+    "escalation",        # re-entering the cascade after a confidence-gate
+    #                      escalation: from the rejected cheap completion
+    #                      until the higher model tier admits the request
 )
 
 _FRONTEND, _REPLICA, _ACTIVE, _DONE = 0, 1, 2, 3
@@ -294,10 +297,17 @@ class Tracer:
         span = self.spans.get(req.rid)
         if span is None:
             return
+        was_escalation = span.label == "escalation"
         span.charge(now)
         span.phase = _REPLICA
-        span.label = "migration_drain" if rep.rid in self._migrating \
-            else "replica_wait"
+        if rep.rid in self._migrating:
+            span.label = "migration_drain"
+        elif was_escalation:
+            # still paying for the cascade re-entry: the escalation charge
+            # runs until the higher tier actually admits the request
+            span.label = "escalation"
+        else:
+            span.label = "replica_wait"
         span.replica = rep.rid
         span.predicted_finish = predicted_finish
         self._residents.setdefault(rep.rid, set()).add(req.rid)
@@ -453,6 +463,35 @@ class Tracer:
                     "steps_resumed": req.steps_done,
                     "arrival": span.arrival}, rid=req.rid)
 
+    def escalate(self, req, t: float, replica_rid: int,
+                 min_quality: float) -> None:
+        """Confidence-gated escalation: a cheap-tier completion was
+        rejected and the request re-enters the frontend queue targeted at
+        the next model tier up. Unlike a crash requeue nothing is rolled
+        back or relabeled — the cheap tier's denoise time really elapsed
+        and stays ``denoise``; from here until the higher tier *admits*
+        the request (re-dispatch keeps the label) the wait is charged to
+        ``escalation`` (so the decomposition still sums to end-to-end
+        latency exactly)."""
+        span = self.spans.get(req.rid)
+        if span is None:
+            return
+        if span.phase == _ACTIVE:
+            # escalation fires at the completing step's end, so the active
+            # gap is zero — this just closes the interval bookkeeping
+            span.charge_active_gap(t)
+        else:
+            span.charge(t)
+        if span.replica is not None:
+            self._residents.get(span.replica, set()).discard(req.rid)
+        span.phase = _FRONTEND
+        span.label = "escalation"
+        span.replica = None
+        span.pend_ckpt = span.pend_tier = 0.0
+        self._emit({"t": t, "kind": "escalate", "rid": req.rid,
+                    "replica": replica_rid, "min_quality": min_quality,
+                    "arrival": span.arrival}, rid=req.rid)
+
     # ---------------- fleet lifecycle ----------------
 
     def replica_spawn(self, rep, t: float, cause: str = "init") -> None:
@@ -510,9 +549,10 @@ class Tracer:
                     "snapshots": wrote, "cost": cost}, bulk=True)
 
     def zone_outage(self, t: float, zone: int, killed: int,
-                    down_until: float) -> None:
+                    down_until: float, degraded: bool = False) -> None:
         self._emit({"t": t, "kind": "zone_outage", "zone": zone,
-                    "killed": killed, "down_until": down_until})
+                    "killed": killed, "down_until": down_until,
+                    "degraded": degraded})
 
     def repartition(self, t: float, entry: dict) -> None:
         self._emit({"t": t, "kind": "repartition", **entry})
@@ -524,11 +564,11 @@ class Tracer:
     def tier_commit(self, t: float, key, nbytes: int, owner: int) -> None:
         self._emit({"t": t, "kind": "tier_commit", "owner": owner,
                     "nbytes": nbytes,
-                    "key": [list(key[0]), key[1], key[2]]}, bulk=True)
+                    "key": [list(key[0]), *key[1:]]}, bulk=True)
 
     def tier_evict(self, t: float, key, nbytes: int) -> None:
         self._emit({"t": t, "kind": "tier_evict", "nbytes": nbytes,
-                    "key": [list(key[0]), key[1], key[2]]}, bulk=True)
+                    "key": [list(key[0]), *key[1:]]}, bulk=True)
 
     def tier_abort(self, t: float, owner: int, dropped: int) -> None:
         if dropped:

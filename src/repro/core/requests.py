@@ -21,6 +21,14 @@ class Request:
     finish: Optional[float] = None     # completion time
     latent: object = None              # device array (H, W, C) between steps
     text: object = None                # prompt embeddings
+    #: query difficulty in (0, 1] — the minimum model-tier quality that
+    #: satisfies this request (heterogeneous fleets; untiered fleets
+    #: ignore it). 0.5 keeps any default-zoo tier acceptable.
+    difficulty: float = 0.5
+    #: escalation floor: the cascade policy only considers tiers of at
+    #: least this quality (set by the driver's confidence gate when a
+    #: cheap-tier completion was rejected; 0.0 = any tier)
+    min_quality: float = 0.0
 
     @property
     def remaining_steps(self) -> int:

@@ -35,8 +35,10 @@ except ImportError:
 LOW, MED, HIGH = DEFAULT_RES
 
 
-def _key(res, patch=8, band=0):
-    return (tuple(res), patch, band)
+def _key(res, patch=8, band=0, tier=""):
+    # 4th element: model-tier tag ("" on homogeneous fleets) — warmth is
+    # keyed per-(tier, resolution) since the cascade PR
+    return (tuple(res), patch, band, tier)
 
 
 def _req(rid, res, steps=4, arrival=0.0):
@@ -315,7 +317,7 @@ def test_fetch_cost_charged_on_replica_clock():
         now = rep0.next_free
     assert rep0.tier.stats["publishes"] == 1
     tier.settle(now + 1.0)
-    assert tier.contains((tuple(LOW), rep0.patch, 0))
+    assert tier.contains((tuple(LOW), rep0.patch, 0, ""))
 
     rep1 = replica(1)
     rep1.submit(_req(1, LOW, steps=6))
@@ -383,7 +385,7 @@ def _routing_replicas(warm_res=None, tier=None):
         rep.attach_tier(TierClient(tier, rid, cfg=cfg))
         reps.append(rep)
     if warm_res is not None:
-        reps[0].tier._l1[(tuple(warm_res), reps[0].patch, 0)] = \
+        reps[0].tier._l1[(tuple(warm_res), reps[0].patch, 0, "")] = \
             _L1State(steps=2)
     return reps
 
@@ -593,7 +595,7 @@ def test_warm_replica_republishes_evicted_entry():
     assert c.on_step([req], 2.5, 2.6) == 0.0
     assert c.stats["republishes"] == 0
     # a sibling's publish (same bytes, different patch) evicts our entry
-    tier.begin_write((tuple(LOW), 16, 0), eb, commit_at=3.0, owner=7)
+    tier.begin_write((tuple(LOW), 16, 0, ""), eb, commit_at=3.0, owner=7)
     tier.settle(3.0)
     assert not tier.contains(_key(LOW))
     # next warm hit notices and re-publishes, paying one write cost
@@ -616,7 +618,7 @@ def test_prefetch_block_filters_patch_and_resolutions():
     cfg = CacheTierConfig(l1_entries=2, step_bands=1, warmup_steps=4,
                           fetch_cost=0.01, fetch_cost_per_byte=1e-7)
     tier = CacheTier(cfg)
-    for key in (_key(LOW), _key(MED), _key(HIGH), (tuple(LOW), 16, 0)):
+    for key in (_key(LOW), _key(MED), _key(HIGH), (tuple(LOW), 16, 0, "")):
         tier.begin_write(key, cfg.entry_bytes(key[0]), commit_at=0.0,
                          owner=9)
     tier.settle(0.0)
@@ -674,7 +676,7 @@ def _warmboot_cluster(prefetch=True, fetch_cost_per_byte=1e-7):
 def _seed_tier(cl, cfg):
     patch = cl.replicas[0].patch
     for res in DEFAULT_RES:
-        cl.cache_tier.begin_write((tuple(res), patch, 0),
+        cl.cache_tier.begin_write((tuple(res), patch, 0, ""),
                                   cfg.entry_bytes(res), commit_at=0.0,
                                   owner=99)
     cl.cache_tier.settle(0.0)

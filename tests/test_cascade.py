@@ -1,0 +1,429 @@
+"""Query-aware model cascade (heterogeneous fleets): the ``ModelTier``
+zoo, the declarative policy registry, cascade dispatch (cheapest tier
+whose predicted finish fits the SLO), the driver's confidence-gated
+escalation path — including exactly-once accounting when the escalation
+target crashes mid-denoise and the checkpointed resume is priced at the
+*new* tier's cost — cross-tier autoscaling, per-(tier, resolution) cache
+warmth, partial zone degradation, the ``Scenario`` consolidation of the
+simtools helper pairs, and the quality-adjusted SLO headline metric."""
+import pytest
+
+from benchmarks.common import make_cluster
+from repro.cluster import (MODEL_TIERS, POLICIES, AutoscalerConfig,
+                           CheckpointConfig, Cluster, ClusterConfig,
+                           FailureConfig, ModelTier, TraceConfig,
+                           make_policy, register_policy, tier_ladder)
+from repro.cluster.router import AFFINITY_POLICIES, ZONE_AWARE_POLICIES
+from repro.cluster.simtools import (BATCH_MIX, CACHE_TIER, CASCADE_MIX,
+                                    FLASH_CROWD, Scenario,
+                                    cascade_fleet_cost, cluster_workload)
+from repro.core.requests import Request
+
+
+def _tiered(tiers, wl_kw, difficulty, **over):
+    cl = make_cluster(policy="cascade", tiers=tiers, steps=wl_kw["steps"],
+                      record_timeseries=False, **over)
+    wl = cluster_workload(**wl_kw)
+    for r in wl:
+        r.difficulty = difficulty
+    return cl, cl.run(wl), wl
+
+
+EASY_WL = dict(qps=10.0, duration=8.0, steps=6, slo_scale=10.0, seed=1)
+
+
+# ---------------- policy registry (declarative capability flags) ---------
+
+def test_registry_has_every_policy_with_flags():
+    assert {"round_robin", "join_shortest_queue", "least_slack",
+            "resolution_affinity", "zone_spread", "cache_affinity",
+            "cache_affinity_spread", "resolution_affinity_spread",
+            "cascade"} <= set(POLICIES)
+    for name, cls in POLICIES.items():
+        assert cls.name == name
+        assert isinstance(cls.affinity, bool)
+        assert isinstance(cls.zone_aware, bool)
+        assert isinstance(cls.needs_tier, bool)
+    assert POLICIES["cascade"].needs_tier
+    assert not POLICIES["cascade"].affinity
+    # legacy string sets are derived views of the registry, never a
+    # parallel list to keep in sync
+    assert AFFINITY_POLICIES == {n for n, c in POLICIES.items() if c.affinity}
+    assert ZONE_AWARE_POLICIES == {n for n, c in POLICIES.items()
+                                   if c.zone_aware}
+
+
+def test_make_policy_resolves_registry_and_rejects_unknown():
+    p = make_policy("cascade")
+    assert p.name == "cascade" and p.needs_tier
+    with pytest.raises(ValueError, match="unknown dispatch policy"):
+        make_policy("definitely_not_a_policy")
+
+
+def test_register_policy_decorator_round_trip():
+    from repro.cluster.router import DispatchPolicy
+
+    @register_policy("_test_only", zone_aware=True)
+    class _TestOnly(DispatchPolicy):
+        def select(self, req, replicas, now):
+            return None
+
+    try:
+        assert POLICIES["_test_only"] is _TestOnly
+        assert _TestOnly.name == "_test_only" and _TestOnly.zone_aware
+        assert make_policy("_test_only").select(None, [], 0.0) is None
+    finally:
+        del POLICIES["_test_only"]
+
+
+# ---------------- the model-tier zoo ----------------
+
+def test_model_tier_zoo_shape_and_ladder():
+    assert set(MODEL_TIERS) == {"lite", "base", "max"}
+    for name, t in MODEL_TIERS.items():
+        assert t.name == name
+    ladder = tier_ladder(MODEL_TIERS.values())
+    assert [t.name for t in ladder] == ["lite", "base", "max"]
+    # quality and cost both rise up the ladder; distinct cold starts
+    assert ladder[0].quality < ladder[1].quality < ladder[2].quality
+    assert ladder[0].step_cost < ladder[1].step_cost < ladder[2].step_cost
+    assert len({t.cold_start for t in ladder}) == 3
+
+
+def test_model_tier_validation():
+    with pytest.raises(ValueError):
+        ModelTier("bad", step_cost=0.0, quality=0.5, cold_start=1.0)
+    with pytest.raises(ValueError):
+        ModelTier("bad", step_cost=1.0, quality=1.5, cold_start=1.0)
+    with pytest.raises(ValueError):
+        ModelTier("bad", step_cost=1.0, quality=0.5, cold_start=-1.0)
+
+
+def test_cluster_config_tier_validation():
+    with pytest.raises(ValueError, match="unknown model tier"):
+        make_cluster(policy="cascade", tiers={"nope": 2})
+    with pytest.raises(ValueError, match="count must be >= 1"):
+        make_cluster(policy="cascade", tiers={"lite": 0})
+    with pytest.raises(ValueError, match="requires a tiered fleet"):
+        make_cluster(policy="cascade")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        make_cluster(policy="resolution_affinity", tiers={"lite": 2})
+
+
+# ---------------- cascade dispatch + escalation ----------------
+
+def test_easy_queries_stay_on_cheap_tier():
+    cl, m, wl = _tiered({"lite": 2, "base": 1}, EASY_WL, difficulty=0.3)
+    c = m.cascade
+    assert m.completed == len(wl)
+    assert c["escalations"] == 0 and c["give_ups"] == 0
+    assert c["gate_checks"] == m.completed
+    assert c["per_tier"]["lite"]["completed"] == len(wl)
+    assert c["per_tier"]["base"]["completed"] == 0
+
+
+def test_escalation_end_to_end_exactly_once():
+    """difficulty > lite quality with generous slack: every request runs
+    lite first, the gate rejects it, and the base re-run completes — each
+    request counted complete exactly once, on the tier that satisfied it."""
+    cl, m, wl = _tiered({"lite": 1, "base": 2},
+                        dict(qps=6.0, duration=8.0, steps=6, slo_scale=50.0,
+                             seed=2), difficulty=0.7)
+    n = len(wl)
+    c = m.cascade
+    assert m.completed == n and m.dropped == 0
+    assert c["escalations"] == n and c["give_ups"] == 0
+    assert c["quality_unmet"] == 0
+    # the gate inspected the lite completion AND the base one per request
+    assert c["gate_checks"] == 2 * n
+    assert c["escalation_rate"] == pytest.approx(0.5)
+    # retracted lite completions never double-count: engine metrics across
+    # the whole fleet sum to exactly one completion per request
+    assert sum(r.merged_metrics.completed for r in cl.replicas) == n
+    assert c["per_tier"]["lite"]["completed"] == 0
+    assert c["per_tier"]["base"]["completed"] == n
+    # escalated requests carry the next tier's quality floor
+    assert all(r.min_quality == MODEL_TIERS["base"].quality for r in wl)
+
+
+def test_give_up_when_slack_cannot_cover_rerun():
+    """Tight SLOs: the lite output lands in time but the remaining slack
+    cannot cover a full base re-run — the gate accepts the cheap output,
+    counts the give-up, and the quality-adjusted headline discounts it."""
+    cl, m, wl = _tiered({"lite": 1, "base": 1},
+                        dict(qps=4.0, duration=8.0, steps=6, slo_scale=1.1,
+                             seed=3), difficulty=0.7)
+    c = m.cascade
+    assert c["escalations"] == 0
+    assert c["give_ups"] > 0
+    assert c["quality_unmet"] == c["give_ups"]
+    assert c["slo_met_low_quality"] > 0
+    # most work lands on lite (a busy lite may overflow a request or two
+    # straight to base — still the cascade's cheapest-that-fits choice)
+    per_tier = c["per_tier"]
+    assert per_tier["lite"]["completed"] > per_tier["base"]["completed"]
+    assert sum(t["completed"] for t in per_tier.values()) == m.completed > 0
+    # the metric the cascade benchmark is scored on: on-time-but-low-
+    # quality completions do not count
+    expect = (m.slo_met - c["slo_met_low_quality"]) / \
+        (m.completed + m.dropped)
+    assert m.slo_quality_attainment == pytest.approx(expect)
+    assert m.slo_quality_attainment < m.slo_satisfaction
+    s = m.summary()
+    assert s["slo_quality_attainment"] == round(m.slo_quality_attainment, 4)
+
+
+def test_summary_reports_escalation_rate_and_per_tier_utilization():
+    cl, m, _ = _tiered({"lite": 1, "base": 1},
+                       dict(qps=6.0, duration=6.0, steps=6, slo_scale=50.0,
+                            seed=4), difficulty=0.7)
+    s = m.summary()
+    c = s["cascade"]
+    assert set(c) >= {"escalations", "give_ups", "quality_unmet",
+                      "slo_met_low_quality", "gate_checks",
+                      "escalation_rate", "per_tier"}
+    assert set(c["per_tier"]) == {"lite", "base"}
+    for name, row in c["per_tier"].items():
+        assert row["replicas"] >= 1
+        assert 0.0 <= row["utilization"] <= 1.0
+        assert row["quality"] == MODEL_TIERS[name].quality
+        assert row["step_cost"] == MODEL_TIERS[name].step_cost
+    # per-replica rows carry the tier identity too
+    tiers = {row["tier"] for row in s["per_replica"].values()}
+    assert tiers == {"lite", "base"}
+
+
+def test_untiered_fleet_unchanged():
+    """No ``tiers``: no gate, no cascade block, quality metric collapses
+    to plain SLO satisfaction — the homogeneous path is untouched."""
+    cl = make_cluster(n_replicas=2, policy="least_slack", steps=6,
+                      record_timeseries=False)
+    m = cl.run(cluster_workload(qps=8.0, duration=6.0, steps=6, seed=1))
+    assert m.cascade is None
+    assert m.slo_quality_attainment == m.slo_satisfaction
+    assert "cascade" not in m.summary()
+
+
+# ---------------- escalation x crash: exactly-once + resume pricing ------
+
+def _one_hard_request(steps=8):
+    return [Request(rid=0, resolution=(16, 16), arrival=0.0, slo=1e9,
+                    total_steps=steps, difficulty=0.7)]
+
+
+def _crash_fleet(trace=None):
+    return make_cluster(
+        policy="cascade", tiers={"lite": 1, "base": 2}, steps=8,
+        checkpoint=CheckpointConfig(every_k_steps=1),
+        failures=FailureConfig(mtbf=None, recover=True, seed=0),
+        trace=trace, record_timeseries=False)
+
+
+def test_escalated_request_survives_target_tier_crash_exactly_once():
+    """The escalated request's base-tier replica crashes mid-denoise: the
+    checkpointed orphan resumes on the surviving base replica, priced at
+    the *base* tier's step cost, and completes exactly once."""
+    # pilot (no crash): find the escalation instant and the completion
+    pilot = _crash_fleet(trace=TraceConfig())
+    pm = pilot.run(_one_hard_request())
+    assert pm.completed == 1 and pm.cascade["escalations"] == 1
+    esc = [e for e in pilot.tracer.events() if e["kind"] == "escalate"]
+    assert len(esc) == 1
+    esc_t = esc[0]["t"]
+    end = pm.latencies[0]                  # arrival == 0
+    assert end > esc_t
+    pilot_base = next(r for r in pilot.replicas
+                      if r.merged_metrics.completed == 1)
+    assert pilot_base.model_tier.name == "base"
+    base_step = pilot_base.busy_time / 8   # per-step cost incl. ckpt write
+
+    # real run: kill the escalation target halfway through the re-run
+    cl = _crash_fleet()
+    target = next(r for r in cl.replicas
+                  if r.model_tier.name == "base" and r.rid == 1)
+    target.crash_at = esc_t + 0.5 * (end - esc_t)
+    m = cl.run(_one_hard_request())
+    c = m.cascade
+    assert m.completed == 1 and m.dropped == 0
+    # exactly once: one escalation (never re-escalated after the crash —
+    # min_quality survives the requeue), one requeue, one completion
+    assert c["escalations"] == 1
+    assert m.requests_requeued == 1
+    assert m.replicas_failed == 1 and m.recoveries == 1
+    assert sum(r.merged_metrics.completed for r in cl.replicas) == 1
+    # the checkpointed resume actually skipped redone work...
+    assert m.steps_resumed > 0
+    finisher = next(r for r in cl.replicas
+                    if r.merged_metrics.completed == 1)
+    assert finisher.model_tier.name == "base" and finisher is not target
+    # ...and the remaining steps were priced at the NEW tier's (base) step
+    # cost: the finisher was busy for exactly the un-resumed remainder
+    expect = (8 - m.steps_resumed) * base_step
+    assert finisher.busy_time == pytest.approx(expect, rel=0.05)
+    assert c["per_tier"]["base"]["completed"] == 1
+    assert c["per_tier"]["lite"]["completed"] == 0
+
+
+# ---------------- cross-tier autoscaling ----------------
+
+def test_autoscaler_spawns_tiered_replicas_from_difficulty_mix():
+    cl = make_cluster(
+        policy="cascade", tiers={"lite": 1, "base": 1, "max": 1}, steps=6,
+        autoscaler=AutoscalerConfig(min_replicas=3, max_replicas=8,
+                                    cooldown=0.5),
+        record_timeseries=False)
+    wl = cluster_workload(qps=120.0, duration=10.0, steps=6, slo_scale=8.0,
+                          seed=5)
+    rng_diffs = (0.3, 0.7, 0.95)
+    for i, r in enumerate(wl):
+        r.difficulty = rng_diffs[i % 3]
+    m = cl.run(wl)
+    assert len(cl.replicas) > 3, "overload never scaled the fleet up"
+    # every spawn landed on a concrete tier rung, with that tier's boot
+    for r in cl.replicas:
+        assert r.model_tier is not None
+        assert r.model_tier.name in MODEL_TIERS
+    spawned = [r for r in cl.replicas if r.spawn_at > 0.0
+               and r.failed_at is None]
+    assert spawned
+    for r in spawned:
+        assert r.ready_at - r.spawn_at == pytest.approx(
+            r.model_tier.cold_start)
+    # the ladder never loses a rung: every tier keeps >= 1 live replica
+    live = [r for r in cl.replicas if r.retired_at is None]
+    assert {r.model_tier.name for r in live} == {"lite", "base", "max"}
+    assert m.completed + m.dropped == len(wl)
+
+
+# ---------------- per-(tier, resolution) cache warmth ----------------
+
+def test_cache_warmth_is_scoped_per_tier():
+    """L1/L2 keys carry the model-tier tag: a lite replica's warm patches
+    (and its published tier entries) say nothing about a max replica's."""
+    from repro.cluster.cachetier import CacheTier, CacheTierConfig, \
+        TierClient
+    tier = CacheTier(CacheTierConfig(warmup_steps=2))
+    lite, big = TierClient(tier, 0), TierClient(tier, 1)
+    lite.model_tier, big.model_tier = "lite", "max"
+    req = Request(rid=0, resolution=(16, 16), arrival=0.0, slo=1e9,
+                  total_steps=16)
+    for step in (1, 2, 3):                  # stay inside step band 0
+        req.steps_done = step
+        lite.on_step([req], float(step), float(step) + 0.1)
+    tier.settle(1e9)                        # commit the staged publish
+    assert lite.warmth((16, 16)) > 0.0
+    assert lite.stats["publishes"] == 1
+    # the max-tier client sees nothing: cold L1, and its L2 lookup misses
+    # because the committed key belongs to ("lite", res), not ("max", res)
+    assert big.warmth((16, 16)) == 0.0
+    req.steps_done = 1
+    big.on_step([req], 10.0, 10.1)
+    assert big.stats["l2_fetches"] == 0 and big.stats["cold_misses"] == 1
+    # a second lite client DOES fetch the committed entry — same tier tag
+    lite2 = TierClient(tier, 2)
+    lite2.model_tier = "lite"
+    lite2.on_step([req], 20.0, 20.1)
+    assert lite2.stats["l2_fetches"] == 1
+
+
+def test_tiered_fleet_composes_with_cache_tier():
+    from repro.cluster.simtools import cachetier_config
+    cl, m, wl = _tiered({"lite": 1, "base": 1},
+                        dict(qps=8.0, duration=6.0, steps=6, slo_scale=50.0,
+                             seed=6), difficulty=0.7,
+                        cache=True, cache_tier=cachetier_config())
+    assert m.completed == len(wl)
+    assert m.cascade["escalations"] > 0
+    # every client keyed its working set by its replica's tier
+    for r in cl.replicas:
+        assert r.tier.model_tier == r.model_tier.name
+
+
+# ---------------- partial zone degradation ----------------
+
+def test_degraded_zone_serves_inflight_but_takes_no_new_dispatches():
+    fail = FailureConfig(mtbf=None, zones=2, zone_mtbf=4.0,
+                         zone_downtime=3.0, zone_degrade_prob=1.0, seed=5)
+    cl = make_cluster(n_replicas=4, policy="least_slack", steps=6,
+                      failures=fail, record_timeseries=False)
+    wl = cluster_workload(qps=24.0, duration=12.0, steps=6, seed=5)
+    m = cl.run(wl)
+    assert m.zone_outages, "no zone events fired"
+    # every outage was a degradation: nobody died, nothing was requeued
+    assert all(e.get("degraded") and e["killed"] == 0
+               for e in m.zone_outages)
+    assert m.replicas_failed == 0 and m.requests_requeued == 0
+    # degraded zones are up (just closed to new dispatches), not down
+    assert all(a == 1.0 for a in m.zone_availability.values())
+    assert m.completed + m.dropped == len(wl)
+
+
+def test_degrade_prob_zero_keeps_outages_fatal():
+    fail = FailureConfig(mtbf=None, zones=2, zone_mtbf=4.0,
+                         zone_downtime=3.0, seed=5)
+    cl = make_cluster(n_replicas=4, policy="least_slack", steps=6,
+                      failures=fail, record_timeseries=False)
+    m = cl.run(cluster_workload(qps=24.0, duration=12.0, steps=6, seed=5))
+    assert m.zone_outages and m.replicas_failed > 0
+    assert not any(e.get("degraded") for e in m.zone_outages)
+
+
+# ---------------- Scenario consolidation ----------------
+
+def test_scenario_mapping_protocol_back_compat():
+    """Scenario instances replaced bare param dicts; every dict-style read
+    the benchmarks and tests ever did must still work."""
+    for sc in (BATCH_MIX, CACHE_TIER, CASCADE_MIX, FLASH_CROWD):
+        assert isinstance(sc, Scenario)
+        assert len(sc) == len(sc.params) > 0
+        assert list(iter(sc)) == list(sc.params)
+        assert dict(**sc) == dict(sc.items()) == sc.params
+        for k in sc.keys():
+            assert k in sc and sc[k] == sc.params[k]
+        assert sc.get("definitely_missing") is None
+    assert BATCH_MIX["max_wait"] == BATCH_MIX.params["max_wait"]
+    assert CASCADE_MIX["qps"] > 0 and "tiers" in CASCADE_MIX
+
+
+def test_scenario_arms_and_unknown_arm():
+    assert set(CASCADE_MIX.arms) == {"cascade", "always_cheap",
+                                     "always_base", "always_big"}
+    kw = CASCADE_MIX.cluster_kwargs("cascade")
+    assert kw["policy"] == "cascade" and kw["tiers"] == CASCADE_MIX["tiers"]
+    with pytest.raises(ValueError, match="unknown cascade arm"):
+        CASCADE_MIX.cluster_kwargs("nope")
+    with pytest.raises(ValueError, match="unknown batching arm"):
+        BATCH_MIX.cluster_kwargs("nope")
+
+
+def test_deprecated_wrappers_delegate_to_scenarios():
+    from repro.cluster.simtools import (batch_cluster_kwargs,
+                                        batch_mix_workload,
+                                        cachetier_workload,
+                                        flash_crowd_workload,
+                                        warmboot_cluster_kwargs)
+    with pytest.deprecated_call():
+        assert cachetier_workload(seed=1) == CACHE_TIER.workload(seed=1)
+    with pytest.deprecated_call():
+        assert flash_crowd_workload(seed=1) == FLASH_CROWD.workload(seed=1)
+    with pytest.deprecated_call():
+        assert batch_mix_workload(seed=1) == BATCH_MIX.workload(seed=1)
+    with pytest.deprecated_call():
+        assert warmboot_cluster_kwargs("warm") \
+            == FLASH_CROWD.cluster_kwargs("warm")
+    with pytest.deprecated_call():
+        assert batch_cluster_kwargs("gang") \
+            == BATCH_MIX.cluster_kwargs("gang")
+
+
+def test_cascade_mix_fleets_are_equal_cost():
+    """The benchmark's four arms are balanced in tier-weighted GPU cost
+    (step_cost doubles as the cost weight: a 2x-slower model is a
+    2x-bigger model) — the win must come from routing, not capacity."""
+    fleets = {"cascade": CASCADE_MIX["tiers"], **CASCADE_MIX["homogeneous"]}
+    costs = {arm: cascade_fleet_cost(t) for arm, t in fleets.items()}
+    assert len(set(costs.values())) == 1, costs
+    # per-request difficulty is drawn from the declared mix
+    wl = CASCADE_MIX.workload(seed=0)
+    levels = {lvl for lvl, _ in CASCADE_MIX["difficulties"]}
+    assert {r.difficulty for r in wl} == levels

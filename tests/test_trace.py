@@ -173,6 +173,46 @@ def test_conservation_property():
                 one(seed, qps)
 
 
+def test_conservation_escalation_component():
+    """Cascade escalation keeps the decomposition conserved: the rejected
+    cheap completion re-opens the span in the ``escalation`` component,
+    which runs until the higher tier admits the re-run — and every span
+    still sums to end-to-end latency to 1e-9."""
+    from benchmarks.common import make_cluster
+    cl = make_cluster(policy="cascade", tiers={"lite": 1, "base": 1},
+                      steps=6, trace=TraceConfig(), record_timeseries=False)
+    wl = cluster_workload(qps=8.0, duration=8.0, steps=6, slo_scale=50.0,
+                          seed=2)
+    for r in wl:
+        r.difficulty = 0.7             # above lite quality: gate escalates
+    m = cl.run(wl)
+    assert m.cascade["escalations"] > 0
+    n = _assert_conserved(cl)
+    assert n == m.completed + m.dropped
+    assert "escalation" in COMPONENTS
+    comp = _component_totals(cl)
+    assert comp["escalation"] > 0
+    # only escalated spans ever carry the component (an escalated span
+    # can still show 0.0 — the higher tier was idle and admitted the
+    # re-run at the same instant)
+    esc_rids = {e["rid"] for e in cl.tracer.events()
+                if e["kind"] == "escalate"}
+    assert esc_rids
+    charged = {s.rid for s in cl.tracer.finished
+               if s.comp.get("escalation", 0.0) > 0}
+    assert charged and charged <= esc_rids
+    # tracing is pure observation on the cascade path too
+    cl_off = make_cluster(policy="cascade", tiers={"lite": 1, "base": 1},
+                          steps=6, record_timeseries=False)
+    wl_off = cluster_workload(qps=8.0, duration=8.0, steps=6,
+                              slo_scale=50.0, seed=2)
+    for r in wl_off:
+        r.difficulty = 0.7
+    m_off = cl_off.run(wl_off)
+    assert _headline(m_off) == _headline(m)
+    assert m_off.cascade == m.cascade
+
+
 # ---------------- disabled path: bit-identical + zero-cost ----------------
 
 def _headline(m):
