@@ -115,6 +115,19 @@ prefetch (ablation), tier + spawn prefetch — and the tier-warmed fleet
 must beat the cold fleet on fleet SLO satisfaction on every seed
 (>=3 seeds, asserted) with structural guards on the prefetch, publish
 and warm-boot-pricing paths.
+
+``--monitor`` adds the fleet-health-monitor validation (>=3 seeds, four
+shared regimes): the streaming monitor (``ClusterConfig.monitor`` —
+windowed metrics over the trace bus, SLO error-budget burn-rate rules,
+changepoint detection) must stay silent on the healthy baseline
+(``HEALTHY_BASELINE``), fire inside every injected incident on the
+crash (``CRASH_FAULTS``) and zone-outage (``ZONE_FAULTS``) regimes
+(recall 1.0), and on the flash crowd (``FLASH_CROWD``) alert inside the
+crowd window and never before it. Every alert's streamed ``dominant``
+latency component is checked against the tracer's post-hoc
+SLO-violation attribution recomputed over exactly the alert's
+evaluation window. All asserted; with ``--trace-dir`` the crash run's
+``monitor_alerts.jsonl`` + ``monitor_prometheus.txt`` are persisted.
 """
 from __future__ import annotations
 
@@ -128,11 +141,15 @@ from pathlib import Path
 from benchmarks.common import make_cluster
 from repro.cluster import (AutoscalerConfig, CheckpointConfig,
                            FailureConfig, RepartitionConfig, TraceConfig)
+from repro.cluster.monitor import dominant_over_spans
 from repro.cluster.simtools import (BATCH_MIX, CACHE_TIER, CASCADE_MIX,
-                                    CRASH_FAULTS, FLASH_CROWD, UPDOWN_KNOTS,
+                                    CRASH_FAULTS, FLASH_CROWD,
+                                    HEALTHY_BASELINE, MONITOR_ZONE_QPS,
+                                    UPDOWN_KNOTS,
                                     ZONE_FAULTS, cachetier_config,
                                     cachetier_mean_mix, cascade_fleet_cost,
-                                    cluster_workload, phased_workload,
+                                    cluster_workload, monitor_config,
+                                    phased_workload,
                                     piecewise_rate_workload, ramp_workload)
 
 POLICIES = ("round_robin", "join_shortest_queue", "least_slack",
@@ -567,6 +584,129 @@ def cascade_trace(seed, n_seeds=3):
     return out
 
 
+#: the four --monitor regimes: the quiet control first, then the three
+#: incident classes the alert rules must trip on
+MONITOR_REGIMES = ("baseline", "crash", "zone", "spike")
+
+
+def _monitor_run(regime, seed, mcfg):
+    """One monitored run of a ``--monitor`` regime (shared scenarios; the
+    fleets match the --faults / --warmboot arms they alert on)."""
+    if regime == "baseline":
+        sc = HEALTHY_BASELINE
+        cl = make_cluster(n_replicas=sc["n_replicas"],
+                          policy="join_shortest_queue", steps=sc["steps"],
+                          monitor=mcfg, record_timeseries=False)
+        m = cl.run(cluster_workload(qps=sc["qps"], duration=sc["duration"],
+                                    steps=sc["steps"],
+                                    slo_scale=sc["slo_scale"], seed=seed))
+    elif regime == "crash":
+        sc = CRASH_FAULTS
+        cl = make_cluster(n_replicas=sc["n_replicas"],
+                          policy="join_shortest_queue", steps=sc["steps"],
+                          failures=FailureConfig(mtbf=sc["mtbf"],
+                                                 recover=True,
+                                                 cold_start=sc["cold_start"],
+                                                 seed=seed),
+                          monitor=mcfg, record_timeseries=False)
+        m = cl.run(cluster_workload(qps=sc["qps"], duration=sc["duration"],
+                                    steps=sc["steps"],
+                                    slo_scale=sc["slo_scale"], seed=seed))
+    elif regime == "zone":
+        sc = ZONE_FAULTS
+        cl = make_cluster(n_replicas=sc["n_replicas"],
+                          policy="join_shortest_queue",
+                          failures=FailureConfig(
+                              mtbf=None, recover=True,
+                              cold_start=sc["cold_start"],
+                              zones=sc["zones"],
+                              zone_mtbf=sc["zone_mtbf"],
+                              zone_downtime=sc["zone_downtime"], seed=seed),
+                          monitor=mcfg, record_timeseries=False)
+        # MONITOR_ZONE_QPS (not sc["qps"]): near capacity, losing a zone
+        # always threatens the SLO, so "every incident pages" is testable
+        m = cl.run(cluster_workload(qps=MONITOR_ZONE_QPS,
+                                    duration=sc["duration"], seed=seed))
+    else:
+        cl = make_cluster(**FLASH_CROWD.cluster_kwargs("cold"),
+                          monitor=mcfg, record_timeseries=False)
+        m = cl.run(FLASH_CROWD.workload(seed))
+    return cl, m
+
+
+def monitor_trace(seed, n_seeds=3, trace_dir=None):
+    """Streaming fleet health monitor on four shared regimes, >=3 seeds:
+    ``baseline`` (``HEALTHY_BASELINE`` — the crash fleet with the failure
+    process removed; the burn-rate rules must stay silent), ``crash``
+    (``CRASH_FAULTS`` Poisson crashes), ``zone`` (``ZONE_FAULTS``
+    correlated outages, zone-blind arm) and ``spike`` (``FLASH_CROWD``
+    flash crowd, cold arm). Per run the monitor's streamed alerts are
+    checked against ground truth: every alert's ``dominant`` latency
+    component must equal the tracer's post-hoc SLO-violation attribution
+    recomputed over exactly the alert's evaluation window
+    (``dominant_over_spans`` on the same closed bins), every injected
+    incident must contain an alert (recall 1.0), the baseline must fire
+    nothing, and the spike arm must alert inside the crowd window and
+    never before it. All asserted in ``main``. With ``trace_dir`` the
+    crash run's health log (``monitor_alerts.jsonl``) and Prometheus
+    snapshot (``monitor_prometheus.txt``) are persisted as artifacts."""
+    mw = monitor_config()
+    knots = FLASH_CROWD["knots"]
+    spike_start = max(knots, key=lambda k: k[1])[0]
+    spike_end = min((t for t, _ in knots if t > spike_start),
+                    default=spike_start)
+    out = {"window": mw.window, "slo_target": mw.slo_target,
+           "rules": [{"name": r.name, "short_s": r.short_window,
+                      "long_s": r.long_window, "burn_rate": r.burn_rate}
+                     for r in mw.rules],
+           "spike_window": [spike_start, spike_end + mw.incident_horizon],
+           "seeds": []}
+    for s in range(seed, seed + n_seeds):
+        row = {"seed": s}
+        for regime in MONITOR_REGIMES:
+            mcfg = monitor_config()
+            cl, m = _monitor_run(regime, s, mcfg)
+            mon = m.monitor
+            alerts = cl.monitor.alerts
+            mismatches = sum(
+                1 for a in alerts
+                if a["dominant"] != dominant_over_spans(
+                    cl.tracer.finished, a["win"][0], a["win"][1],
+                    mcfg.window))
+            row[regime] = {
+                "slo": m.slo_satisfaction,
+                "alerts": len(alerts),
+                "alert_times": [round(a["t"], 3) for a in alerts],
+                "dominants": sorted({a["dominant"] for a in alerts}),
+                "dominant_mismatches": mismatches,
+                "incidents": mon["incidents"],
+                "precision": mon["precision"],
+                "recall": mon["recall"],
+                "anomalies": mon["anomalies"],
+            }
+            if regime == "spike":
+                row[regime]["alerts_pre_spike"] = sum(
+                    1 for a in alerts if a["t"] < spike_start)
+                row[regime]["alerts_in_spike"] = sum(
+                    1 for a in alerts if spike_start <= a["t"]
+                    <= spike_end + mcfg.incident_horizon)
+            if trace_dir is not None and s == seed and regime == "crash":
+                tdir = Path(trace_dir)
+                tdir.mkdir(parents=True, exist_ok=True)
+                n_rec = cl.monitor.write_jsonl(tdir / "monitor_alerts.jsonl")
+                (tdir / "monitor_prometheus.txt").write_text(
+                    cl.monitor.prometheus_text())
+                row[regime]["artifact_records"] = n_rec
+                print(f"monitor artifacts: {n_rec} jsonl records -> {tdir}")
+            r = row[regime]
+            print(f"monitor seed={s} {regime:9s} slo={r['slo']:.3f} "
+                  f"alerts={r['alerts']} incidents={r['incidents']} "
+                  f"recall={r['recall']:.2f} anomalies={r['anomalies']} "
+                  f"dominant={','.join(r['dominants']) or '-'}")
+        out["seeds"].append(row)
+    return out
+
+
 def traced_run(trace_dir, mode, seed):
     """One traced regime for ``--trace-dir``: the crash+checkpoint
     scenario under ``least_slack`` dispatch, chosen because it walks the
@@ -671,6 +811,15 @@ def main() -> None:
                          "escalation vs all-lite / all-base / all-max "
                          "fleets at equal tier-weighted GPU cost, >=3 "
                          "seeds (per-seed quality-adjusted win asserted)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="add the fleet-health-monitor validation: "
+                         "burn-rate alerting on healthy / crash / zone-"
+                         "outage / flash-crowd regimes, >=3 seeds — "
+                         "silent baseline, every incident alerted, alert "
+                         "dominant components matched against post-hoc "
+                         "span attribution (all asserted); with "
+                         "--trace-dir also writes monitor_alerts.jsonl + "
+                         "monitor_prometheus.txt")
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="run one traced regime (crash+checkpoint) and "
                          "write trace.jsonl / trace_chrome.json / "
@@ -733,6 +882,10 @@ def main() -> None:
     if args.cascade:
         cascade = cascade_trace(seed=args.seed)
 
+    monitor = None
+    if args.monitor:
+        monitor = monitor_trace(seed=args.seed, trace_dir=args.trace_dir)
+
     traced = None
     if args.trace_dir:
         traced = traced_run(args.trace_dir, args.trace_mode,
@@ -775,6 +928,8 @@ def main() -> None:
         out["batching"] = batching
     if cascade is not None:
         out["cascade"] = cascade
+    if monitor is not None:
+        out["monitor"] = monitor
     if traced is not None:
         out["traced"] = traced
     Path(args.out).write_text(json.dumps(out, indent=1))
@@ -976,6 +1131,47 @@ def main() -> None:
             raise SystemExit("traced cascade arm charged no escalation "
                              "time — escalation spans are not being "
                              "labeled?")
+    if monitor is not None:
+        for row in monitor["seeds"]:
+            sd = row["seed"]
+            if row["baseline"]["alerts"] != 0:
+                raise SystemExit(
+                    f"burn-rate rules fired {row['baseline']['alerts']} "
+                    f"alert(s) on the healthy baseline (seed {sd}, "
+                    f"t={row['baseline']['alert_times']}) — the monitor "
+                    "pages on a fleet that is inside budget (threshold "
+                    "regression?)")
+            for regime in ("crash", "zone"):
+                r = row[regime]
+                if r["incidents"] <= 0:
+                    raise SystemExit(
+                        f"{regime} regime injected no incidents (seed "
+                        f"{sd}) — failure-injection regression?")
+                if r["alerts"] <= 0 or r["recall"] < 1.0:
+                    raise SystemExit(
+                        f"{regime} regime left an injected incident "
+                        f"un-alerted (seed {sd}: {r['alerts']} alerts, "
+                        f"recall {r['recall']}) — burn-rate alerting "
+                        "regression?")
+            sp = row["spike"]
+            if sp["alerts_pre_spike"] != 0:
+                raise SystemExit(
+                    f"monitor alerted before the flash crowd started "
+                    f"(seed {sd}, t={sp['alert_times']}) — false page on "
+                    "the quiet ramp-up (rule arming regression?)")
+            if sp["alerts_in_spike"] <= 0:
+                raise SystemExit(
+                    f"flash crowd (seed {sd}, window "
+                    f"{monitor['spike_window']}) fired no alert — "
+                    "burn-rate alerting regression?")
+            for regime in MONITOR_REGIMES:
+                if row[regime]["dominant_mismatches"]:
+                    raise SystemExit(
+                        f"{row[regime]['dominant_mismatches']} alert(s) "
+                        f"in the {regime} regime (seed {sd}) carried a "
+                        "dominant latency component that disagrees with "
+                        "the post-hoc span attribution over the same "
+                        "window — streamed attribution regression?")
 
 
 if __name__ == "__main__":

@@ -103,7 +103,7 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                  steps=10, scale=1.0, record_timeseries=True,
                  initial_mix=None, repartition=None, cache=None,
                  failures=None, checkpoint=None, cache_tier=None,
-                 trace=None, batcher=None, tiers=None):
+                 trace=None, batcher=None, tiers=None, monitor=None):
     """Multi-replica sim cluster over the benchmark resolution ladder.
     Engines are synthetic sim (no tensors) with the patch-aware latency
     surrogate; pair with ``repro.cluster.simtools.cluster_workload`` so
@@ -124,7 +124,10 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
     budget (None keeps per-request dispatch); ``tiers`` (a ``{name:
     count}`` dict over ``repro.cluster.replica.MODEL_TIERS``) builds a
     heterogeneous model-cascade fleet — replica count comes from the tier
-    counts and ``n_replicas`` is ignored."""
+    counts and ``n_replicas`` is ignored; ``monitor`` (a
+    ``MonitorConfig``) turns on the streaming fleet health monitor —
+    windowed timeseries over the trace bus, SLO burn-rate alerts,
+    changepoint detection (None keeps monitoring off)."""
     from repro.cluster import Cluster, ClusterConfig, sim_engine_factory
     from repro.core.latency_model import CacheHitModel
     if cache is True:
@@ -140,6 +143,7 @@ def make_cluster(n_replicas=3, policy="round_robin", autoscaler=None,
                                  checkpoint=checkpoint,
                                  cache_tier=cache_tier,
                                  trace=trace,
+                                 monitor=monitor,
                                  batcher=batcher,
                                  tiers=tiers,
                                  record_timeseries=record_timeseries))

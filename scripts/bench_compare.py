@@ -1,0 +1,101 @@
+"""Sim-throughput regression gate for the nightly perf trajectory.
+
+The nightly sweep writes one ``BENCH_<date>.json`` per run
+(``benchmarks.cluster_sweep --perf-json`` — a ``cluster_sweep_perf``
+record with total and per-regime event-loop iterations per wall
+second). This script compares the newest record against the previous
+one and exits non-zero when throughput dropped by more than the
+threshold (default 20%) — in total, or in any regime present in both
+records. Regimes are matched by (qps, policy, n_replicas); regimes that
+appear or vanish are reported but never fail the gate (the sweep grid
+is allowed to evolve). With fewer than two records there is nothing to
+compare and the gate passes — the first nightly run seeds the
+trajectory.
+
+Run:  python scripts/bench_compare.py [DIR] [--threshold 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def regime_key(r):
+    return (r["qps"], r["policy"], r["n_replicas"])
+
+
+def compare(prev: dict, cur: dict, threshold: float = 0.2):
+    """Regressions between two ``cluster_sweep_perf`` records: a list of
+    ``(name, prev_eps, cur_eps, drop_fraction)`` rows where throughput
+    fell by more than ``threshold``. Regimes with zero/missing prior
+    throughput never regress (no meaningful baseline)."""
+    out = []
+
+    def check(name, p_eps, c_eps):
+        if p_eps and p_eps > 0:
+            drop = (p_eps - c_eps) / p_eps
+            if drop > threshold:
+                out.append((name, p_eps, c_eps, drop))
+
+    check("total", prev.get("total", {}).get("events_per_s"),
+          cur.get("total", {}).get("events_per_s", 0.0))
+    cur_by_key = {regime_key(r): r for r in cur.get("regimes", [])}
+    for r in prev.get("regimes", []):
+        c = cur_by_key.get(regime_key(r))
+        if c is None:
+            continue
+        qps, pol, n = regime_key(r)
+        check(f"qps={qps} {pol} n={n}",
+              r.get("events_per_s"), c.get("events_per_s", 0.0))
+    return out
+
+
+def latest_records(bench_dir: Path):
+    """The two newest BENCH_*.json paths (date-named, so lexicographic
+    order is chronological), oldest first; fewer if not enough exist."""
+    return sorted(bench_dir.glob("BENCH_*.json"))[-2:]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dir", nargs="?", default=".",
+                    help="directory holding BENCH_<date>.json records")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max tolerated fractional events/s drop "
+                         "(default 0.2 = 20%%)")
+    args = ap.parse_args()
+
+    paths = latest_records(Path(args.dir))
+    if len(paths) < 2:
+        print(f"bench_compare: {len(paths)} perf record(s) in "
+              f"{args.dir} — nothing to compare yet")
+        return
+    prev_path, cur_path = paths
+    prev = json.loads(prev_path.read_text())
+    cur = json.loads(cur_path.read_text())
+    for rec, p in ((prev, prev_path), (cur, cur_path)):
+        if rec.get("kind") != "cluster_sweep_perf":
+            raise SystemExit(f"{p} is not a cluster_sweep_perf record")
+
+    print(f"bench_compare: {prev_path.name} -> {cur_path.name} "
+          f"(threshold {args.threshold:.0%})")
+    p_tot = prev["total"]["events_per_s"]
+    c_tot = cur["total"]["events_per_s"]
+    print(f"  total: {p_tot} -> {c_tot} events/s "
+          f"({(c_tot - p_tot) / p_tot:+.1%})" if p_tot else
+          f"  total: {p_tot} -> {c_tot} events/s")
+
+    regressions = compare(prev, cur, args.threshold)
+    if regressions:
+        for name, p_eps, c_eps, drop in regressions:
+            print(f"  REGRESSION {name}: {p_eps} -> {c_eps} events/s "
+                  f"(-{drop:.1%})")
+        raise SystemExit(
+            f"{len(regressions)} sim-throughput regression(s) worse than "
+            f"{args.threshold:.0%} vs {prev_path.name}")
+    print("  no regressions")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Offline fleet health dashboard: render a ``FleetMonitor`` JSONL
+health log (``monitor_alerts.jsonl``, written by
+``benchmarks.cluster_sweep --monitor --trace-dir`` or
+``FleetMonitor.write_jsonl``) as a per-window report — without
+re-running the simulation.
+
+The log carries one ``monitor_meta`` header, one ``window`` record per
+closed aggregation bin (counters, gauges, the latency histogram, the
+dominant-component tally over that bin's SLO violators), then the alert
+and anomaly logs. The dashboard prints one row per window — finished
+requests, miss rate, the implied error-budget burn, queue depth, ready
+replicas — and marks the windows where burn-rate alerts fired or a
+changepoint detector tripped, so an incident reads as a vertical story:
+burn climbs, the alert pages with its dominant latency component, the
+anomaly detectors flag the regime shift.
+
+Run:  PYTHONPATH=src python scripts/fleet_dashboard.py MONITOR.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import Counter
+
+
+def load_log(path):
+    """All JSONL records: (meta_or_None, windows, alerts, anomalies)."""
+    meta, windows, alerts, anomalies = None, [], [], []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            kind = rec.get("kind")
+            if kind == "monitor_meta":
+                meta = rec
+            elif kind == "window":
+                windows.append(rec)
+            elif kind == "alert":
+                alerts.append(rec)
+            elif kind == "anomaly":
+                anomalies.append(rec)
+    return meta, windows, alerts, anomalies
+
+
+def window_rows(windows, alerts, anomalies, slo_target):
+    """One dict per window with derived health fields and the alerts /
+    anomalies whose fire time falls inside it."""
+    budget = 1.0 - slo_target
+    rows = []
+    for w in windows:
+        c = w["counters"]
+        done = c.get("completed", 0) + c.get("dropped", 0)
+        miss = c.get("slo_miss", 0) + c.get("dropped", 0)
+        rate = miss / done if done else 0.0
+        rows.append({
+            "bin": w["bin"], "t0": w["t0"], "t1": w["t1"],
+            "done": int(done), "miss": int(miss), "miss_rate": rate,
+            "burn": rate / budget if budget else 0.0,
+            "queue_depth": w.get("queue_depth", 0.0),
+            "replicas": w.get("replicas"),
+            "dominant": max(w.get("dominant", {}).items(),
+                            key=lambda kv: kv[1])[0]
+            if w.get("dominant") else None,
+            "alerts": [a for a in alerts
+                       if w["t0"] <= a["t"] < w["t1"]],
+            "anomalies": [a for a in anomalies
+                          if w["t0"] <= a["t"] < w["t1"]],
+        })
+    return rows
+
+
+def render(meta, rows, alerts, anomalies, out=sys.stdout):
+    p = out.write
+    p(f"window={meta['window']}s slo_target={meta['slo_target']} "
+      f"bins={meta['bins']} alerts={meta['alerts']} "
+      f"anomalies={meta['anomalies']}\n")
+    for r in meta.get("rules", []):
+        p(f"  rule {r['name']}: burn >= {r['burn_rate']}x budget over "
+          f"{r['short_s']}s AND {r['long_s']}s (refire every "
+          f"{r['repeat']}s)\n")
+    p(f"\n{'t':>9s} {'done':>5s} {'miss':>5s} {'rate':>6s} {'burn':>5s} "
+      f"{'queue':>6s} {'repl':>4s}  flags\n")
+    for r in rows:
+        flags = []
+        for a in r["alerts"]:
+            flags.append(f"ALERT {a['rule']} burn={a['burn_long']:.1f} "
+                         f"dominant={a['dominant']}")
+        for a in r["anomalies"]:
+            flags.append(f"anomaly {a['signal']} {a['direction']}")
+        repl = "-" if r["replicas"] is None else f"{r['replicas']:.0f}"
+        bar = "#" * min(20, int(round(r["burn"] * 2)))
+        p(f"[{r['t0']:7.1f}s] {r['done']:5d} {r['miss']:5d} "
+          f"{r['miss_rate']:6.1%} {r['burn']:5.1f} "
+          f"{r['queue_depth']:6.1f} {repl:>4s}  {bar:20s} "
+          f"{'; '.join(flags)}\n".rstrip() + "\n")
+    dom = Counter()
+    for a in alerts:
+        dom[a["dominant"]] += 1
+    p("\nalerts by rule: " + (", ".join(
+        f"{r}={n}" for r, n in Counter(
+            a["rule"] for a in alerts).most_common()) or "none") + "\n")
+    p("alert-dominant components: " + (", ".join(
+        f"{c}={n}" for c, n in dom.most_common()) or "none") + "\n")
+    p("anomalies by signal: " + (", ".join(
+        f"{s}={n}" for s, n in Counter(
+            a["signal"] for a in anomalies).most_common()) or "none")
+      + "\n")
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        raise SystemExit(f"usage: {sys.argv[0]} MONITOR.jsonl")
+    meta, windows, alerts, anomalies = load_log(sys.argv[1])
+    if meta is None:
+        raise SystemExit("no monitor_meta header — is this a "
+                         "FleetMonitor JSONL health log?")
+    rows = window_rows(windows, alerts, anomalies, meta["slo_target"])
+    render(meta, rows, alerts, anomalies)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,13 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.cluster.trace import COMPONENTS  # noqa: E402
+
+def _live_components():
+    """The in-repo component list — the fallback when a trace predates
+    the ``components`` field in the ``trace_meta`` header. Imported
+    lazily so reading a self-describing trace needs no live code."""
+    from repro.cluster.trace import COMPONENTS
+    return list(COMPONENTS)
 
 
 def load_records(path):
@@ -48,13 +54,18 @@ def load_spans(path):
     return load_records(path)[2]
 
 
-def attribution_from_spans(spans):
+def attribution_from_spans(spans, components=None):
     """Recompute the fleet SLO-violation attribution from span records —
     must agree with the live ``Tracer.attribution_summary()`` (asserted
     by the round-trip test). Violations are completed-but-missed plus
-    dropped; each is charged to its dominant latency component."""
+    dropped; each is charged to its dominant latency component.
+    ``components`` is the component list the trace was written with (the
+    ``trace_meta`` header's ``components`` field); None falls back to the
+    live in-repo list."""
+    if components is None:
+        components = _live_components()
     dominant = Counter()
-    viol_time = {c: 0.0 for c in COMPONENTS}
+    viol_time = {c: 0.0 for c in components}
     completed_ok = missed = dropped = 0
     for s in spans:
         if s["outcome"] == "dropped":
@@ -104,7 +115,11 @@ def main() -> None:
     print("events:", " ".join(f"{k}={n}" for k, n in
                               sorted(census.items(), key=lambda kv: -kv[1])))
 
-    att = attribution_from_spans(spans)
+    # the trace is self-describing: the header's component list is
+    # authoritative (a trace from an older/newer tracer still reports
+    # correctly); only header-less traces fall back to the live import
+    att = attribution_from_spans(
+        spans, (meta or {}).get("components"))
     print(f"\nrequests={att['requests']} ok={att['completed_ok']} "
           f"missed={att['missed']} dropped={att['dropped']}")
     viol = att["missed"] + att["dropped"]

@@ -36,6 +36,12 @@ Layers:
                    latency decomposition with a conservation invariant,
                    SLO-violation attribution, predictor calibration, and
                    JSONL / Chrome-trace exporters (zero-cost when off);
+- ``monitor``    — opt-in streaming fleet health monitor over the trace
+                   bus: sim-clock-windowed counters/gauges/histograms,
+                   SLO error-budget burn-rate alerting (alerts carry the
+                   dominant latency component), EWMA+CUSUM changepoint
+                   detection, Prometheus / JSONL exporters (zero-cost
+                   when off);
 - ``simtools``   — patch-aware (optionally cache-aware) sim engine
                    factories plus steady / phased-drift / ramp workload
                    generators shared by tests, benchmarks and examples.
@@ -58,6 +64,8 @@ from repro.cluster.cachetier import (CacheTier, CacheTierConfig, TierClient,
 from repro.cluster.driver import (Cluster, ClusterConfig, Escalator,
                                   FailureConfig, RepartitionConfig)
 from repro.cluster.metrics import ClusterMetrics, ReplicaReport
+from repro.cluster.monitor import (AlertRule, FleetMonitor, MonitorConfig,
+                                   WindowedHistogram, default_rules)
 from repro.cluster.replica import (MODEL_TIERS, CheckpointConfig, ModelTier,
                                    Replica, tier_ladder)
 from repro.cluster.router import (POLICIES, CacheAffinity,
@@ -111,4 +119,6 @@ __all__ = [
     "standalone_latencies", "warmboot_autoscaler", "warmboot_cluster_kwargs",
     "warmboot_tier_config",
     "COMPONENTS", "NULL_TRACER", "NullTracer", "TraceConfig", "Tracer",
+    "AlertRule", "FleetMonitor", "MonitorConfig", "WindowedHistogram",
+    "default_rules",
 ]

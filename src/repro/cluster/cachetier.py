@@ -207,8 +207,12 @@ class CacheTier:
         if key in self._entries:
             self._entries.move_to_end(key)
             self.stats["hits"] += 1
+            if self.tracer.enabled:
+                self.tracer.tier_fetch(now, key, hit=True)
             return True
         self.stats["misses"] += 1
+        if self.tracer.enabled:
+            self.tracer.tier_fetch(now, key, hit=False)
         return False
 
     def prefetch(self, key: CacheKey) -> bool:

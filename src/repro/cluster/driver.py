@@ -118,6 +118,7 @@ from repro.cluster.replica import (MODEL_TIERS, CheckpointConfig, ModelTier,
 from repro.cluster.router import (MixTracker, Router,
                                   allocate_replica_counts, make_policy,
                                   mix_drift, partition_resolutions)
+from repro.cluster.monitor import FleetMonitor, MonitorConfig
 from repro.cluster.trace import NULL_TRACER, TraceConfig, Tracer
 
 Resolution = Tuple[int, int]
@@ -223,6 +224,12 @@ class ClusterConfig:
     # sim-clock event bus + per-request span tracer (trace.py). None keeps
     # tracing disabled — a guarded no-op with bit-identical metrics.
     trace: Optional[TraceConfig] = None
+    # streaming fleet health monitor (monitor.py): windowed timeseries over
+    # the trace bus + SLO burn-rate alerting + changepoint detection. None
+    # keeps monitoring off with bit-identical metrics (same guard style as
+    # ``trace``); when set without ``trace`` the driver runs an internal
+    # violations-mode tracer as the bus (trace outputs stay disabled).
+    monitor: Optional[MonitorConfig] = None
     # router-side batch former (batcher.py): gang-dispatch patch-compatible
     # frontend work under per-request eligibility windows and the target
     # replica's batch-latency budget. None keeps per-request dispatch.
@@ -369,12 +376,21 @@ class Cluster:
         # before router/autoscaler/tier wiring below). Denoise-band
         # sub-decomposition aligns with the tier's step bands when a tier
         # is configured.
-        if cfg.trace is not None:
+        self._trace_requested = cfg.trace is not None
+        if cfg.trace is not None or cfg.monitor is not None:
             bands = cfg.cache_tier.step_bands if cfg.cache_tier is not None \
                 else 4
-            self.tracer = Tracer(cfg.trace, step_bands=bands)
+            # monitor without trace: the monitor still needs the bus, so
+            # run an internal tracer in the bounded ``violations`` mode;
+            # ``_trace_requested`` keeps every trace-only output (summary
+            # attribution/predictor/trace_events) gated off
+            tcfg = cfg.trace if cfg.trace is not None \
+                else TraceConfig(mode="violations")
+            self.tracer = Tracer(tcfg, step_bands=bands)
         else:
             self.tracer = NULL_TRACER
+        self.monitor = FleetMonitor(cfg.monitor, self.tracer) \
+            if cfg.monitor is not None else None
         self.router = Router(self.policy)
         self.router.tracer = self.tracer
         self.autoscaler = Autoscaler(cfg.autoscaler) if cfg.autoscaler else None
@@ -1109,6 +1125,14 @@ class Cluster:
                         if r.retired_at is None),
                     len([r for r in self.replicas if r.ready(now)])))
 
+            if self.monitor is not None:
+                # end-of-iteration heartbeat: every event for sim-time
+                # ``now`` has been delivered, so the monitor may close and
+                # evaluate every window bin strictly before ``now``'s
+                self.monitor.pulse(
+                    now, queue_depth=self.router.depth,
+                    replicas=sum(1 for r in self.replicas if r.ready(now)))
+
             # next event: arrival, step completion / warm-up of a loaded
             # replica, warm-up that could unblock the frontend, or the next
             # autoscaler decision while work is parked
@@ -1170,6 +1194,11 @@ class Cluster:
 
         mts.span = now
         mts.sim_events = events
+        if self.monitor is not None:
+            # before the shutdown tier drain below: settle(inf) emits
+            # post-run commit events that belong to no health window
+            self.monitor.finalize(now)
+            mts.monitor = self.monitor.summary()
         if self.cache_tier is not None:
             # graceful shutdown: every staged write belongs to a live
             # replica whose busy window completes (crashed owners were
@@ -1181,7 +1210,9 @@ class Cluster:
             mts.cache_tier = {
                 **aggregate_client_stats([r.tier for r in self.replicas]),
                 "tier": self.cache_tier.summary()}
-        if self.tracer.enabled:
+        if self._trace_requested:
+            # the monitor-only internal tracer must not change the summary
+            # shape: trace outputs appear only when tracing was asked for
             mts.attribution = self.tracer.attribution_summary()
             mts.predictor = self.tracer.predictor_summary()
             mts.trace_events = self.tracer.n_events

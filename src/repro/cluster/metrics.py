@@ -92,6 +92,11 @@ class ClusterMetrics:
     # counters + per-tier replica/throughput/utilization breakdown
     # (driver-built). None when the fleet is homogeneous.
     cascade: Optional[dict] = None
+    # fleet health monitor (ClusterConfig.monitor): alerts fired (total +
+    # per rule), changepoints per watched signal, and incident
+    # precision/recall counters (FleetMonitor.summary()). Empty dict when
+    # monitoring is off.
+    monitor: dict = field(default_factory=dict)
 
     # -- fleet aggregates --------------------------------------------------
     @property
@@ -243,6 +248,8 @@ class ClusterMetrics:
             out["predictor"] = self.predictor
         if self.trace_events:
             out["trace_events"] = self.trace_events
+        if self.monitor:
+            out["monitor"] = self.monitor
         if full_timeseries:
             out["queue_timeseries"] = [
                 [round(t, 6), f, q, n] for t, f, q, n in self.queue_ts]

@@ -125,6 +125,44 @@ ZONE_FAULTS = {"qps": 104.0, "duration": 40.0, "n_replicas": 6,
                "zones": 3, "zone_mtbf": 25.0, "zone_downtime": 12.0,
                "cold_start": 1.0}
 
+#: healthy-baseline regime for the ``--monitor`` sweep and the monitor
+#: tests: the ``CRASH_FAULTS`` fleet with the failure process removed —
+#: same load, same headroom, no injected incidents — so the burn-rate
+#: rules' false-positive rate is measured against exactly the fleet the
+#: alerts must trip on once crashes are switched back on.
+HEALTHY_BASELINE = {"qps": 24.0, "duration": 40.0, "n_replicas": 4,
+                    "steps": 30, "slo_scale": 4.0}
+
+#: load for the monitored zone-outage regime: the ``ZONE_FAULTS`` fleet
+#: run closer to capacity (120 qps vs 104) so that losing a zone is
+#: always an SLO-threatening incident. At 104 qps a lucky outage draw is
+#: absorbed by fleet headroom and the burn-rate rules (correctly) stay
+#: quiet — which would make "every injected incident pages" untestable
+#: as ground truth.
+MONITOR_ZONE_QPS = 120.0
+
+
+def monitor_config(window: float = 1.0, slo_target: float = 0.9):
+    """The shared ``MonitorConfig`` for the fault regimes (the
+    ``--monitor`` sweep, the example and the tests): 1 s windows are fine
+    enough to localize a crash inside a 40 s run and ``slo_target=0.9``
+    budgets 10% misses. The rule thresholds are calibrated against the
+    measured regimes (seeds 0-5): the healthy baseline
+    (``HEALTHY_BASELINE``) peaks at 3.2x budget over its worst full
+    12 s window and 2.7x over its worst 24 s window, while every crash /
+    zone-outage / flash-crowd incident sustains >=4.1x (12 s) and
+    >=3.5x (24 s) — so the fast rule pages at 3.5x over 3 s/12 s and the
+    slow rule at 3x over 6 s/24 s: quiet on the baseline, tripped inside
+    every injected incident."""
+    from repro.cluster.monitor import AlertRule, MonitorConfig
+    return MonitorConfig(window=window, slo_target=slo_target,
+                         rules=(AlertRule("fast_burn", short_window=3.0,
+                                          long_window=12.0, burn_rate=3.5,
+                                          repeat=5.0),
+                                AlertRule("slow_burn", short_window=6.0,
+                                          long_window=24.0, burn_rate=3.0,
+                                          repeat=10.0)))
+
 #: fleet patch-cache-tier reference scenario, shared by the ``--cachetier``
 #: sweep, the example and the tests. Repeat-heavy hybrid-resolution
 #: traffic: each phase concentrates almost all arrivals on one end of the

@@ -245,14 +245,29 @@ class Tracer:
         self._residents: Dict[int, set] = {}   # replica rid -> request rids
         self._migrating: set = set()           # replica rids draining
         self.n_emitted = 0
+        self._event_subs: List = []            # live bus subscribers
+        self._span_subs: List = []             # closed-span subscribers
 
     # ---------------- bus plumbing ----------------
+
+    def subscribe(self, on_event=None, on_span=None) -> None:
+        """Register live callbacks: ``on_event(rec)`` sees **every**
+        emitted record (before the retention policy — sampling bounds the
+        stored log, not the stream), ``on_span(span)`` each finished
+        request's closed ``_Span``. The fleet monitor builds its windowed
+        timeseries from exactly this stream."""
+        if on_event is not None:
+            self._event_subs.append(on_event)
+        if on_span is not None:
+            self._span_subs.append(on_span)
 
     def _emit(self, rec: dict, rid: Optional[int] = None,
               bulk: bool = False) -> None:
         self._seq += 1
         rec["seq"] = self._seq
         self.n_emitted += 1
+        for cb in self._event_subs:
+            cb(rec)
         mode = self.cfg.mode
         if bulk:                      # batch-level (multi-request) events
             if mode == "all":
@@ -387,6 +402,8 @@ class Tracer:
         span.outcome = "completed"
         span.slo_met = t <= req.slo
         self.finished.append(span)
+        for cb in self._span_subs:
+            cb(span)
         self._residents.get(rep.rid, set()).discard(req.rid)
         self._emit({"t": t, "kind": "complete", "rid": req.rid,
                     "replica": rep.rid, "slo_met": span.slo_met,
@@ -402,6 +419,8 @@ class Tracer:
         span.outcome = "dropped"
         span.slo_met = False
         self.finished.append(span)
+        for cb in self._span_subs:
+            cb(span)
         if rep is not None:
             self._residents.get(rep.rid, set()).discard(req.rid)
         self._emit({"t": t, "kind": "drop", "rid": req.rid, "where": where,
@@ -574,6 +593,26 @@ class Tracer:
         if dropped:
             self._emit({"t": t, "kind": "tier_abort", "owner": owner,
                         "writes_dropped": dropped})
+
+    def tier_fetch(self, t: float, key, hit: bool) -> None:
+        """One steady-state L2 fetch probe (``CacheTier.lookup``):
+        batch-level volume like ``step``, so it is retained only in
+        ``all`` mode — but the live stream still carries it, which is how
+        the monitor computes per-window tier hit rates."""
+        self._emit({"t": t, "kind": "tier_fetch", "hit": hit,
+                    "key": [list(key[0]), *key[1:]]}, bulk=True)
+
+    # ---------------- monitor loop-back ----------------
+
+    def alert(self, t: float, **fields) -> None:
+        """Burn-rate alert looped back from the fleet monitor; retained
+        in every mode (fleet-lifecycle record, like ``replica_spawn``)."""
+        self._emit({"t": t, "kind": "alert", **fields})
+
+    def anomaly(self, t: float, **fields) -> None:
+        """Changepoint detection looped back from the fleet monitor;
+        retained in every mode."""
+        self._emit({"t": t, "kind": "anomaly", **fields})
 
     def tier_prefetch(self, t: float, rep, keys: int, nbytes: int,
                       transfer: float, ready_at: float) -> None:

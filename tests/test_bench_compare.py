@@ -1,0 +1,115 @@
+"""scripts/bench_compare.py — the nightly sim-throughput regression
+gate: regime matching, drop-threshold math, grid-evolution tolerance
+(new/vanished regimes never fail), record ordering, and the CLI exit
+contract (clean pass, regression exit, seed-run pass-through)."""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location(
+        "bench_compare",
+        Path(__file__).resolve().parent.parent / "scripts/bench_compare.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _perf(total_eps, regimes):
+    return {"kind": "cluster_sweep_perf",
+            "total": {"events_per_s": total_eps},
+            "regimes": [{"qps": q, "policy": p, "n_replicas": n,
+                         "events_per_s": eps}
+                        for q, p, n, eps in regimes]}
+
+
+def test_compare_flags_total_and_regime_drops():
+    bc = _load()
+    prev = _perf(1000.0, [(24.0, "round_robin", 3, 500.0),
+                          (48.0, "least_slack", 3, 500.0)])
+    cur = _perf(700.0, [(24.0, "round_robin", 3, 500.0),
+                        (48.0, "least_slack", 3, 200.0)])
+    regs = bc.compare(prev, cur, threshold=0.2)
+    names = [r[0] for r in regs]
+    assert "total" in names
+    assert "qps=48.0 least_slack n=3" in names
+    assert "qps=24.0 round_robin n=3" not in names
+    drop = dict((r[0], r[3]) for r in regs)
+    assert drop["total"] == pytest.approx(0.3)
+    assert drop["qps=48.0 least_slack n=3"] == pytest.approx(0.6)
+
+
+def test_compare_within_threshold_passes():
+    bc = _load()
+    prev = _perf(1000.0, [(24.0, "round_robin", 3, 500.0)])
+    cur = _perf(850.0, [(24.0, "round_robin", 3, 420.0)])
+    assert bc.compare(prev, cur, threshold=0.2) == []
+    # improvements obviously never regress
+    assert bc.compare(prev, _perf(2000.0, [(24.0, "round_robin", 3,
+                                            900.0)])) == []
+
+
+def test_compare_tolerates_grid_evolution():
+    bc = _load()
+    prev = _perf(1000.0, [(24.0, "round_robin", 3, 500.0),
+                          (96.0, "least_slack", 3, 400.0)])   # vanished
+    cur = _perf(900.0, [(24.0, "round_robin", 3, 480.0),
+                        (48.0, "cache_affinity", 4, 100.0)])  # new
+    assert bc.compare(prev, cur, threshold=0.2) == []
+    # zero / missing prior throughput: no baseline, never a regression
+    prev_z = _perf(0.0, [(24.0, "round_robin", 3, 0.0)])
+    assert bc.compare(prev_z, _perf(1.0, [(24.0, "round_robin", 3,
+                                           1.0)])) == []
+
+
+def test_latest_records_ordering(tmp_path):
+    bc = _load()
+    for name in ("BENCH_2026-08-03.json", "BENCH_2026-08-01.json",
+                 "BENCH_2026-08-02.json"):
+        (tmp_path / name).write_text("{}")
+    paths = bc.latest_records(tmp_path)
+    assert [p.name for p in paths] == ["BENCH_2026-08-02.json",
+                                       "BENCH_2026-08-03.json"]
+    assert len(bc.latest_records(tmp_path / "nowhere")) == 0
+
+
+def _run_cli(bc, tmp_path, argv, monkeypatch):
+    monkeypatch.setattr(sys, "argv", ["bench_compare.py", str(tmp_path),
+                                      *argv])
+    bc.main()
+
+
+def test_cli_seed_run_passes(tmp_path, monkeypatch, capsys):
+    bc = _load()
+    (tmp_path / "BENCH_2026-08-07.json").write_text(
+        json.dumps(_perf(1000.0, [])))
+    _run_cli(bc, tmp_path, [], monkeypatch)
+    assert "nothing to compare yet" in capsys.readouterr().out
+
+
+def test_cli_regression_exits_nonzero(tmp_path, monkeypatch, capsys):
+    bc = _load()
+    (tmp_path / "BENCH_2026-08-07.json").write_text(
+        json.dumps(_perf(1000.0, [(24.0, "round_robin", 3, 500.0)])))
+    (tmp_path / "BENCH_2026-08-08.json").write_text(
+        json.dumps(_perf(400.0, [(24.0, "round_robin", 3, 500.0)])))
+    with pytest.raises(SystemExit):
+        _run_cli(bc, tmp_path, [], monkeypatch)
+    assert "REGRESSION total" in capsys.readouterr().out
+    # a looser threshold lets the same pair pass
+    _run_cli(bc, tmp_path, ["--threshold", "0.7"], monkeypatch)
+    assert "no regressions" in capsys.readouterr().out
+
+
+def test_cli_rejects_wrong_record_kind(tmp_path, monkeypatch):
+    bc = _load()
+    (tmp_path / "BENCH_2026-08-07.json").write_text(
+        json.dumps(_perf(1000.0, [])))
+    (tmp_path / "BENCH_2026-08-08.json").write_text(
+        json.dumps({"kind": "something_else"}))
+    with pytest.raises(SystemExit, match="cluster_sweep_perf"):
+        _run_cli(bc, tmp_path, [], monkeypatch)

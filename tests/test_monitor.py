@@ -1,0 +1,484 @@
+"""Fleet health monitor — windowed streaming aggregation over the trace
+bus, SLO error-budget burn-rate alerting (full-long-window arming,
+refire cadence, min-done guard, dominant-component agreement with the
+post-hoc span attribution), EWMA+CUSUM changepoint detection, incident
+precision/recall accounting, the Prometheus / JSONL / dashboard
+exporters, config validation, and the zero-cost guarantee when
+monitoring is off (headline metrics bit-identical, no monitor-only keys
+leaking into the summary)."""
+import importlib.util
+import io
+import json
+import random
+from pathlib import Path
+
+import pytest
+
+from repro.cluster import (Cluster, ClusterConfig, FailureConfig,
+                           MonitorConfig, NULL_TRACER, TraceConfig, Tracer,
+                           WindowedHistogram, cluster_workload, default_rules,
+                           sim_engine_factory)
+from repro.cluster.monitor import (AlertRule, FleetMonitor, bin_of,
+                                   dominant_component, dominant_over_spans)
+from repro.cluster.simtools import (CRASH_FAULTS, DEFAULT_RES,
+                                    HEALTHY_BASELINE, monitor_config)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    st = None
+
+
+# ---------------- shared builders ----------------
+
+def _crash_cluster(monitor=monitor_config(), trace=None, seed=2):
+    sc = CRASH_FAULTS
+    cfg = ClusterConfig(
+        n_replicas=sc["n_replicas"], policy="join_shortest_queue",
+        failures=FailureConfig(mtbf=sc["mtbf"], recover=True,
+                               cold_start=sc["cold_start"], seed=seed),
+        trace=trace, monitor=monitor, record_timeseries=False)
+    cl = Cluster(sim_engine_factory(DEFAULT_RES, steps=sc["steps"]),
+                 DEFAULT_RES, cfg)
+    m = cl.run(cluster_workload(qps=sc["qps"], duration=sc["duration"],
+                                steps=sc["steps"], slo_scale=sc["slo_scale"],
+                                seed=seed))
+    return cl, m
+
+
+def _baseline_cluster(seed=0):
+    sc = HEALTHY_BASELINE
+    cfg = ClusterConfig(n_replicas=sc["n_replicas"],
+                        policy="join_shortest_queue",
+                        monitor=monitor_config(), record_timeseries=False)
+    cl = Cluster(sim_engine_factory(DEFAULT_RES, steps=sc["steps"]),
+                 DEFAULT_RES, cfg)
+    m = cl.run(cluster_workload(qps=sc["qps"], duration=sc["duration"],
+                                steps=sc["steps"], slo_scale=sc["slo_scale"],
+                                seed=seed))
+    return cl, m
+
+
+def _synthetic_monitor(miss_rate, seconds=40, per_bin=10, cfg=None):
+    """Drive a monitor with a fabricated completion stream: ``per_bin``
+    finishes per 1 s bin, a fixed fraction missing their SLO."""
+    mon = FleetMonitor(cfg or MonitorConfig(), Tracer(TraceConfig()))
+    n_miss = round(per_bin * miss_rate)
+    for b in range(seconds):
+        for i in range(per_bin):
+            mon._on_event({"t": b + 0.5, "kind": "complete",
+                           "latency": 1.0, "slo_met": i >= n_miss})
+        mon.pulse(float(b + 1))
+    mon.finalize(float(seconds))
+    return mon
+
+
+# ---------------- config validation ----------------
+
+def test_monitor_config_validation():
+    for bad in (dict(window=0.0), dict(slo_target=0.0),
+                dict(slo_target=1.0), dict(min_done=0),
+                dict(ewma_alpha=0.0), dict(ewma_alpha=1.5),
+                dict(cusum_k=-0.1), dict(cusum_h=0.0),
+                dict(min_windows=0), dict(min_std=0.0),
+                dict(rules=(AlertRule("dup"), AlertRule("dup")))):
+        with pytest.raises(ValueError):
+            MonitorConfig(**bad)
+
+
+def test_alert_rule_validation():
+    with pytest.raises(ValueError):
+        AlertRule("r", short_window=0.0)
+    with pytest.raises(ValueError):
+        AlertRule("r", short_window=5.0, long_window=3.0)
+    with pytest.raises(ValueError):
+        AlertRule("r", burn_rate=0.0)
+    with pytest.raises(ValueError):
+        AlertRule("r", repeat=0.0)
+
+
+def test_default_rules_installed_when_empty():
+    cfg = MonitorConfig()
+    assert cfg.rules == default_rules()
+    assert {r.name for r in cfg.rules} == {"fast_burn", "slow_burn"}
+
+
+def test_monitor_requires_enabled_tracer():
+    with pytest.raises(TypeError):
+        FleetMonitor(MonitorConfig(), NULL_TRACER)
+
+
+# ---------------- windowed histogram ----------------
+
+def test_histogram_le_bucket_semantics():
+    h = WindowedHistogram((1.0, 2.0, 4.0))
+    for x in (0.5, 1.0, 1.5, 2.0, 4.0, 9.0):
+        h.observe(x)
+    # values equal to a bound land in that bound's bucket (`le`), values
+    # past the last bound in the overflow bucket
+    assert h.counts == [2, 2, 1, 1]
+    assert h.n == 6 and h.sum == pytest.approx(18.0)
+    assert h.quantile(0.5) == 2.0
+    assert h.quantile(1.0) == 4.0      # inf bucket reports largest bound
+
+
+def test_histogram_merge_and_errors():
+    a, b = WindowedHistogram((1.0, 2.0)), WindowedHistogram((1.0, 2.0))
+    a.observe(0.5)
+    b.observe(1.5)
+    b.observe(5.0)
+    m = a.merge(b)
+    assert m.counts == [1, 1, 1] and m.n == 3
+    assert a.counts == [1, 0, 0]       # pure merge: operands untouched
+    assert m == b.merge(a)             # commutative
+    with pytest.raises(ValueError):
+        a.merge(WindowedHistogram((1.0, 3.0)))
+    with pytest.raises(ValueError):
+        WindowedHistogram((2.0, 1.0))
+    with pytest.raises(ValueError):
+        WindowedHistogram((1.0, 1.0))
+
+
+def _hist_from(vals, bounds=(0.5, 1.0, 2.0, 4.0)):
+    h = WindowedHistogram(bounds)
+    for v in vals:
+        h.observe(v)
+    return h
+
+
+def _check_merge_properties(chunks):
+    """Merge must be associative and order-independent: any fold order
+    over per-window histograms yields the same aggregate."""
+    hs = [_hist_from(c) for c in chunks]
+    ltr = hs[0]
+    for h in hs[1:]:
+        ltr = ltr.merge(h)
+    rtl = hs[-1]
+    for h in reversed(hs[:-1]):
+        rtl = h.merge(rtl)
+    shuffled = hs[:]
+    random.Random(0).shuffle(shuffled)
+    mixed = shuffled[0]
+    for h in shuffled[1:]:
+        mixed = mixed.merge(h)
+    flat = _hist_from([v for c in chunks for v in c])
+    assert ltr == rtl == mixed == flat
+
+
+def test_histogram_merge_property():
+    """Hypothesis when available, deterministic seeded chunks otherwise —
+    both drive the same associativity/order-independence check."""
+    if st is not None:
+        @settings(max_examples=50, deadline=None)
+        @given(st.lists(st.lists(st.floats(0.0, 10.0), max_size=8),
+                        min_size=2, max_size=5))
+        def prop(chunks):
+            _check_merge_properties(chunks)
+
+        prop()
+    else:
+        rng = random.Random(7)
+        for _ in range(25):
+            chunks = [[rng.uniform(0.0, 10.0)
+                       for _ in range(rng.randrange(8))]
+                      for _ in range(rng.randrange(2, 6))]
+            _check_merge_properties(chunks)
+
+
+# ---------------- pure helpers ----------------
+
+def test_bin_of_and_dominant_component():
+    assert bin_of(0.0, 1.0) == 0
+    assert bin_of(0.999, 1.0) == 0
+    assert bin_of(1.0, 1.0) == 1
+    assert bin_of(7.5, 2.5) == 3
+    from collections import Counter
+    assert dominant_component(Counter()) == "none"
+    assert dominant_component(Counter(replica_wait=3, denoise=1)) \
+        == "replica_wait"
+    # ties break by COMPONENTS declaration order, deterministically
+    assert dominant_component(Counter(denoise=2, replica_wait=2)) \
+        == "replica_wait"
+
+
+# ---------------- burn-rate alerting (synthetic stream) ----------------
+
+def test_burn_rate_fires_on_sustained_misses():
+    mon = _synthetic_monitor(miss_rate=0.5)
+    assert mon.alerts
+    fast = [a for a in mon.alerts if a["rule"] == "fast_burn"]
+    assert fast and fast[0]["transition"] is True
+    # armed only once the 12 s long window has fully elapsed
+    assert fast[0]["t"] == 12.0
+    assert all(a["burn_short"] >= a["threshold"]
+               and a["burn_long"] >= a["threshold"] for a in fast)
+    # refire cadence: active the whole run, one page per repeat interval
+    assert [a["t"] for a in fast] == [12.0, 17.0, 22.0, 27.0, 32.0, 37.0]
+    assert all(a["transition"] is False for a in fast[1:])
+
+
+def test_burn_rate_silent_inside_budget():
+    assert _synthetic_monitor(miss_rate=0.05).alerts == []
+
+
+def test_burn_rate_slow_rule_only_on_moderate_burn():
+    # 25% misses = 2.5x budget: below the fast rule's 4x, above slow's 2x
+    mon = _synthetic_monitor(miss_rate=0.25)
+    rules = {a["rule"] for a in mon.alerts}
+    assert rules == {"slow_burn"}
+    assert min(a["t"] for a in mon.alerts) == 24.0   # slow long window
+
+
+def test_burn_rate_min_done_guard():
+    # heavy miss fraction but almost no traffic: never enough finished
+    # requests in the long window to page
+    mon = _synthetic_monitor(miss_rate=1.0, per_bin=1,
+                             cfg=MonitorConfig(min_done=1000))
+    assert mon.alerts == []
+
+
+def test_monitor_ignores_post_finalize_events():
+    mon = _synthetic_monitor(miss_rate=0.0, seconds=5)
+    before = dict(mon._totals)
+    mon._on_event({"t": 99.0, "kind": "complete", "latency": 1.0,
+                   "slo_met": False})
+    assert mon._totals == before
+
+
+# ---------------- changepoint detection ----------------
+
+def test_changepoint_detects_regime_shift():
+    cfg = MonitorConfig(signals=("queue_depth",))
+    mon = FleetMonitor(cfg, Tracer(TraceConfig()))
+    for b in range(30):
+        depth = 2.0 + 0.1 * (b % 3) if b < 20 else 40.0
+        mon.pulse(float(b + 1), queue_depth=depth, replicas=4.0)
+    mon.finalize(30.0)
+    ups = [a for a in mon.anomalies if a["signal"] == "queue_depth"
+           and a["direction"] == "up"]
+    assert ups
+    assert 20.0 <= ups[0]["t"] <= 25.0
+    assert mon.changepoints["queue_depth"] == len(
+        [a for a in mon.anomalies if a["signal"] == "queue_depth"])
+    assert mon.summary()["changepoints"]["queue_depth"] >= 1
+
+
+def test_changepoint_warmup_never_fires():
+    cfg = MonitorConfig(signals=("queue_depth",), min_windows=50)
+    mon = FleetMonitor(cfg, Tracer(TraceConfig()))
+    for b in range(30):
+        mon.pulse(float(b + 1), queue_depth=0.0 if b < 15 else 100.0,
+                  replicas=1.0)
+    mon.finalize(30.0)
+    assert mon.anomalies == []
+
+
+def test_anomaly_events_retained_in_violations_mode():
+    """Monitor output loops back onto the bus with rid=None, so the
+    health events survive every retention mode."""
+    tr = Tracer(TraceConfig(mode="violations"))
+    cfg = MonitorConfig(signals=("queue_depth",))
+    mon = FleetMonitor(cfg, tr)
+    for b in range(30):
+        mon.pulse(float(b + 1), queue_depth=1.0 if b < 20 else 50.0,
+                  replicas=1.0)
+    mon.finalize(30.0)
+    assert mon.anomalies
+    kinds = {e["kind"] for e in tr.events()}
+    assert "anomaly" in kinds
+
+
+# ---------------- incident accounting ----------------
+
+def test_incident_precision_recall():
+    mon = FleetMonitor(MonitorConfig(incident_horizon=2.0),
+                       Tracer(TraceConfig()))
+    mon._on_event({"t": 5.0, "kind": "replica_crash", "replica": 0})
+    mon._on_event({"t": 6.0, "kind": "replica_crash", "replica": 1})
+    mon._on_event({"t": 20.0, "kind": "replica_crash", "replica": 2})
+    assert mon.incident_windows() == [(5.0, 8.0), (20.0, 22.0)]
+    mon.alerts = [{"t": 6.5, "rule": "fast_burn", "dominant": "none"},
+                  {"t": 15.0, "rule": "fast_burn", "dominant": "none"}]
+    pr = mon._precision_recall()
+    assert pr["incidents"] == 2
+    assert pr["alerts_in_incident"] == 1
+    assert pr["precision"] == 0.5
+    assert pr["recall"] == 0.5          # the t=20 incident never paged
+
+
+def test_degraded_zone_outage_is_not_an_incident():
+    mon = FleetMonitor(MonitorConfig(), Tracer(TraceConfig()))
+    mon._on_event({"t": 3.0, "kind": "zone_outage", "zone": 1,
+                   "down_until": 9.0, "degraded": True})
+    assert mon.incident_windows() == []
+    mon._on_event({"t": 12.0, "kind": "zone_outage", "zone": 2,
+                   "down_until": 15.0, "degraded": None})
+    assert mon.incident_windows() == [(12.0, 15.0 + 8.0)]
+
+
+# ---------------- end-to-end on the crash regime ----------------
+
+def test_monitor_end_to_end_crash_regime():
+    cl, m = _crash_cluster()
+    mon = m.monitor
+    assert mon["alerts"] > 0 and mon["incidents"] > 0
+    assert mon["recall"] == 1.0
+    assert mon["alerts_by_rule"]
+    s = m.summary()
+    assert s["monitor"]["alerts"] == mon["alerts"]
+    # streamed dominant must equal the post-hoc span recompute over
+    # exactly the alert's evaluation window
+    for a in cl.monitor.alerts:
+        assert a["dominant"] == dominant_over_spans(
+            cl.tracer.finished, a["win"][0], a["win"][1],
+            cl.monitor.cfg.window)
+
+
+def test_monitor_silent_on_healthy_baseline():
+    cl, m = _baseline_cluster()
+    assert m.monitor["alerts"] == 0
+    assert m.monitor["incidents"] == 0
+    assert m.monitor["precision"] == 1.0 and m.monitor["recall"] == 1.0
+
+
+def _headline(m):
+    return {"slo_satisfaction": m.slo_satisfaction, "goodput": m.goodput,
+            "completed": m.completed, "dropped": m.dropped,
+            "latencies": sorted(m.latencies)}
+
+
+def test_monitor_off_bit_identical():
+    """Monitoring must be pure observation: with the monitor off the
+    headline metrics and the whole summary (minus the monitor section)
+    are bit-identical."""
+    _, m_off = _crash_cluster(monitor=None)
+    cl_on, m_on = _crash_cluster()
+    assert _headline(m_off) == _headline(m_on)
+    s_on, s_off = m_on.summary(), m_off.summary()
+    assert s_on.pop("monitor")["alerts"] > 0
+    assert "monitor" not in s_off
+    assert s_on == s_off
+    # monitor off means no monitor object at all — one is-None check per
+    # loop iteration is the entire cost
+    assert cl_on.monitor is not None
+    cl_off, _ = _crash_cluster(monitor=None)
+    assert cl_off.monitor is None
+
+
+def test_monitor_only_run_has_no_trace_sections():
+    """cfg.monitor alone spins up an internal tracer for the bus, but the
+    user did not ask for tracing: no attribution / predictor /
+    trace_events sections may appear."""
+    _, m = _crash_cluster()
+    s = m.summary()
+    assert "attribution" not in s and "predictor" not in s
+    assert "trace_events" not in s
+    _, m_tr = _crash_cluster(trace=TraceConfig())
+    s_tr = m_tr.summary()
+    assert "attribution" in s_tr and "monitor" in s_tr
+
+
+# ---------------- exporters ----------------
+
+def _parse_prometheus(text):
+    """Minimal text-exposition parser: {(name, labels): value} plus the
+    declared TYPE per metric family; raises on duplicate series."""
+    series, types = {}, {}
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, typ = line.split(" ", 3)
+            types[name] = typ
+            continue
+        if line.startswith("#"):
+            continue
+        key, val = line.rsplit(" ", 1)
+        if key in series:
+            raise ValueError(f"duplicate series: {key}")
+        series[key] = float(val)
+    return series, types
+
+
+def test_prometheus_snapshot_parses():
+    cl, m = _crash_cluster()
+    text = cl.monitor.prometheus_text()
+    series, types = _parse_prometheus(text)
+    assert series["fleet_completed_total"] == m.completed
+    assert series["fleet_replica_crashes_total"] == m.replicas_failed
+    assert series[
+        'fleet_alerts_total{rule="fast_burn"}'] + series[
+        'fleet_alerts_total{rule="slow_burn"}'] == m.monitor["alerts"]
+    assert types["fleet_queue_depth"] == "gauge"
+    assert types["fleet_request_latency_seconds"] == "histogram"
+    # histogram buckets are cumulative and +Inf equals the total count
+    buckets = [(k, v) for k, v in series.items()
+               if k.startswith("fleet_request_latency_seconds_bucket")]
+    vals = [v for _, v in buckets]
+    assert vals == sorted(vals)
+    assert series['fleet_request_latency_seconds_bucket{le="+Inf"}'] \
+        == series["fleet_request_latency_seconds_count"] == m.completed
+    # every series family carries a TYPE declaration
+    for key in series:
+        fam = key.split("{", 1)[0]
+        fam = fam.removesuffix("_bucket").removesuffix("_sum") \
+            .removesuffix("_count") \
+            if fam.startswith("fleet_request_latency_seconds") else fam
+        assert fam in types, fam
+
+
+def _load_script(name):
+    spec = importlib.util.spec_from_file_location(
+        name, Path(__file__).resolve().parent.parent / f"scripts/{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_jsonl_log_and_dashboard_roundtrip(tmp_path):
+    cl, m = _crash_cluster()
+    path = tmp_path / "monitor.jsonl"
+    n = cl.monitor.write_jsonl(path)
+    assert n == sum(1 for _ in open(path))
+    dash = _load_script("fleet_dashboard")
+    meta, windows, alerts, anomalies = dash.load_log(path)
+    assert meta["slo_target"] == cl.monitor.cfg.slo_target
+    assert meta["alerts"] == len(alerts) == m.monitor["alerts"]
+    assert meta["anomalies"] == len(anomalies)
+    assert len(windows) == meta["bins"]
+    # per-window counters must re-sum to the fleet totals
+    done = sum(w["counters"].get("completed", 0) for w in windows)
+    assert done == m.completed
+    rows = dash.window_rows(windows, alerts, anomalies, meta["slo_target"])
+    assert sum(len(r["alerts"]) for r in rows) == len(alerts)
+    out = io.StringIO()
+    dash.render(meta, rows, alerts, anomalies, out=out)
+    text = out.getvalue()
+    assert "ALERT" in text and "alerts by rule" in text
+
+
+def test_window_records_match_bin_count():
+    mon = _synthetic_monitor(miss_rate=0.1, seconds=10)
+    recs = mon.window_records()
+    # finalize(10.0) also closes the bin containing t=10, so the log ends
+    # with one trailing empty window
+    assert [r["bin"] for r in recs] == list(range(11))
+    assert all(r["t1"] - r["t0"] == pytest.approx(1.0) for r in recs)
+    assert all(r["counters"]["completed"] == 10 for r in recs[:10])
+    assert recs[10]["counters"].get("completed", 0) == 0
+
+
+# ---------------- gauges carry forward ----------------
+
+def test_gauge_carry_forward_into_quiet_bins():
+    mon = FleetMonitor(MonitorConfig(), Tracer(TraceConfig()))
+    mon.pulse(0.5, queue_depth=7.0, replicas=3.0)
+    # no pulse lands in bins 1..3; the close path reuses the last sample
+    mon.pulse(4.5, queue_depth=9.0, replicas=2.0)
+    mon.finalize(5.0)
+    recs = {r["bin"]: r for r in mon.window_records()}
+    assert recs[0]["queue_depth"] == 7.0 and recs[0]["replicas"] == 3.0
+    for b in (1, 2, 3):
+        assert recs[b]["queue_depth"] == 7.0
+    assert recs[4]["queue_depth"] == 9.0 and recs[4]["replicas"] == 2.0

@@ -502,3 +502,76 @@ def test_trace_config_validation():
         TraceConfig(sample_rate=0.0)
     t = Tracer(TraceConfig(mode="sample", sample_rate=1.0))
     assert t.cfg.sample_rate == 1.0
+
+
+# ---------------- exporter edge cases ----------------
+
+def test_export_zero_event_run(tmp_path):
+    """A traced cluster that never saw a request still exports a valid,
+    self-describing trace: one meta header, no events, no spans — and
+    the offline report loads it without blowing up."""
+    cl = _build(trace=TraceConfig())
+    cl.run([])
+    path = tmp_path / "empty.jsonl"
+    n = cl.tracer.write_jsonl(path)
+    # meta header + the initial replica_spawn fleet events, nothing else
+    assert n == 1 + cl.cfg.n_replicas
+    chrome = tmp_path / "empty_chrome.json"
+    assert cl.tracer.write_chrome_trace(chrome) >= 0
+    json.loads(chrome.read_text())             # still valid JSON
+    tr = _load_trace_report()
+    meta, events, spans = tr.load_records(path)
+    assert meta["spans"] == 0 and spans == []
+    assert all(e["kind"] == "replica_spawn" for e in events)
+    att = tr.attribution_from_spans(spans)
+    assert att["requests"] == att["missed"] == att["dropped"] == 0
+    assert att["dominant"] == {}
+    assert tr.predictor_stats(spans) == {"n": 0}
+
+
+def test_violations_mode_without_violations(tmp_path):
+    """violations retention on a run where every request makes its SLO:
+    nothing per-request survives to disk (no events, no spans — there is
+    nothing to debug), the export stays valid, and the live tracer still
+    attributes over every request in memory."""
+    cl = _build(trace=TraceConfig(mode="violations"))
+    m = cl.run(cluster_workload(qps=6.0, duration=8.0, slo_scale=50.0,
+                                seed=11))
+    assert m.completed > 0 and m.dropped == 0
+    assert m.slo_satisfaction == 1.0
+    # retained bus events are fleet-level only (no rid)
+    assert all(e.get("rid") is None for e in cl.tracer.events())
+    # in memory: spans for every request, attribution finds no violations
+    assert len(cl.tracer.finished) == m.completed
+    live = cl.tracer.attribution_summary()
+    assert live["missed"] == live["dropped"] == 0
+    assert live["completed_ok"] == m.completed
+    path = tmp_path / "clean.jsonl"
+    cl.tracer.write_jsonl(path)
+    tr = _load_trace_report()
+    meta, events, spans = tr.load_records(path)
+    assert meta["spans"] == 0 == len(spans)    # only violators export
+    assert all(e.get("rid") is None for e in events)
+    att = tr.attribution_from_spans(spans)
+    assert att["requests"] == 0
+    assert att["violation_time_by_component"] == {}
+
+
+def test_attribution_uses_header_component_list(tmp_path):
+    """The offline report keys the violation-time table off the trace's
+    own ``trace_meta`` component list, so a trace written by a different
+    code version reports under *its* schema; only header-less traces
+    fall back to the live import."""
+    cl, _ = _run("crash")
+    path = tmp_path / "trace.jsonl"
+    cl.tracer.write_jsonl(path)
+    tr = _load_trace_report()
+    meta, _, spans = tr.load_records(path)
+    from repro.cluster.trace import COMPONENTS
+    assert meta["components"] == list(COMPONENTS)
+    # a future tracer with an extra component: the table gains the key
+    future = meta["components"] + ["quantum_wait"]
+    att = tr.attribution_from_spans(spans, future)
+    assert att == tr.attribution_from_spans(spans)  # zero-time keys drop
+    # fallback path (no header) matches the live list exactly
+    assert tr._live_components() == list(COMPONENTS)
